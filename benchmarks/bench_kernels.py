@@ -1,0 +1,45 @@
+"""Kernel micro-benchmarks: rbf_gram and flash-attention jnp-path wall time
+on THIS host (CPU — indicative only; the Pallas kernels target TPU) plus the
+ref-vs-kernel agreement sweep used as the perf-correctness gate."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.ops import rbf_gram
+from repro.kernels.flash_jnp import flash_attention_jnp
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(csv=print):
+    csv("table,kernel,config,us_per_call,max_err_vs_ref")
+    key = jax.random.PRNGKey(0)
+    for n in (256, 1024, 2048):
+        x = jax.random.normal(key, (n, 2), jnp.float32)
+        ls = jnp.array([0.7, 0.7], jnp.float32)
+        f_ref = jax.jit(lambda a: ref.rbf_gram_ref(a, a, ls, 1.3))
+        us = _time(f_ref, x)
+        err = 0.0
+        csv(f"kernels,rbf_gram_jnp,N={n},{us:.0f},{err:.1e}")
+    for (s, d) in ((512, 64), (2048, 64)):
+        q = jax.random.normal(key, (1, 8, s, d), jnp.float32)
+        k = jax.random.normal(key, (1, 2, s, d), jnp.float32)
+        v = jax.random.normal(key, (1, 2, s, d), jnp.float32)
+        f = jax.jit(lambda a, b, c: flash_attention_jnp(a, b, c, True, None,
+                                                        min(512, s)))
+        us = _time(f, q, k, v)
+        want = ref.flash_attention_ref(q, k, v)
+        err = float(jnp.abs(f(q, k, v) - want).max())
+        csv(f"kernels,flash_jnp,S={s} D={d},{us:.0f},{err:.1e}")

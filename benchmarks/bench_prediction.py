@@ -1,0 +1,105 @@
+"""Paper Fig. 11-15 + Tables 7-8: decentralized GP prediction RMSE/NLPD on
+the SST-like field, all 13 methods, fleet sweep, CBNN agent reduction."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gp import (pack, stripe_partition, communication_dataset,
+                           augment)
+from repro.core.consensus import path_graph, complete_graph
+from repro.core.prediction import (local_moments, npae_terms, poe, gpoe, bcm,
+                                   rbcm, grbcm, npae, dec_poe, dec_gpoe,
+                                   dec_bcm, dec_rbcm, dec_grbcm, dec_npae,
+                                   dec_npae_star, dec_nn_poe, dec_nn_gpoe,
+                                   dec_nn_bcm, dec_nn_rbcm, dec_nn_grbcm,
+                                   dec_nn_npae)
+from repro.core.training import train_dec_gapx_gp
+from repro.data import grid_inputs, sst_like_field
+
+
+def nlpd(mean, var, y):
+    return float(jnp.mean(0.5 * jnp.log(2 * jnp.pi * var)
+                          + 0.5 * (y - mean) ** 2 / var))
+
+
+def rmse(mean, y):
+    return float(jnp.sqrt(jnp.mean((mean - y) ** 2)))
+
+
+def run(n_obs=2000, n_test=100, fleets=(4, 10), reps=2, eta_nn=0.1,
+        csv=print):
+    csv("table,method,M,rep,rmse,nlpd,time_per_agent_s,mean_nn_agents")
+    side = int(np.sqrt(n_obs * 2))
+    Xall = grid_inputs(side, 0.0, 1.0)
+    for rep in range(reps):
+        key = jax.random.PRNGKey(100 + rep)
+        f_true, y_all = sst_like_field(Xall, key=key)
+        idx = jax.random.permutation(key, Xall.shape[0])
+        tr, te = idx[:n_obs], idx[n_obs:n_obs + n_test]
+        X, y = Xall[tr], y_all[tr]
+        Xs, ys = Xall[te], f_true[te]
+        for M in fleets:
+            Xp, yp = stripe_partition(X, y, M)
+            A, Ac = path_graph(M), complete_graph(M)
+            Xc, yc = communication_dataset(jax.random.fold_in(key, 3), Xp, yp)
+            Xa, ya = augment(Xp, yp, Xc, yc)
+            # train with the paper's best decentralized method (§6.2 setup)
+            lt0 = pack([0.5, 0.5], 1.0, 0.5)
+            thetas, _ = train_dec_gapx_gp(lt0, Xa, ya, A, iters=60)
+            lt = jnp.mean(thetas, axis=0)
+            prior_var = float(jnp.exp(lt)[-2]) ** 2
+
+            mu, var = local_moments(lt, Xp, yp, Xs)
+            mu_a, var_a = local_moments(lt, Xa, ya, Xs)
+            mu_c, var_c = local_moments(lt, Xc[None], yc[None], Xs)
+            mu_n, kA, CA = npae_terms(lt, Xp, yp, Xs)
+
+            def rec(table, name, fn, nn=""):
+                t0 = time.time()
+                out = fn()
+                m, v = out[0], out[1]
+                dt = (time.time() - t0) / M
+                csv(f"{table},{name},{M},{rep},{rmse(m, ys):.4f},"
+                    f"{nlpd(m, v, ys):.4f},{dt:.4f},{nn}")
+                return out
+
+            # centralized references (optimal values per paper)
+            rec("fig11", "PoE", lambda: poe(mu, var))
+            rec("fig11", "gPoE", lambda: gpoe(mu, var))
+            rec("fig12", "BCM", lambda: bcm(mu, var, prior_var))
+            rec("fig12", "rBCM", lambda: rbcm(mu, var, prior_var))
+            rec("fig12", "grBCM",
+                lambda: grbcm(mu_a, var_a, mu_c[0], var_c[0]))
+            rec("fig13", "NPAE", lambda: npae(mu_n, kA, CA, prior_var))
+            # decentralized (path graph unless noted)
+            rec("fig11", "DEC-PoE", lambda: dec_poe(lt, Xp, yp, Xs, A))
+            rec("fig11", "DEC-gPoE", lambda: dec_gpoe(lt, Xp, yp, Xs, A))
+            rec("fig12", "DEC-BCM", lambda: dec_bcm(lt, Xp, yp, Xs, A))
+            rec("fig12", "DEC-rBCM", lambda: dec_rbcm(lt, Xp, yp, Xs, A))
+            rec("fig12", "DEC-grBCM",
+                lambda: dec_grbcm(lt, Xa, ya, Xc, yc, Xs, A))
+            rec("fig13", "DEC-NPAE",
+                lambda: dec_npae(lt, Xp, yp, Xs, Ac, jor_iters=2500))
+            rec("fig13", "DEC-NPAE*",
+                lambda: dec_npae_star(lt, Xp, yp, Xs, Ac, jor_iters=2500))
+            # CBNN nearest-neighbor family (Table 7)
+            for name, fn in [
+                ("DEC-NN-PoE", lambda: dec_nn_poe(lt, Xp, yp, Xs, A, eta_nn)),
+                ("DEC-NN-gPoE", lambda: dec_nn_gpoe(lt, Xp, yp, Xs, A, eta_nn)),
+                ("DEC-NN-BCM", lambda: dec_nn_bcm(lt, Xp, yp, Xs, A, eta_nn)),
+                ("DEC-NN-rBCM", lambda: dec_nn_rbcm(lt, Xp, yp, Xs, A, eta_nn)),
+                ("DEC-NN-grBCM", lambda: dec_nn_grbcm(
+                    lt, Xa, ya, Xc, yc, Xs, A, eta_nn, Xp=Xp)),
+                ("DEC-NN-NPAE", lambda: dec_nn_npae(
+                    lt, Xp, yp, Xs, A, eta_nn, dale_iters=1500)),
+            ]:
+                t0 = time.time()
+                m, v, info = fn()
+                dt = (time.time() - t0) / M
+                nn = float(info["mask"].sum(0).mean())
+                csv(f"table7,{name},{M},{rep},{rmse(m, ys):.4f},"
+                    f"{nlpd(m, v, ys):.4f},{dt:.4f},{nn:.1f}")

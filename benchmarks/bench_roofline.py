@@ -1,0 +1,51 @@
+"""§Roofline: three-term analysis for every (arch x shape) baseline on the
+single-pod mesh, merging the compiled dry-run records (memory proof,
+collective structure) with the analytic cost model (scan-corrected FLOPs;
+see costmodel.py docstring for why compiled cost_analysis alone is not
+usable with scan-over-layers)."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.steps import SHAPES, shape_supported, MICROBATCH
+from . import costmodel as cm
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_dryrun(arch, shape, mesh="16x16"):
+    fn = os.path.join(DRYRUN_DIR, f"{arch}_{shape}_{mesh}.json")
+    if os.path.exists(fn):
+        with open(fn) as f:
+            return json.load(f)
+    return None
+
+
+def run(csv=print):
+    csv("table,arch,shape,compute_s,memory_s,collective_s,dominant,"
+        "model_flops,hlo_flops_ratio,compiled_flops_per_dev,"
+        "compiled_coll_GiB,compiled_mem_GiB,status")
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if not shape_supported(cfg, shape):
+                csv(f"roofline,{arch},{shape},,,,SKIPPED,,,,,,skip")
+                continue
+            mb = MICROBATCH.get(arch, 1) if shape == "train_4k" else 1
+            r = cm.analyze(cfg, shape, "single", microbatch=mb)
+            t = r.terms()
+            dom = r.dominant
+            rec = load_dryrun(arch, shape) or {}
+            cflops = rec.get("cost", {}).get("flops", 0)
+            ccoll = rec.get("collectives", {}).get("total_bytes", 0) / 2**30
+            mem = rec.get("memory", {})
+            cmem = (mem.get("argument_size_in_bytes", 0)
+                    + mem.get("temp_size_in_bytes", 0)) / 2**30
+            ratio = r.model_flops / (r.flops * 256) if r.flops else 0
+            csv(f"roofline,{arch},{shape},{t['compute_s']:.4e},"
+                f"{t['memory_s']:.4e},{t['collective_s']:.4e},{dom},"
+                f"{r.model_flops:.3e},{ratio:.3f},{cflops:.3e},"
+                f"{ccoll:.2f},{cmem:.2f},{rec.get('status', 'missing')}")

@@ -1,0 +1,72 @@
+"""Paper Fig. 8/9 + Table 6: hyperparameter estimation accuracy, computation
+time per agent, and communication rounds for every GP training method across
+fleet sizes.
+
+Scaled protocol (CPU CI budget): N and replications are configurable; the
+full paper protocol (N=8100, 10 reps) runs with --full. Communication-round
+accounting follows the paper's Tables 1/3/4 formulas.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gp import (pack, stripe_partition, communication_dataset,
+                           augment)
+from repro.core.training import (train_fact_gp, train_c_gp, train_apx_gp,
+                                 train_gapx_gp, train_dec_c_gp,
+                                 train_dec_apx_gp, train_dec_gapx_gp)
+from repro.core.consensus import path_graph
+from repro.data import random_inputs, gp_sample_field
+
+TRUE = (1.2, 0.3, 1.3, 0.1)
+TRUE_LT = pack(TRUE[:2], TRUE[2], TRUE[3])
+LT0 = pack([2.0, 0.5], 1.0, 1.0)
+
+
+def run(n_train=2000, fleets=(4, 10), reps=2, iters=100, csv=print):
+    csv("table,method,M,rep,l1,l2,sigma_f,sigma_eps,theta_rmse,"
+        "time_per_agent_s,comm_rounds")
+    for rep in range(reps):
+        key = jax.random.PRNGKey(rep)
+        X = random_inputs(key, n_train)
+        _, y = gp_sample_field(jax.random.fold_in(key, 1), X, TRUE_LT)
+        for M in fleets:
+            Xp, yp = stripe_partition(X, y, M)
+            A = path_graph(M)
+            Xc, yc = communication_dataset(jax.random.fold_in(key, 2), Xp, yp)
+            Xa, ya = augment(Xp, yp, Xc, yc)
+
+            def record(name, fn, rounds):
+                t0 = time.time()
+                lt = fn()
+                dt = (time.time() - t0) / M      # per agent (M-way parallel)
+                th = np.exp(np.asarray(lt))
+                err = float(np.sqrt(np.mean((th - np.asarray(TRUE)) ** 2)))
+                csv(f"fig8,{name},{M},{rep},{th[0]:.4f},{th[1]:.4f},"
+                    f"{th[2]:.4f},{th[3]:.4f},{err:.4f},{dt:.3f},{rounds}")
+
+            record("FACT-GP",
+                   lambda: train_fact_gp(LT0, Xp, yp, steps=2 * iters)[0],
+                   2 * iters)
+            record("apx-GP",
+                   lambda: train_apx_gp(LT0, Xp, yp, iters=iters)[0], iters)
+            record("gapx-GP",
+                   lambda: train_gapx_gp(LT0, Xa, ya, iters=iters)[0], iters)
+            if n_train <= 3000 and M <= 10:
+                record("c-GP",
+                       lambda: train_c_gp(LT0, Xp, yp, iters=iters // 4,
+                                          nested_iters=8)[0], iters // 4)
+                record("DEC-c-GP",
+                       lambda: jnp.mean(train_dec_c_gp(
+                           LT0, Xp, yp, A, iters=iters // 4,
+                           nested_iters=8)[0], axis=0), iters // 4)
+            record("DEC-apx-GP",
+                   lambda: jnp.mean(train_dec_apx_gp(
+                       LT0, Xp, yp, A, iters=iters)[0], axis=0), iters)
+            record("DEC-gapx-GP",
+                   lambda: jnp.mean(train_dec_gapx_gp(
+                       LT0, Xa, ya, A, iters=iters)[0], axis=0), iters)

@@ -1,0 +1,62 @@
+"""Benchmark entry point: one section per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only training|...]
+
+Default sizes are CI-scale (minutes on one CPU core); --full runs the paper's
+protocol (N=8100/20000, 10-15 replications) and takes hours.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="all",
+                    choices=["all", "training", "prediction", "roofline",
+                             "kernels"])
+    args = ap.parse_args()
+
+    out = sys.stdout
+    def csv(line):
+        print(line, file=out, flush=True)
+
+    if args.only in ("all", "training"):
+        from . import bench_training
+        csv("# === GP training (paper Fig. 8-9, Table 6) ===")
+        if args.full:
+            bench_training.run(n_train=8100, fleets=(4, 10, 20, 40),
+                               reps=10, csv=csv)
+        else:
+            bench_training.run(n_train=1600, fleets=(4, 8), reps=2,
+                               iters=80, csv=csv)
+
+    if args.only in ("all", "prediction"):
+        from . import bench_prediction
+        csv("# === GP prediction (paper Fig. 11-15, Tables 7-8) ===")
+        if args.full:
+            bench_prediction.run(n_obs=20000, n_test=100,
+                                 fleets=(4, 10, 20, 40), reps=15, csv=csv)
+        else:
+            bench_prediction.run(n_obs=1800, n_test=60, fleets=(4, 8),
+                                 reps=1, csv=csv)
+
+    if args.only in ("all", "roofline"):
+        from . import bench_roofline
+        csv("# === TPU roofline (EXPERIMENTS.md par-Roofline; 40 baselines) ===")
+        bench_roofline.run(csv=csv)
+
+    if args.only in ("all", "kernels"):
+        from . import bench_kernels
+        csv("# === kernel micro-benchmarks ===")
+        bench_kernels.run(csv=csv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""End-to-end driver: federated LM training with the paper's technique.
+
+    PYTHONPATH=src python examples/federated_lm.py [--steps 300]
+
+Trains a ~small reduced LM for a few hundred steps two ways:
+  1. centralized baseline (Adam, gradient all-reduce semantics)
+  2. DEC-ADMM (generalized DEC-apx-GP, eq. 34): 4 agents, private data
+     shards, ring messages only — the paper's federated-learning promise
+     carried to transformer training.
+Prints the loss trajectories and the inter-agent consensus residual.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.lm_data import MarkovLMData
+from repro.models import lm
+from repro.launch.steps import make_train_step, make_federated_train_step
+from repro.optim import adam
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--agents", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params0 = lm.init_params(cfg, key)
+    n = sum(int(jnp.size(p)) for p in jax.tree.leaves(params0))
+    print(f"model: {cfg.name} ({n/1e6:.1f}M params), "
+          f"{args.steps} steps, {args.agents} agents")
+
+    # ---- centralized baseline ----
+    opt = adam(3e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    params, opt_state = params0, opt.init(params0)
+    data = MarkovLMData(cfg.vocab_size, seed=0)
+    t0 = time.time()
+    base_losses = []
+    for s in range(args.steps):
+        toks, labels = data.batch(args.batch * args.agents, args.seq)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+        params, opt_state, loss, _ = step(params, opt_state, batch)
+        base_losses.append(float(loss))
+    print(f"centralized Adam : loss {base_losses[0]:.3f} -> "
+          f"{base_losses[-1]:.3f}  ({time.time()-t0:.0f}s)")
+
+    # ---- the paper's technique ----
+    M = args.agents
+    fed = jax.jit(make_federated_train_step(cfg, n_agents=M, rho=0.05,
+                                            kappa=30.0))
+    params_st = jax.tree.map(lambda t: jnp.broadcast_to(t, (M,) + t.shape),
+                             params0)
+    duals = jax.tree.map(jnp.zeros_like, params_st)
+    datas = [MarkovLMData(cfg.vocab_size, seed=0, agent=a) for a in range(M)]
+    t0 = time.time()
+    fed_losses = []
+    for s in range(args.steps):
+        bs = []
+        for d in datas:
+            toks, labels = d.batch(args.batch, args.seq)
+            bs.append({"tokens": jnp.asarray(toks),
+                       "labels": jnp.asarray(labels)})
+        batch_st = jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+        params_st, duals, loss = fed(params_st, duals, batch_st)
+        fed_losses.append(float(loss))
+    dis = max(float(jnp.max(jnp.abs(x - jnp.mean(x, 0))))
+              for x in jax.tree.leaves(params_st))
+    print(f"DEC-ADMM (eq.34) : loss {fed_losses[0]:.3f} -> "
+          f"{fed_losses[-1]:.3f}  consensus residual {dis:.2e}  "
+          f"({time.time()-t0:.0f}s)")
+    print("\nNOTE: DEC-ADMM is a first-order proximal method (no Adam "
+          "preconditioning) — the paper's trade: slower convergence for "
+          "zero raw-data/gradient exchange (Assumption 2).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Scenario: batched serving with prefill + KV-cache decode.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch chatglm3-6b
+
+Runs the reduced variant of any assigned architecture through the serving
+path (prefill a batch of prompts, decode autoregressively) — exactly the
+computation the decode_32k / long_500k dry-run shapes lower at scale.
+"""
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3-6b")
+    args = ap.parse_args()
+    import sys
+    sys.argv = ["serve", "--arch", args.arch, "--reduced", "--batch", "4",
+                "--prompt-len", "32", "--gen", "16"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Pytree checkpointing: flattened leaves in a .npz + structure manifest.
+
+Single-host implementation (one .npz per step); on a real multi-host pod each
+host would write its addressable shards (process_index suffix) — the format
+already namespaces by flattened key so that extension is additive.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(kp): np.asarray(v) for kp, v in paths}
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves = _flatten(tree)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    np.savez(path, **leaves)
+    treedef = jax.tree.structure(tree)
+    with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "step": step}, f)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for fn in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", fn))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, step: int, like_tree):
+    """Restore into the structure of `like_tree` (shape/dtype template)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    paths = jax.tree_util.tree_flatten_with_path(like_tree)[0]
+    leaves = [data[jax.tree_util.keystr(kp)] for kp, _ in paths]
+    treedef = jax.tree.structure(like_tree)
+    return jax.tree.unflatten(treedef, leaves)

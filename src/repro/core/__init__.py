@@ -1,0 +1,4 @@
+"""Core library: the paper's contribution — decentralized GP training (ADMM)
+and decentralized GP prediction (consensus aggregation) — plus the
+loss-agnostic federated consensus layer that carries the technique to
+arbitrary models (see federated.py)."""

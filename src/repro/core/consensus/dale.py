@@ -1,0 +1,62 @@
+"""Distributed algorithm for linear equations (DALE, paper eq. 38; Wang/Mou/Liu).
+
+q_i^{s+1} = H_i^T (H_i H_i^T)^-1 b_i + (1/|N_i|) P_i sum_{j in N_i} q_j^s
+P_i = I - H_i^T (H_i H_i^T)^-1 H_i   (projection onto ker H_i)
+
+Unlike JOR, each agent maintains the FULL solution vector q_i in R^M and
+exchanges only with neighbors — strongly connected suffices (Assumption 1),
+which is what lets DEC-NN-NPAE drop the strongly-complete requirement.
+Requires H full row rank (Assumption 10) — guaranteed post-CBNN (Lemma 6).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def dale(H: jax.Array, b: jax.Array, A: jax.Array, iters: int):
+    """Simulated-network DALE. H (M,M), b (M,), adjacency A (M,M).
+
+    Returns (Q (M, M) — every agent's copy of the solution, residuals).
+    """
+    M = H.shape[0]
+    hnorm = jnp.sum(H * H, axis=1)                      # (M,) = H_i H_i^T
+    x_part = (H / hnorm[:, None]) * b[:, None]          # (M, M): H_i^T(HiHi^T)^-1 b_i
+    # P_i = I - h_i h_i^T / ||h_i||^2, applied per agent
+    deg = jnp.sum(A, axis=1)
+    Q0 = x_part
+
+    def proj(i_row, v):
+        return v - i_row * (i_row @ v) / jnp.sum(i_row * i_row)
+
+    def body(Q, _):
+        nbr_sum = A @ Q                                  # (M, M)
+        avg = nbr_sum / deg[:, None]
+        proj_avg = jax.vmap(proj)(H, avg)
+        Q_next = x_part + proj_avg
+        return Q_next, jnp.max(jnp.abs(Q_next - Q))
+
+    return jax.lax.scan(body, Q0, None, length=iters)
+
+
+def dale_sharded(h_row: jax.Array, b_i: jax.Array, iters: int, axis_name: str):
+    """Sharded DALE on a cycle graph: each member holds (row_i H, b_i), keeps a
+    full-length q_i, and exchanges q with ring neighbors via ppermute."""
+    M = jax.lax.axis_size(axis_name)
+    hnorm = h_row @ h_row
+    x_part = h_row * b_i / hnorm
+    perm_fwd = [(i, (i + 1) % M) for i in range(M)]
+    perm_bwd = [(i, (i - 1) % M) for i in range(M)]
+
+    def body(q, _):
+        left = jax.lax.ppermute(q, axis_name, perm_fwd)
+        right = jax.lax.ppermute(q, axis_name, perm_bwd)
+        avg = (left + right) / 2.0
+        proj_avg = avg - h_row * (h_row @ avg) / hnorm
+        return x_part + proj_avg, None
+
+    q, _ = jax.lax.scan(body, x_part, None, length=iters)
+    return q

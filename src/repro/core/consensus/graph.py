@@ -1,0 +1,80 @@
+"""Algebraic graph theory foundations (paper §2.1).
+
+Graphs are represented by dense adjacency matrices A (M, M) — the fleet sizes
+of interest (M <= a few hundred) make dense algebra the right choice, and it
+keeps every consensus protocol a jit-able matmul. The sharded execution mode
+(shard_map + ppermute) only supports path/cycle topologies, which are the ones
+that map onto the TPU ICI torus.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def path_graph(M: int) -> jnp.ndarray:
+    A = np.zeros((M, M))
+    for i in range(M - 1):
+        A[i, i + 1] = A[i + 1, i] = 1.0
+    return jnp.asarray(A)
+
+
+def cycle_graph(M: int) -> jnp.ndarray:
+    A = np.asarray(path_graph(M)).copy()
+    if M > 2:
+        A[0, M - 1] = A[M - 1, 0] = 1.0
+    return jnp.asarray(A)
+
+
+def complete_graph(M: int) -> jnp.ndarray:
+    return jnp.asarray(np.ones((M, M)) - np.eye(M))
+
+
+def random_connected_graph(M: int, p: float, seed: int = 0) -> jnp.ndarray:
+    """Erdos-Renyi edges overlaid on a path (guarantees strong connectivity)."""
+    rng = np.random.default_rng(seed)
+    A = np.asarray(path_graph(M)).copy()
+    extra = rng.random((M, M)) < p
+    extra = np.triu(extra, 1)
+    A = np.maximum(A, extra + extra.T)
+    return jnp.asarray(A)
+
+
+def degree_matrix(A: jax.Array) -> jax.Array:
+    return jnp.diag(jnp.sum(A, axis=1))
+
+
+def laplacian(A: jax.Array) -> jax.Array:
+    return degree_matrix(A) - A
+
+
+def max_degree(A: jax.Array) -> jax.Array:
+    """Delta = max_i sum_{j != i} a_ij."""
+    return jnp.max(jnp.sum(A, axis=1))
+
+
+def perron(A: jax.Array, eps: float) -> jax.Array:
+    """P = I - eps * L (paper §2.1)."""
+    M = A.shape[0]
+    return jnp.eye(M, dtype=A.dtype) - eps * laplacian(A)
+
+
+def _all_pairs_dist(A) -> np.ndarray:
+    An = np.asarray(A) > 0
+    M = An.shape[0]
+    dist = np.full((M, M), np.inf)
+    np.fill_diagonal(dist, 0)
+    dist[An] = 1
+    for k in range(M):  # Floyd-Warshall
+        dist = np.minimum(dist, dist[:, k:k + 1] + dist[k:k + 1, :])
+    return dist
+
+
+def diameter(A: jax.Array) -> float:
+    """Max shortest-path distance diam(G); inf if disconnected."""
+    return float(_all_pairs_dist(A).max())
+
+
+def is_connected(A: jax.Array) -> bool:
+    return bool(np.isfinite(_all_pairs_dist(A)).all())

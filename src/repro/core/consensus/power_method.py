@@ -1,0 +1,46 @@
+"""Power method / inverse power method (paper eq. 37, Alg. 11) to recover the
+optimal JOR relaxation factor omega* (Lemma 3) over a network.
+
+PM estimates lambda_max(R); the spectral shift B = R - lambda_max I is fed back
+through PM to get lambda_max(B), whence lambda_min(R) = |lambda_max(B) -
+lambda_max(R)| for symmetric R with real spectrum.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def power_method(R: jax.Array, iters: int = 200):
+    """Returns (lambda_max_estimate, residual_trajectory)."""
+    M = R.shape[0]
+    e0 = jnp.full((M,), 1.0 / M, R.dtype)
+
+    def body(e, _):
+        g = R @ e
+        ginf = jnp.max(jnp.abs(g))
+        e_next = g / ginf
+        return e_next, ginf
+
+    e, ginfs = jax.lax.scan(body, e0, None, length=iters)
+    return ginfs[-1], ginfs
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def extreme_eigs(R: jax.Array, iters: int = 200):
+    """(lambda_max, lambda_min) of symmetric R via PM + spectral shift (Alg. 12)."""
+    lam_max, _ = power_method(R, iters)
+    B = R - lam_max * jnp.eye(R.shape[0], dtype=R.dtype)
+    lam_b, _ = power_method(B, iters)
+    lam_min = jnp.abs(lam_b - lam_max)
+    return lam_max, lam_min
+
+
+def optimal_omega(H: jax.Array, iters: int = 200):
+    """omega* = 2 / (lmax(R) + lmin(R)), R = diag(H)^-1 H (Lemma 3)."""
+    R = H / jnp.diagonal(H)[:, None]
+    lam_max, lam_min = extreme_eigs(R, iters)
+    return 2.0 / (lam_max + lam_min)

@@ -1,0 +1,111 @@
+"""Loss-agnostic decentralized consensus strategies (DESIGN.md §3).
+
+The closed-form proximal update of the paper's Theorem 1 (DEC-apx-GP, eq. 34)
+only needs the local gradient at the current iterate, so it applies verbatim
+to ANY differentiable local loss — including the LM losses of the assigned
+architectures. Each member of the `data` (and `pod`) mesh axes is an "agent"
+holding a private data shard.
+
+Strategies (selected per-run via TrainConfig.consensus):
+  allreduce : centralized baseline — psum gradients (FACT-GP server analogue).
+  dec_admm  : DEC-apx-GP generalized to parameter pytrees. Agents keep a
+              local parameter opinion theta_i and dual p_i; one round is
+                p_i   += rho * sum_{j in N_i} (theta_i - theta_j)
+                theta_i = (rho*sum_j theta_j - g_i + (kappa+|N|rho)theta_i
+                           - p_i) / (kappa + 2|N|rho)
+              with ring neighbors via 2x ppermute — no gradient or data ever
+              crosses the network (paper Assumption 2).
+  dac       : one gossip sweep of discrete-time average consensus (eq. 35)
+              applied to gradients — a cheaper, inexact averaging baseline.
+
+These functions are called INSIDE pjit/shard_map context on arrays that carry
+a leading device-local view; collectives run over `axis_names`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ConsensusConfig:
+    strategy: str = "allreduce"        # allreduce | dec_admm | dac
+    rho: float = 1.0                   # ADMM penalty
+    kappa: float = 10.0                # proximal penalty (Theorem 1 condition)
+    dac_eps: float = 1.0 / 3.0         # Perron parameter (cycle graph, Delta=2)
+    dac_sweeps: int = 1
+
+
+def _ring_perms(M: int):
+    fwd = [(i, (i + 1) % M) for i in range(M)]
+    bwd = [(i, (i - 1) % M) for i in range(M)]
+    return fwd, bwd
+
+
+def _neighbor_sum(tree, axis_name: str):
+    """sum of ring-neighbor values of every leaf; cycle graph degree 2."""
+    M = jax.lax.axis_size(axis_name)
+    fwd, bwd = _ring_perms(M)
+
+    def one(x):
+        return (jax.lax.ppermute(x, axis_name, fwd)
+                + jax.lax.ppermute(x, axis_name, bwd))
+
+    return jax.tree.map(one, tree), 2.0
+
+
+def allreduce_grads(grads, axis_names: Sequence[str]):
+    """Baseline: mean gradients over the agent axes."""
+    for ax in axis_names:
+        grads = jax.tree.map(lambda g: jax.lax.pmean(g, ax), grads)
+    return grads
+
+
+def dac_grads(grads, axis_names: Sequence[str], cfg: ConsensusConfig):
+    """Gossip-average gradients: `dac_sweeps` Perron steps on the ring."""
+    for ax in axis_names:
+        for _ in range(cfg.dac_sweeps):
+            nbr, deg = _neighbor_sum(grads, ax)
+            grads = jax.tree.map(
+                lambda g, s: g + cfg.dac_eps * (s - deg * g), grads, nbr)
+    return grads
+
+
+def dec_admm_init(params):
+    """Dual state p_i (same pytree as params), zero-initialized."""
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def dec_admm_update(params, duals, grads, axis_name: str,
+                    cfg: ConsensusConfig):
+    """One generalized DEC-apx-GP round (eq. 34a-b) on parameter pytrees.
+
+    Returns (new_params, new_duals). `grads` are the LOCAL gradients
+    grad L_i(theta_i) — never communicated.
+    """
+    nbr, deg = _neighbor_sum(params, axis_name)
+    rho, kappa = cfg.rho, cfg.kappa
+
+    def upd(th, p, g, s):
+        p_next = p + rho * (deg * th - s)                          # (34a)
+        th_next = (rho * s - g + (kappa + deg * rho) * th - p_next) \
+            / (kappa + 2.0 * deg * rho)                            # (34b)
+        return th_next.astype(th.dtype), p_next.astype(p.dtype)
+
+    out = jax.tree.map(upd, params, duals, grads, nbr)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_duals = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, new_duals
+
+
+def consensus_disagreement(params, axis_name: str):
+    """Max |theta_i - mean_j theta_j| across agents — convergence metric."""
+    def one(x):
+        mean = jax.lax.pmean(x, axis_name)
+        return jnp.max(jnp.abs(x - mean))
+    return jax.tree.reduce(jnp.maximum, jax.tree.map(one, params))

@@ -1,0 +1,59 @@
+"""FULL-GP: exact training (P1) with multi-start Adam on log-theta, and exact
+prediction (paper eq. 5-6)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ...optim import adam, apply_updates
+from .kernel import cov_matrix, se_kernel, unpack
+from .nll import nll
+
+
+@partial(jax.jit, static_argnames=("steps", "lr"))
+def _fit_one(log_theta0, X, y, steps: int = 200, lr: float = 0.05):
+    opt = adam(lr, state_dtype=log_theta0.dtype)
+    grad_fn = jax.value_and_grad(nll)
+
+    def body(carry, _):
+        lt, st = carry
+        val, g = grad_fn(lt, X, y)
+        upd, st = opt.update(g, st, lt)
+        return (apply_updates(lt, upd), st), val
+
+    (lt, _), vals = jax.lax.scan(body, (log_theta0, opt.init(log_theta0)),
+                                 None, length=steps)
+    return lt, nll(lt, X, y), vals
+
+
+def train_full_gp(X, y, key, num_starts: int = 3, steps: int = 200,
+                  lr: float = 0.05, log_theta0=None):
+    """Multi-start MLE (paper Remark 6 / Chen & Wang 2018). Returns best log-theta."""
+    D = X.shape[1]
+    if log_theta0 is None:
+        log_theta0 = jnp.zeros(D + 2, X.dtype)
+    starts = [log_theta0] + [
+        log_theta0 + 0.5 * jax.random.normal(k, (D + 2,), X.dtype)
+        for k in jax.random.split(key, num_starts - 1)
+    ]
+    results = [_fit_one(s, X, y, steps=steps, lr=lr) for s in starts]
+    best = min(range(len(results)), key=lambda i: float(results[i][1]))
+    lt, val, history = results[best]
+    return lt, {"nll": val, "history": history}
+
+
+@jax.jit
+def predict_full(log_theta, X, y, Xs, jitter: float = 1e-8):
+    """Exact GP posterior mean/var at test inputs Xs (paper eq. 5-6)."""
+    C = cov_matrix(X, log_theta, jitter=jitter)
+    L = jnp.linalg.cholesky(C)
+    ks = se_kernel(X, Xs, log_theta)              # (N, Nt)
+    alpha = jax.scipy.linalg.cho_solve((L, True), y)
+    mean = ks.T @ alpha
+    v = jax.scipy.linalg.solve_triangular(L, ks, lower=True)
+    _, sigma_f, _ = unpack(log_theta)
+    kss = sigma_f**2
+    var = kss - jnp.sum(v * v, axis=0)
+    return mean, jnp.maximum(var, 1e-12)

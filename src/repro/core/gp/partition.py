@@ -1,0 +1,51 @@
+"""Dataset partitioning across agents (paper §2.3, §6: disjoint stripes).
+
+Every agent gets N_i = N/M observations from a spatial stripe (paper Fig. 10-b).
+Also builds the grBCM/gapx communication dataset D_c (paper §2.3.2): each agent
+samples N_i/M points without replacement, the samples are flooded, and every
+agent augments D_{+i} = D_i ∪ D_c (so |D_{+i}| = 2 N_i).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stripe_partition(X: jax.Array, y: jax.Array, M: int, axis: int = 0):
+    """Sort by coordinate `axis` and split into M equal stripes.
+
+    Returns (Xp, yp) with shapes (M, N_i, D) and (M, N_i). Drops a remainder of
+    at most M-1 points so all local datasets are equal-sized (paper assumes
+    N_i = N/M exactly).
+    """
+    order = jnp.argsort(X[:, axis])
+    n = (X.shape[0] // M) * M
+    order = order[:n]
+    Xs, ys = X[order], y[order]
+    return (Xs.reshape(M, n // M, X.shape[1]), ys.reshape(M, n // M))
+
+
+def communication_dataset(key: jax.Array, Xp: jax.Array, yp: jax.Array):
+    """Sample N_i/M points per agent (without replacement) and flood.
+
+    Xp (M, N_i, D), yp (M, N_i) -> (Xc, yc) with N_c = M * floor(N_i/M) <= N_i.
+    """
+    M, Ni, D = Xp.shape
+    m = max(Ni // M, 1)
+    keys = jax.random.split(key, M)
+
+    def sample(k, Xi, yi):
+        idx = jax.random.choice(k, Ni, (m,), replace=False)
+        return Xi[idx], yi[idx]
+
+    Xs, ys = jax.vmap(sample)(keys, Xp, yp)
+    return Xs.reshape(M * m, D), ys.reshape(M * m)
+
+
+def augment(Xp: jax.Array, yp: jax.Array, Xc: jax.Array, yc: jax.Array):
+    """D_{+i} = D_i ∪ D_c for every agent. Returns (M, N_i + N_c, ...)."""
+    M = Xp.shape[0]
+    Xc_b = jnp.broadcast_to(Xc[None], (M,) + Xc.shape)
+    yc_b = jnp.broadcast_to(yc[None], (M,) + yc.shape)
+    return (jnp.concatenate([Xp, Xc_b], axis=1),
+            jnp.concatenate([yp, yc_b], axis=1))

@@ -1,0 +1,15 @@
+from .local import local_moments, npae_terms
+from .aggregation import poe, gpoe, bcm, rbcm, grbcm, npae
+from .cbnn import cbnn_scores, cbnn_mask
+from .decentralized import (dec_poe, dec_gpoe, dec_bcm, dec_rbcm, dec_grbcm,
+                            dec_npae, dec_npae_star, dec_nn_poe, dec_nn_gpoe,
+                            dec_nn_bcm, dec_nn_rbcm, dec_nn_grbcm, dec_nn_npae)
+
+__all__ = [
+    "local_moments", "npae_terms",
+    "poe", "gpoe", "bcm", "rbcm", "grbcm", "npae",
+    "cbnn_scores", "cbnn_mask",
+    "dec_poe", "dec_gpoe", "dec_bcm", "dec_rbcm", "dec_grbcm",
+    "dec_npae", "dec_npae_star", "dec_nn_poe", "dec_nn_gpoe",
+    "dec_nn_bcm", "dec_nn_rbcm", "dec_nn_grbcm", "dec_nn_npae",
+]

@@ -1,0 +1,99 @@
+"""Centralized aggregation of GP experts (paper §2.3.2): PoE, gPoE, BCM,
+rBCM, grBCM, NPAE. These are the server-side references the decentralized
+methods must converge to (zero approximation error for DAC-based ones).
+
+All take per-agent moments (M, Nt) and an optional agent mask (M,) or (M, Nt)
+— the mask is what CBNN produces; masked-out agents contribute nothing and
+M_eff = sum(mask).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _mask_of(mu, mask):
+    if mask is None:
+        return jnp.ones_like(mu)
+    return jnp.broadcast_to(mask if mask.ndim == mu.ndim else mask[:, None],
+                            mu.shape).astype(mu.dtype)
+
+
+def poe(mu, var, mask=None):
+    """PoE (eq. 12-13), beta_i = 1."""
+    m = _mask_of(mu, mask)
+    prec = jnp.sum(m / var, axis=0)
+    mean = jnp.sum(m * mu / var, axis=0) / prec
+    return mean, 1.0 / prec
+
+
+def gpoe(mu, var, mask=None):
+    """gPoE (eq. 12-13), beta_i = 1/M (average weight, Deisenroth & Ng)."""
+    m = _mask_of(mu, mask)
+    M_eff = jnp.sum(m, axis=0)
+    beta = m / M_eff
+    prec = jnp.sum(beta / var, axis=0)
+    mean = jnp.sum(beta * mu / var, axis=0) / prec
+    return mean, 1.0 / prec
+
+
+def bcm(mu, var, prior_var, mask=None):
+    """BCM (eq. 14-15), beta_i = 1."""
+    m = _mask_of(mu, mask)
+    M_eff = jnp.sum(m, axis=0)
+    prec = jnp.sum(m / var, axis=0) + (1.0 - M_eff) / prior_var
+    mean = jnp.sum(m * mu / var, axis=0) / prec
+    return mean, 1.0 / prec
+
+
+def rbcm(mu, var, prior_var, mask=None):
+    """rBCM (eq. 14-15), beta_i = 0.5(log prior_var - log var_i)."""
+    m = _mask_of(mu, mask)
+    beta = 0.5 * (jnp.log(prior_var) - jnp.log(var)) * m
+    prec = jnp.sum(beta / var, axis=0) + (1.0 - jnp.sum(beta, axis=0)) / prior_var
+    mean = jnp.sum(beta * mu / var, axis=0) / prec
+    return mean, 1.0 / prec
+
+
+def grbcm(mu_aug, var_aug, mu_c, var_c, mask=None):
+    """grBCM (eq. 16-17): experts use augmented moments; the communication
+    expert (mu_c, var_c) anchors consistency. beta_1 = 1,
+    beta_i = 0.5(log var_c - log var_{+i}) for i >= 2."""
+    m = _mask_of(mu_aug, mask)
+    beta = 0.5 * (jnp.log(var_c)[None] - jnp.log(var_aug))
+    beta = beta.at[0].set(1.0) * m
+    sum_beta = jnp.sum(beta, axis=0)
+    prec = jnp.sum(beta / var_aug, axis=0) + (1.0 - sum_beta) / var_c
+    mean = (jnp.sum(beta * mu_aug / var_aug, axis=0)
+            - (sum_beta - 1.0) * mu_c / var_c) / prec
+    return mean, 1.0 / prec
+
+
+def npae(mu, kA, CA, prior_var, mask=None, jitter=1e-6):
+    """NPAE (eq. 20-21): mu = k_A^T C_A^-1 mu ; var = k** - k_A^T C_A^-1 k_A.
+
+    mu, kA (M, Nt); CA (Nt, M, M). A mask restricts aggregation to selected
+    agents by zeroing their rows/cols and placing 1 on excluded diagonals
+    (decouples the excluded block — used by DEC-NN-NPAE).
+    """
+    M, Nt = mu.shape
+    if mask is not None:
+        mkT = _mask_of(mu, mask).T                           # (Nt, M)
+        eye = jnp.eye(M, dtype=mu.dtype)
+        # zero cross terms with excluded agents; unit diagonal decouples them
+        CA = CA * (mkT[:, :, None] * mkT[:, None, :]) \
+            + eye[None] * (1.0 - mkT)[:, None, :]
+        kA = kA * mkT.T
+        mu = mu * mkT.T
+
+    def solve_one(C, k, m):
+        scale = jnp.mean(jnp.diagonal(C))
+        C = C + (1e-12 + jitter * scale) * jnp.eye(M, dtype=C.dtype)
+        L = jnp.linalg.cholesky(C)
+        qm = jax.scipy.linalg.cho_solve((L, True), m)
+        qk = jax.scipy.linalg.cho_solve((L, True), k)
+        return k @ qm, k @ qk
+
+    mean, kck = jax.vmap(solve_one)(CA, kA.T, mu.T)          # (Nt,), (Nt,)
+    var = jnp.maximum(prior_var - kck, 1e-12)
+    return mean, var

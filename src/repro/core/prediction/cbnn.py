@@ -1,0 +1,34 @@
+"""Covariance-based nearest-neighbor agent selection (paper §5.2, eq. 39).
+
+[k_mu,*]_i = k_{i,*}^T C_i^-1 k_{i,*} measures the statistical correlation of
+agent i's dataset to the query point; agents below eta_NN sit out the
+aggregation. Computed from purely local quantities (Assumption 2 holds).
+Note eq. (39) coincides with the NPAE cross-covariance (eq. 18).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..gp.kernel import se_kernel, unpack
+from .local import _chol
+
+
+def cbnn_scores(log_theta, Xp, Xs, jitter=1e-8):
+    """(M, Nt) correlation scores [k_mu,*]_i per agent per query."""
+    def one(Xi):
+        L = _chol(Xi, log_theta, jitter)
+        ks = se_kernel(Xi, Xs, log_theta)
+        w = jax.scipy.linalg.cho_solve((L, True), ks)
+        return jnp.sum(ks * w, axis=0)
+    return jax.vmap(one)(Xp)
+
+
+def cbnn_mask(log_theta, Xp, Xs, eta_nn: float, jitter=1e-8):
+    """Boolean participation mask (M, Nt); guarantees >= 1 agent per query."""
+    scores = cbnn_scores(log_theta, Xp, Xs, jitter)
+    mask = scores >= eta_nn
+    # never let a query end up with zero experts: keep the best agent
+    best = jnp.argmax(scores, axis=0)
+    mask = mask.at[best, jnp.arange(Xs.shape[0])].set(True)
+    return mask, scores

@@ -1,0 +1,250 @@
+"""The paper's 13 decentralized GP prediction methods (§5).
+
+DAC family (strongly connected graphs):
+  DEC-PoE (Alg. 5), DEC-gPoE (Alg. 6), DEC-BCM (Alg. 7), DEC-rBCM (Alg. 8),
+  DEC-grBCM (Alg. 9)
+NPAE family (strongly complete for JOR/PM):
+  DEC-NPAE (Alg. 10), DEC-NPAE* (Alg. 11-12, PM-estimated omega*)
+CBNN nearest-neighbor family (Alg. 13-18):
+  DEC-NN-{PoE, gPoE, BCM, rBCM, grBCM} (DAC on the CBNN subset)
+  DEC-NN-NPAE (DALE, strongly connected suffices)
+
+Simulated-network mode: excluded CBNN agents still relay DAC messages with a
+zero contribution, which converges to sum_{selected}/M; multiplying by M
+recovers the selected-agent sums exactly (Lemma 6 guarantees the deployed
+subgraph variant stays connected; both give identical fixed points).
+
+Every method returns (mean, var, info) where info carries the consensus
+residuals so benchmarks can report communication rounds (paper Tables 5, 7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..consensus.dac import dac
+from ..consensus.jor import jor
+from ..consensus.dale import dale
+from ..consensus.power_method import optimal_omega
+from ..gp.kernel import unpack
+from .local import local_moments, npae_terms
+from .cbnn import cbnn_mask
+from . import aggregation as agg
+
+
+def _dac_sums(w0: jax.Array, A: jax.Array, iters: int):
+    """DAC -> per-agent average estimates; returns (M * avg) = network sums.
+
+    w0 (M, K): K parallel consensuses. Output (K,) sums plus residual.
+    """
+    M = w0.shape[0]
+    w, res = dac(w0, A, iters)
+    return M * jnp.mean(w, axis=0), res
+
+
+def _poe_family(log_theta, Xp, yp, Xs, A, iters, beta_mode: str,
+                bcm_correction: bool, mask=None):
+    mu, var = local_moments(log_theta, Xp, yp, Xs)        # (M, Nt)
+    _, sigma_f, _ = unpack(log_theta)
+    prior_var = sigma_f**2
+    m = jnp.ones_like(mu) if mask is None else \
+        jnp.broadcast_to(mask, mu.shape).astype(mu.dtype)
+    M_eff = jnp.sum(m, axis=0)                            # (Nt,)
+
+    if beta_mode == "one":
+        beta = m
+    elif beta_mode == "avg":
+        beta = m / M_eff
+    elif beta_mode == "entropy":
+        beta = 0.5 * (jnp.log(prior_var) - jnp.log(var)) * m
+    else:
+        raise ValueError(beta_mode)
+
+    w0 = jnp.stack([beta * mu / var, beta / var, beta], axis=-1)  # (M, Nt, 3)
+    sums, res = _dac_sums(w0.reshape(w0.shape[0], -1), A, iters)
+    sums = sums.reshape(mu.shape[1], 3)
+    s_mu, s_prec, s_beta = sums[:, 0], sums[:, 1], sums[:, 2]
+    if bcm_correction:
+        prec = s_prec + (1.0 - s_beta) / prior_var        # (15)
+    else:
+        prec = s_prec                                     # (13)
+    mean = s_mu / prec                                    # (12)/(14)
+    return mean, 1.0 / prec, {"dac_residuals": res}
+
+
+def dec_poe(log_theta, Xp, yp, Xs, A, iters=200, mask=None):
+    return _poe_family(log_theta, Xp, yp, Xs, A, iters, "one", False, mask)
+
+
+def dec_gpoe(log_theta, Xp, yp, Xs, A, iters=200, mask=None):
+    return _poe_family(log_theta, Xp, yp, Xs, A, iters, "avg", False, mask)
+
+
+def dec_bcm(log_theta, Xp, yp, Xs, A, iters=200, mask=None):
+    return _poe_family(log_theta, Xp, yp, Xs, A, iters, "one", True, mask)
+
+
+def dec_rbcm(log_theta, Xp, yp, Xs, A, iters=200, mask=None):
+    return _poe_family(log_theta, Xp, yp, Xs, A, iters, "entropy", True, mask)
+
+
+def dec_grbcm(log_theta, Xp_aug, yp_aug, Xc, yc, Xs, A, iters=200, mask=None):
+    """DEC-grBCM (Alg. 9): three DACs on augmented-expert quantities."""
+    mu_aug, var_aug = local_moments(log_theta, Xp_aug, yp_aug, Xs)
+    mu_c, var_c = local_moments(log_theta, Xc[None], yc[None], Xs)
+    mu_c, var_c = mu_c[0], var_c[0]                        # (Nt,)
+
+    m = jnp.ones_like(mu_aug) if mask is None else \
+        jnp.broadcast_to(mask, mu_aug.shape).astype(mu_aug.dtype)
+    beta = 0.5 * (jnp.log(var_c)[None] - jnp.log(var_aug))
+    beta = beta.at[0].set(1.0) * m
+
+    w0 = jnp.stack([beta * mu_aug / var_aug, beta / var_aug, beta], axis=-1)
+    sums, res = _dac_sums(w0.reshape(w0.shape[0], -1), A, iters)
+    sums = sums.reshape(mu_aug.shape[1], 3)
+    s_mu, s_prec, s_beta = sums[:, 0], sums[:, 1], sums[:, 2]
+    prec = s_prec + (1.0 - s_beta) / var_c                 # (17)
+    mean = (s_mu - (s_beta - 1.0) * mu_c / var_c) / prec   # (16)
+    return mean, 1.0 / prec, {"dac_residuals": res}
+
+
+# ---------------------------------------------------------------------------
+# NPAE family
+# ---------------------------------------------------------------------------
+
+def _npae_via_solver(log_theta, Xp, yp, Xs, A, solver, dac_iters):
+    """Shared scaffold: per-query linear solves then DAC to assemble dots."""
+    mu, kA, CA = npae_terms(log_theta, Xp, yp, Xs)         # (M,Nt),(M,Nt),(Nt,M,M)
+    _, sigma_f, _ = unpack(log_theta)
+    prior_var = sigma_f**2
+
+    q_mu, q_k, solver_info = solver(CA, mu.T, kA.T)        # (Nt, M) each
+
+    # each agent holds w_i = [k_A]_i * q_i ; DAC recovers the dot products
+    w0 = jnp.stack([kA * q_mu.T, kA * q_k.T], axis=-1)     # (M, Nt, 2)
+    sums, res = _dac_sums(w0.reshape(w0.shape[0], -1), A, dac_iters)
+    sums = sums.reshape(mu.shape[1], 2)
+    mean = sums[:, 0]                                      # k_A^T C_A^-1 mu  (20)
+    var = jnp.maximum(prior_var - sums[:, 1], 1e-12)       # (21)
+    info = {"dac_residuals": res, **solver_info}
+    return mean, var, info
+
+
+def _rel_jitter(C, rel=1e-6):
+    """Relative diagonal jitter: C_A can be near-singular when agents are
+    weakly correlated to a query (paper's NPAE-family approximation error);
+    scaling by the mean diagonal keeps JOR/Cholesky well-posed across data
+    scales."""
+    M = C.shape[-1]
+    scale = jnp.mean(jnp.diagonal(C, axis1=-2, axis2=-1), axis=-1)
+    return C + (1e-12 + rel * scale)[..., None, None] * jnp.eye(M, dtype=C.dtype)
+
+
+def dec_npae(log_theta, Xp, yp, Xs, A, jor_iters=500, dac_iters=200,
+             omega=None, jitter=1e-6):
+    """DEC-NPAE (Alg. 10): JOR (strongly complete) + DAC. Lemma 2 default
+    omega = 2/M * 0.999."""
+    M = Xp.shape[0]
+    om = (2.0 / M) * 0.999 if omega is None else omega
+
+    def solver(CA, b_mu, b_k):
+
+        def one(C, bm, bk):
+            q, r = jor(_rel_jitter(C, jitter), jnp.stack([bm, bk], -1), om,
+                       jor_iters)
+            return q[:, 0], q[:, 1], r[-1]
+        qm, qk, res = jax.vmap(one)(CA, b_mu, b_k)
+        return qm, qk, {"jor_residual": jnp.max(res), "omega": om}
+
+    return _npae_via_solver(log_theta, Xp, yp, Xs, A, solver, dac_iters)
+
+
+def dec_npae_star(log_theta, Xp, yp, Xs, A, jor_iters=500, dac_iters=200,
+                  pm_iters=100, jitter=1e-6):
+    """DEC-NPAE* (Alg. 12): PM/IPM estimate omega* = 2/(lmax+lmin) per query,
+    then JOR with the optimal relaxation (Lemma 3) — faster convergence."""
+    M = Xp.shape[0]
+
+    def solver(CA, b_mu, b_k):
+
+        def one(C, bm, bk):
+            H = _rel_jitter(C, jitter)
+            om = optimal_omega(H, pm_iters)
+            q, r = jor(H, jnp.stack([bm, bk], -1), om, jor_iters)
+            return q[:, 0], q[:, 1], r[-1], om
+        qm, qk, res, oms = jax.vmap(one)(CA, b_mu, b_k)
+        return qm, qk, {"jor_residual": jnp.max(res), "omega": oms}
+
+    return _npae_via_solver(log_theta, Xp, yp, Xs, A, solver, dac_iters)
+
+
+# ---------------------------------------------------------------------------
+# CBNN nearest-neighbor family
+# ---------------------------------------------------------------------------
+
+def dec_nn_poe(log_theta, Xp, yp, Xs, A, eta_nn, iters=200):
+    mask, _ = cbnn_mask(log_theta, Xp, Xs, eta_nn)
+    m, v, info = dec_poe(log_theta, Xp, yp, Xs, A, iters, mask=mask)
+    return m, v, {**info, "mask": mask}
+
+
+def dec_nn_gpoe(log_theta, Xp, yp, Xs, A, eta_nn, iters=200):
+    mask, _ = cbnn_mask(log_theta, Xp, Xs, eta_nn)
+    m, v, info = dec_gpoe(log_theta, Xp, yp, Xs, A, iters, mask=mask)
+    return m, v, {**info, "mask": mask}
+
+
+def dec_nn_bcm(log_theta, Xp, yp, Xs, A, eta_nn, iters=200):
+    mask, _ = cbnn_mask(log_theta, Xp, Xs, eta_nn)
+    m, v, info = dec_bcm(log_theta, Xp, yp, Xs, A, iters, mask=mask)
+    return m, v, {**info, "mask": mask}
+
+
+def dec_nn_rbcm(log_theta, Xp, yp, Xs, A, eta_nn, iters=200):
+    mask, _ = cbnn_mask(log_theta, Xp, Xs, eta_nn)
+    m, v, info = dec_rbcm(log_theta, Xp, yp, Xs, A, iters, mask=mask)
+    return m, v, {**info, "mask": mask}
+
+
+def dec_nn_grbcm(log_theta, Xp_aug, yp_aug, Xc, yc, Xs, A, eta_nn, iters=200,
+                 Xp=None):
+    """DEC-NN-grBCM (Alg. 17). CBNN scores use the *local* datasets (eq. 39
+    is defined on D_i), participation applies to the augmented experts."""
+    Xp_scores = Xp if Xp is not None else Xp_aug
+    mask, _ = cbnn_mask(log_theta, Xp_scores, Xs, eta_nn)
+    m, v, info = dec_grbcm(log_theta, Xp_aug, yp_aug, Xc, yc, Xs, A, iters,
+                           mask=mask)
+    return m, v, {**info, "mask": mask}
+
+
+def dec_nn_npae(log_theta, Xp, yp, Xs, A, eta_nn, dale_iters=2000,
+                jitter=1e-6):
+    """DEC-NN-NPAE (Alg. 18): CBNN + DALE — strongly connected suffices.
+
+    Masked agents are decoupled (unit diagonal rows in H, zero b), so DALE
+    solves the selected block exactly; the prediction is assembled from any
+    agent's converged full solution vector.
+    """
+    mask, _ = cbnn_mask(log_theta, Xp, Xs, eta_nn)
+    mu, kA, CA = npae_terms(log_theta, Xp, yp, Xs)
+    _, sigma_f, _ = unpack(log_theta)
+    prior_var = sigma_f**2
+    M, Nt = mu.shape
+    mkT = mask.T.astype(mu.dtype)                           # (Nt, M)
+    eye = jnp.eye(M, dtype=mu.dtype)
+    H = _rel_jitter(CA * (mkT[:, :, None] * mkT[:, None, :])
+                    + eye[None] * (1.0 - mkT)[:, None, :], jitter)
+    kA_m = (kA * mask).T                                    # (Nt, M)
+    mu_m = (mu * mask).T
+
+    def one(Ht, bm, bk, kv):
+        Qm, rm = dale(Ht, bm, A, dale_iters)
+        Qk, rk = dale(Ht, bk, A, dale_iters)
+        # every agent holds the full solution; average copies for robustness
+        qm = jnp.mean(Qm, axis=0)
+        qk = jnp.mean(Qk, axis=0)
+        return kv @ qm, kv @ qk, jnp.maximum(rm[-1], rk[-1])
+
+    mean, kck, res = jax.vmap(one)(H, mu_m, kA_m, kA_m)
+    var = jnp.maximum(prior_var - kck, 1e-12)
+    return mean, var, {"dale_residual": jnp.max(res), "mask": mask}

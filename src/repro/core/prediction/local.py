@@ -1,0 +1,69 @@
+"""Local GP sub-model moments (paper eq. 10-11) and NPAE local quantities
+(eq. 18-19), vmapped over the agent axis."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..gp.kernel import se_kernel, unpack
+
+
+def _chol(X, log_theta, jitter=1e-8):
+    ls, sigma_f, sigma_eps = unpack(log_theta)
+    n = X.shape[0]
+    C = se_kernel(X, X, log_theta) + (sigma_eps**2 + jitter) * jnp.eye(n, dtype=X.dtype)
+    return jnp.linalg.cholesky(C)
+
+
+def local_moments(log_theta, Xp, yp, Xs, jitter=1e-8):
+    """mu_i, var_i at test points. Xp (M,Ni,D), Xs (Nt,D) -> (M,Nt) each."""
+    _, sigma_f, _ = unpack(log_theta)
+    kss = sigma_f**2
+
+    def one(Xi, yi):
+        L = _chol(Xi, log_theta, jitter)
+        ks = se_kernel(Xi, Xs, log_theta)                       # (Ni, Nt)
+        alpha = jax.scipy.linalg.cho_solve((L, True), yi)
+        mu = ks.T @ alpha
+        v = jax.scipy.linalg.solve_triangular(L, ks, lower=True)
+        var = kss - jnp.sum(v * v, axis=0)
+        return mu, jnp.maximum(var, 1e-12)
+
+    return jax.vmap(one)(Xp, yp)
+
+
+def npae_terms(log_theta, Xp, yp, Xs, jitter=1e-8):
+    """NPAE aggregation terms (paper eq. 18-21 context).
+
+    Returns (mu (M,Nt), k_A (M,Nt), C_A (Nt,M,M)) where
+      [k_A]_i      = k_{i,*}^T C_i^-1 k_{i,*}                       (eq. 18)
+      [C_A]_ij     = k_{i,*}^T C_i^-1 K(X_i,X_j) C_j^-1 k_{j,*}, i != j
+      [C_A]_ii     = [k_A]_i
+    NOTE: the paper's eq. (19) literally reads C_ij C_ij^-1 (= I), an obvious
+    typo; we implement the Rulliere et al. / Bachoc et al. covariance
+    Cov(mu_i, mu_j) above. Off-diagonal blocks use the noise-free K(X_i, X_j)
+    because measurement noise is iid across disjoint local datasets.
+    """
+    M = Xp.shape[0]
+
+    def solve_one(Xi, yi):
+        L = _chol(Xi, log_theta, jitter)
+        ks = se_kernel(Xi, Xs, log_theta)                       # (Ni, Nt)
+        w = jax.scipy.linalg.cho_solve((L, True), ks)           # C_i^-1 k_i*
+        alpha = jax.scipy.linalg.cho_solve((L, True), yi)
+        mu = ks.T @ alpha                                        # (Nt,)
+        kA = jnp.sum(ks * w, axis=0)                             # (Nt,)
+        return mu, kA, w
+
+    mu, kA, W = jax.vmap(solve_one)(Xp, yp)                      # W (M, Ni, Nt)
+
+    def cross(i, j):
+        Kij = se_kernel(Xp[i], Xp[j], log_theta)                 # (Ni, Nj)
+        return jnp.einsum("it,ij,jt->t", W[i], Kij, W[j])        # (Nt,)
+
+    idx = jnp.arange(M)
+    CA = jax.vmap(lambda i: jax.vmap(lambda j: cross(i, j))(idx))(idx)  # (M,M,Nt)
+    CA = jnp.moveaxis(CA, -1, 0)                                 # (Nt, M, M)
+    # exact diagonal = k_A (includes the C_i^-1 through-noise path once)
+    CA = CA.at[:, idx, idx].set(kA.T)
+    return mu, kA, CA

@@ -1,0 +1,4 @@
+from .synthetic import (grid_inputs, gp_sample_field, sst_like_field,
+                        random_inputs)
+
+__all__ = ["grid_inputs", "gp_sample_field", "sst_like_field", "random_inputs"]

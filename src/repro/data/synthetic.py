@@ -1,0 +1,69 @@
+"""Synthetic data generation (paper §6.1 and the SST substitute, DESIGN.md §2).
+
+`gp_sample_field` draws from the exact GP prior when N is small and falls back
+to a random-Fourier-feature (RFF) approximation for large N (an RFF draw with
+enough features is statistically indistinguishable from an exact draw and is
+O(N*F) instead of O(N^3)).
+
+`sst_like_field` builds the SST stand-in: a smooth multi-scale 2-D field with a
+meandering front, normalized like the paper's 400x400 km Atlantic patch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.gp.kernel import se_kernel, unpack
+
+
+def grid_inputs(n_side: int, lo=0.0, hi=2.0, dtype=jnp.float64) -> jax.Array:
+    xs = jnp.linspace(lo, hi, n_side, dtype=dtype)
+    X1, X2 = jnp.meshgrid(xs, xs, indexing="ij")
+    return jnp.stack([X1.ravel(), X2.ravel()], axis=1)
+
+
+def gp_sample_field(key, X, log_theta, exact_max_n: int = 4096,
+                    rff_features: int = 4096):
+    """Draw f ~ GP(0, k) at inputs X and add N(0, sigma_eps^2) noise -> y."""
+    ls, sigma_f, sigma_eps = unpack(log_theta)
+    kf, kw, kb, kn = jax.random.split(key, 4)
+    n, D = X.shape
+    if n <= exact_max_n:
+        K = se_kernel(X, X, log_theta) + 1e-8 * jnp.eye(n, dtype=X.dtype)
+        L = jnp.linalg.cholesky(K)
+        f = L @ jax.random.normal(kf, (n,), X.dtype)
+    else:
+        # RFF for k(x,x') = sf^2 exp(-sum d^2/l^2): spectral density is Gaussian
+        # with std sqrt(2)/l per dim.
+        W = jax.random.normal(kw, (rff_features, D), X.dtype) \
+            * (jnp.sqrt(2.0) / ls)[None, :]
+        b = jax.random.uniform(kb, (rff_features,), X.dtype, 0.0, 2 * jnp.pi)
+        phi = jnp.sqrt(2.0 / rff_features) * jnp.cos(X @ W.T + b[None, :])
+        w = jax.random.normal(kf, (rff_features,), X.dtype)
+        f = sigma_f * (phi @ w)
+    y = f + sigma_eps * jax.random.normal(kn, (n,), X.dtype)
+    return f, y
+
+
+def sst_like_field(X: jax.Array, noise_std: float = 0.5,
+                   key: jax.Array | None = None):
+    """SST stand-in on [0,1]^2: warm-to-cold gradient + meandering front + eddies.
+
+    Returns (f, y). Paper adds N(0, 0.25) iid noise (std 0.5) — same default.
+    """
+    x, z = X[:, 0], X[:, 1]
+    front = 0.45 + 0.08 * jnp.sin(4.0 * jnp.pi * x) + 0.05 * jnp.cos(9.0 * x)
+    f = (
+        2.2 * jnp.tanh((front - z) * 9.0)              # Gulf-Stream-like front
+        + 0.8 * jnp.sin(3.1 * x) * jnp.cos(2.3 * z)    # mesoscale structure
+        + 0.4 * jnp.sin(7.9 * x + 1.3) * jnp.sin(6.1 * z + 0.7)  # eddies
+        + 0.15 * jnp.cos(15.0 * x) * jnp.cos(13.0 * z)
+    )
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    y = f + noise_std * jax.random.normal(key, f.shape, f.dtype)
+    return f, y
+
+
+def random_inputs(key, n: int, D: int = 2, lo=0.0, hi=2.0, dtype=jnp.float64):
+    return jax.random.uniform(key, (n, D), dtype, lo, hi)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: blocked flash attention (online softmax) with GQA,
+causal and sliding-window masking.
+
+The transformer-side hot-spot for the assigned architectures. Classic
+FlashAttention-2 TPU schedule:
+  grid = (B, H, Sq/BQ, Sk/BK), dims (parallel, parallel, parallel, arbitrary)
+  scratch: VMEM accumulators acc (BQ, D) f32, m and l (BQ,) f32 carried
+  across the KV (innermost, sequential) grid dimension.
+GQA is handled in the KV BlockSpec index_map (kv head = q head // group) so
+grouped KV is never materialized at H heads.
+
+VMEM per step ~= BQ*D(q) + BK*D(k) + BK*D(v) + BQ*BK(logits) + BQ*D(acc),
+with BQ=BK=256, D=128: ~0.7 MB f32 — well inside the ~16 MB/core budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  bq: int, bk: int, sq: int, sk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)              # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)              # (BK, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # global positions; queries right-aligned to the key timeline
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (sk - sq)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    correction = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * correction + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * correction[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, causal: bool = True,
+                           scale: float | None = None,
+                           window: int | None = None,
+                           bq: int = 256, bk: int = 256,
+                           interpret: bool = False):
+    """q (B,H,Sq,D), k/v (B,KH,Sk,D), H % KH == 0; Sq % bq == Sk % bk == 0
+    (ops.py pads). Returns (B,H,Sq,D) in q.dtype."""
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    g = H // KH
+    if scale is None:
+        scale = 1.0 / float(D) ** 0.5
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    grid = (B, H, Sq // bq, Sk // bk)
+    kernel = functools.partial(
+        _flash_kernel, scale=float(scale), causal=causal, window=window,
+        bq=bq, bk=bk, sq=Sq, sk=Sk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),   # acc
+            pltpu.VMEM((bq,), jnp.float32),     # m (running max)
+            pltpu.VMEM((bq,), jnp.float32),     # l (running denom)
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,124 @@
+"""Chunked flash attention in pure jnp with a flash-style custom VJP.
+
+This is the non-Pallas execution path (CPU tests, pjit dry-runs): same online
+-softmax algorithm as kernels/flash_attention.py, O(S * chunk) memory instead
+of O(S^2), and a custom backward that saves only (out, lse) and recomputes
+chunk scores — matching what the TPU kernel's backward does. Without this,
+dry-run memory analysis would misrepresent the TPU target by tens of GB.
+
+Semantics match ref.flash_attention_ref: GQA (H % KH == 0), causal masking
+with queries right-aligned to the key timeline, optional sliding window.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk_count(s, c):
+    return (s + c - 1) // c
+
+
+def _mask(q_pos, k_pos, causal, window):
+    mq = q_pos[..., :, None]
+    mk = k_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(mq.shape, mk.shape), jnp.bool_)
+    if causal:
+        m = m & (mk <= mq)
+    if window is not None:
+        m = m & (mk > mq - window)
+    return m
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_jnp(q, k, v, causal=True, window=None, chunk=1024,
+                        scale=None):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, chunk, scale)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, chunk, scale):
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    g = H // KH
+    sc = scale if scale is not None else 1.0 / D ** 0.5
+    nc = _chunk_count(Sk, chunk)
+    q32 = q.astype(jnp.float32)
+    q_pos = jnp.arange(Sq) + (Sk - Sq)
+
+    def body(carry, ic):
+        acc, m, l = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, ic * chunk, chunk, 2)
+        vs = jax.lax.dynamic_slice_in_dim(v, ic * chunk, chunk, 2)
+        ks = jnp.repeat(ks, g, axis=1).astype(jnp.float32)
+        vs = jnp.repeat(vs, g, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q32, ks) * sc
+        k_pos = ic * chunk + jnp.arange(chunk)
+        msk = _mask(q_pos, k_pos, causal, window) & (k_pos < Sk)[None, :]
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vs)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(nc))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, chunk, scale):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, chunk, scale)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, chunk, scale, res, dout):
+    q, k, v, out, lse = res
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    g = H // KH
+    sc = scale if scale is not None else 1.0 / D ** 0.5
+    nc = _chunk_count(Sk, chunk)
+    q32 = q.astype(jnp.float32)
+    do32 = dout.astype(jnp.float32)
+    delta = jnp.sum(do32 * out.astype(jnp.float32), axis=-1)   # (B,H,Sq)
+    q_pos = jnp.arange(Sq) + (Sk - Sq)
+
+    def body(dq, ic):
+        ks = jax.lax.dynamic_slice_in_dim(k, ic * chunk, chunk, 2)
+        vs = jax.lax.dynamic_slice_in_dim(v, ic * chunk, chunk, 2)
+        ksr = jnp.repeat(ks, g, axis=1).astype(jnp.float32)
+        vsr = jnp.repeat(vs, g, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q32, ksr) * sc
+        k_pos = ic * chunk + jnp.arange(chunk)
+        msk = _mask(q_pos, k_pos, causal, window) & (k_pos < Sk)[None, :]
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                         # (B,H,q,k)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", do32, vsr)
+        ds = p * (dp - delta[..., None]) * sc
+        dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds, ksr)
+        dvc = jnp.einsum("bhqk,bhqd->bhkd", p, do32)            # (B,H,k,D)
+        dkc = jnp.einsum("bhqk,bhqd->bhkd", ds, q32)
+        # GQA: sum gradient over the q-head group
+        dvc = dvc.reshape(B, KH, g, chunk, D).sum(2)
+        dkc = dkc.reshape(B, KH, g, chunk, D).sum(2)
+        return dq, (dkc, dvc)
+
+    dq0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, jnp.arange(nc))
+    dk = jnp.moveaxis(dks, 0, 2).reshape(B, KH, nc * chunk, D)[:, :, :Sk]
+    dv = jnp.moveaxis(dvs, 0, 2).reshape(B, KH, nc * chunk, D)[:, :, :Sk]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_jnp.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,108 @@
+"""Jit'd public wrappers around the Pallas kernels: padding to tile-aligned
+shapes, dtype handling, CPU interpret-mode fallback, and the pure-jnp path
+used under pjit dry-runs (use_pallas=False).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .rbf_gram import rbf_gram_pallas
+from .rbf_matvec import rbf_matvec_pallas
+from .flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("with_noise", "use_pallas", "interpret",
+                                   "bn", "bm"))
+def rbf_gram(x1, x2, lengthscales, sigma_f, noise=0.0, with_noise: bool = False,
+             use_pallas: bool | None = None, interpret: bool | None = None,
+             bn: int = 256, bm: int = 256):
+    """Public RBF Gram op. x1 (N,D), x2 (M,D) -> (N,M).
+
+    `with_noise=True` adds noise^2 on the global diagonal (square case)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.rbf_gram_ref(x1, x2, lengthscales, sigma_f,
+                                noise if with_noise else 0.0)
+    if interpret is None:
+        interpret = not _on_tpu()
+    N, M = x1.shape[0], x2.shape[0]
+    a = _pad_to((x1 / lengthscales).astype(jnp.float32), 8, 1)
+    b = _pad_to((x2 / lengthscales).astype(jnp.float32), 8, 1)
+    bn_ = min(bn, max(8, N)); bm_ = min(bm, max(8, M))
+    a = _pad_to(a, bn_, 0)
+    b = _pad_to(b, bm_, 0)
+    out = rbf_gram_pallas(a, b, jnp.asarray(sigma_f) ** 2,
+                          jnp.asarray(noise) ** 2, with_noise=with_noise,
+                          bn=bn_, bm=bm_, interpret=interpret)
+    return out[:N, :M]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
+                                   "interpret", "bq", "bk"))
+def flash_attention(q, k, v, causal: bool = True, window: int | None = None,
+                    use_pallas: bool | None = None, interpret: bool | None = None,
+                    bq: int = 256, bk: int = 256):
+    """Public attention op. q (B,H,Sq,D), k/v (B,KH,Sk,D)."""
+    Sq, Sk = q.shape[2], k.shape[2]
+
+    def _divisor_block(n, cap):
+        b = min(cap, n)
+        while n % b:
+            b -= 1
+        return b
+
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        # chunked jnp flash (custom VJP): same memory behaviour as the TPU
+        # kernel — O(S*chunk) transients, backward recomputes chunk scores
+        from .flash_jnp import flash_attention_jnp
+        return flash_attention_jnp(q, k, v, causal, window,
+                                   _divisor_block(Sk, 1024))
+    if interpret is None:
+        interpret = not _on_tpu()
+    bq_ = _divisor_block(Sq, bq)
+    bk_ = _divisor_block(Sk, bk)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  bq=bq_, bk=bk_, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "bn", "bm"))
+def rbf_matvec(x1, x2, v, lengthscales, sigma_f, use_pallas: bool | None = None,
+               interpret: bool | None = None, bn: int = 256, bm: int = 256):
+    """Fused k(X1,X2) @ v — O(N+M) memory (streaming prediction mean)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.rbf_matvec_ref(x1, x2, v, lengthscales, sigma_f)
+    if interpret is None:
+        interpret = not _on_tpu()
+    N, M = x1.shape[0], x2.shape[0]
+    a = _pad_to((x1 / lengthscales).astype(jnp.float32), 8, 1)
+    b = _pad_to((x2 / lengthscales).astype(jnp.float32), 8, 1)
+    bn_ = min(bn, max(8, N)); bm_ = min(bm, max(8, M))
+    a = _pad_to(a, bn_, 0)
+    b = _pad_to(b, bm_, 0)
+    vp = _pad_to(v.astype(jnp.float32), bm_, 0)   # zero-pad: no contribution
+    out = rbf_matvec_pallas(a, b, vp, jnp.asarray(sigma_f) ** 2,
+                            bn=bn_, bm=bm_, interpret=interpret)
+    return out[:N]

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for allclose tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rbf_gram_ref(x1, x2, lengthscales, sigma_f, noise: float = 0.0):
+    """sigma_f^2 exp(-sum_d (x1_d - x2_d)^2 / l_d^2) (+ noise^2 I if square).
+
+    x1 (N, D), x2 (M, D) -> (N, M). Matches core.gp.kernel.se_kernel.
+    """
+    a = x1 / lengthscales
+    b = x2 / lengthscales
+    d2 = (jnp.sum(a * a, -1)[:, None] + jnp.sum(b * b, -1)[None, :]
+          - 2.0 * a @ b.T)
+    K = sigma_f**2 * jnp.exp(-jnp.maximum(d2, 0.0))
+    if noise:
+        n = min(x1.shape[0], x2.shape[0])
+        K = K + noise**2 * jnp.eye(x1.shape[0], x2.shape[0], dtype=K.dtype)
+    return K
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, scale: float | None = None,
+                        window: int | None = None):
+    """Reference attention. q (B,H,Sq,D), k/v (B,KH,Sk,D) with H % KH == 0.
+
+    `window` enables sliding-window causal attention (keys within `window`
+    positions behind the query). Query positions are right-aligned to the key
+    timeline (decode: Sq=1 attends to the full cache).
+    """
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    g = H // KH
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(D).astype(q.dtype)
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    q_pos = jnp.arange(Sq) + (Sk - Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)
+
+
+def rbf_matvec_ref(x1, x2, v, lengthscales, sigma_f):
+    """k(X1, X2) @ v without the kernel (oracle materializes the Gram)."""
+    return rbf_gram_ref(x1, x2, lengthscales, sigma_f) @ v

@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below is ordinary.
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_IDS, get_config
+from .mesh import make_production_mesh
+from .steps import SHAPES, build, shape_supported
+
+# named sharding-policy overrides (launch/sharding.py DEFAULT_RULES keys).
+# "dp": pure data parallelism — small models (EXPERIMENTS.md §Perf pair A):
+# the model axis joins batch/FSDP, tensor-parallel rules disabled.
+POLICIES = {
+    "default": None,
+    "dp": {"batch": ("pod", "data", "model"),
+           "embed": ("pod", "data", "model"),
+           "embed_out": ("pod", "data", "model"),
+           "heads": (), "kv_heads": (), "ffn": (), "vocab": (),
+           "mamba_inner": (), "mamba_inner2": ()},
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-operand bytes of every collective op in (post-SPMD) HLO.
+
+    These are GLOBAL bytes (the op as written moves its result shape per
+    participating device group); we report per-op totals and let the roofline
+    divide by chips x link bandwidth."""
+    out = {c: 0 for c in COLLECTIVES}
+    count = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("%") or s.startswith("ROOT"):
+            for c in COLLECTIVES:
+                if f" {c}(" in s or f" {c}-start(" in s:
+                    lhs = s.split(" = ", 1)
+                    if len(lhs) == 2:
+                        out[c] += _shape_bytes(lhs[1].split(c)[0])
+                        count[c] += 1
+                    break
+    return {"bytes": out, "count": count,
+            "total_bytes": int(sum(out.values()))}
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            quick_fail: bool = False, policy: str = "default") -> dict:
+    cfg = get_config(arch)
+    rec = {"arch": arch, "shape": shape_name, "policy": policy,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not shape_supported(cfg, shape_name):
+        rec["status"] = "skipped (DESIGN.md §5 gate)"
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        step, example_inputs, cfg2 = build(cfg, shape_name, mesh,
+                                           policy=POLICIES[policy])
+        lowered = jax.jit(step).lower(*example_inputs)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec["status"] = "ok"
+        rec["lower_s"] = round(t1 - t0, 1)
+        rec["compile_s"] = round(t2 - t1, 1)
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes")
+                if hasattr(mem, k)}
+        except Exception as e:                        # CPU backend gaps
+            rec["memory_error"] = str(e)
+        try:
+            cost = compiled.cost_analysis()
+            rec["cost"] = {k: float(v) for k, v in cost.items()
+                           if isinstance(v, (int, float))
+                           and k in ("flops", "bytes accessed",
+                                     "bytes accessed output", "transcendentals")}
+        except Exception as e:
+            rec["cost_error"] = str(e)
+        try:
+            rec["collectives"] = collective_bytes(compiled.as_text())
+        except Exception as e:
+            rec["collectives_error"] = str(e)
+    except Exception as e:
+        rec["status"] = "FAILED"
+        rec["error"] = "".join(traceback.format_exception_only(e)).strip()
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if quick_fail:
+            raise
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "" if policy == "default" else f"_{policy}"
+        fn = f"{arch}_{shape_name}_{rec['mesh']}{suffix}.json".replace("/", "-")
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run: lower + "
+                                 "compile every (arch x shape x mesh)")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--policy", default="default", choices=list(POLICIES))
+    ap.add_argument("--quick-fail", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape_name, mp, args.out,
+                              args.quick_fail, policy=args.policy)
+                line = (f"{rec['arch']:28s} {rec['shape']:12s} "
+                        f"{rec['mesh']:8s} {rec['status']}")
+                if rec["status"] == "ok":
+                    mem = rec.get("memory", {})
+                    tot = (mem.get("argument_size_in_bytes", 0)
+                           + mem.get("temp_size_in_bytes", 0))
+                    fl = rec.get("cost", {}).get("flops", 0)
+                    cb = rec.get("collectives", {}).get("total_bytes", 0)
+                    line += (f"  mem/dev={tot/2**30:.2f}GiB flops={fl:.3g} "
+                             f"coll={cb/2**30:.2f}GiB "
+                             f"compile={rec['compile_s']}s")
+                elif rec["status"] == "FAILED":
+                    n_fail += 1
+                    line += "  " + rec["error"][:160]
+                print(line, flush=True)
+    if n_fail:
+        print(f"{n_fail} FAILURES", flush=True)
+        sys.exit(1)
+    print("ALL OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

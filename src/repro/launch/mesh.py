@@ -1,0 +1,24 @@
+"""Mesh construction (functions, never module-level constants — importing
+this module must not touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) ("data", "model") = 256 chips.
+    Multi-pod:  (2, 16, 16) ("pod", "data", "model") = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many local devices exist (CPU tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch/FSDP axes present in this mesh ('pod' first if it exists)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,134 @@
+"""Sharding policy: logical parameter/state axes -> PartitionSpec.
+
+MaxText-style logical axis rules with divisibility fallbacks (DESIGN.md §6):
+
+  vocab                      -> model   (replicate if V % 16 != 0)
+  embed / embed_out / vocab_fsdp-ish dims -> (pod, data)  [ZeRO-3 / FSDP]
+  heads / kv_heads           -> model   (replicate if not divisible — phi3,
+                                         whisper, chatglm kv, xlstm)
+  ffn / experts / mamba_inner(2) -> model  (tensor / expert parallel)
+  batch                      -> (pod, data)
+  kv_seq                     -> data    ONLY for the long-context decode shape
+                                         (sequence-sharded cache)
+  everything else            -> replicated
+
+A rule only applies when the dim is divisible by the product of the mesh axis
+sizes; combined (pod, data) falls back to data alone, then to replication.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 0
+
+
+def _try(mesh, dim: int, *axis_names, used=()):
+    """Largest prefix-combination of (unused) axis_names that divides dim."""
+    names = [a for a in axis_names if _axis_size(mesh, a) and a not in used]
+    while names:
+        prod = 1
+        for a in names:
+            prod *= _axis_size(mesh, a)
+        if dim % prod == 0:
+            return tuple(names) if len(names) > 1 else names[0]
+        names = names[1:]          # drop 'pod' first, then 'data'
+    return None
+
+
+# default logical-axis -> candidate mesh axes (overridable per-run by a
+# `policy` dict, e.g. {"batch": ("pod","data","model"), "ffn": ()} for
+# pure-DP small models — see EXPERIMENTS.md §Perf pair A)
+DEFAULT_RULES = {
+    "vocab": ("model",),
+    "embed": ("pod", "data"), "embed_out": ("pod", "data"),
+    "enc_seq": ("pod", "data"), "dec_seq": ("pod", "data"),
+    "heads": ("model",), "kv_heads": ("model",),
+    "ffn": ("model",), "experts": ("model",),
+    "mamba_inner": ("model",), "mamba_inner2": ("model",),
+    "batch": ("pod", "data"),
+}
+
+
+def spec_for_axes(mesh, axes: tuple, shape: tuple, *,
+                  shard_kv_seq: bool = False, policy=None) -> P:
+    """Map one leaf's logical axes + shape to a PartitionSpec."""
+    entries = []
+    used = set()
+    rules = dict(DEFAULT_RULES)
+    if policy:
+        rules.update(policy)
+
+    def place(cand):
+        if cand is None:
+            return None
+        flat = cand if isinstance(cand, tuple) else (cand,)
+        if any(a in used for a in flat):
+            return None
+        used.update(flat)
+        return cand
+
+    for name, dim in zip(axes, shape):
+        cand = None
+        if name in rules:
+            cand = _try(mesh, dim, *rules[name], used=used)
+        elif name == "kv_seq" and shard_kv_seq:
+            # decode shapes: the cache dominates memory; shard its sequence
+            # over every mesh axis the batch didn't claim (KV heads rarely
+            # divide the model axis — sequence sharding is the TPU answer,
+            # GSPMD inserts the partial-softmax reductions)
+            cand = _try(mesh, dim, "pod", "data", "model", used=used)
+        entries.append(place(cand))
+    return P(*entries)
+
+
+def _is_axes(x):
+    return isinstance(x, tuple)
+
+
+def tree_specs(mesh, axes_tree, shape_tree, *, shard_kv_seq: bool = False,
+               policy=None):
+    """PartitionSpec pytree from parallel (axes, shapes) pytrees."""
+    return jax.tree.map(
+        lambda ax, sh: spec_for_axes(mesh, ax, sh.shape,
+                                     shard_kv_seq=shard_kv_seq, policy=policy),
+        axes_tree, shape_tree, is_leaf=_is_axes)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def with_sharding(mesh, shape_tree, spec_tree):
+    """Attach shardings to ShapeDtypeStructs (dry-run inputs)."""
+    return jax.tree.map(
+        lambda sds, s: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                            sharding=NamedSharding(mesh, s)),
+        shape_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))
+
+
+# ---------------------------------------------------------------------------
+# optimizer-state specs
+# ---------------------------------------------------------------------------
+
+def adam_state_specs(param_specs):
+    return {"step": P(), "m": param_specs, "v": param_specs}
+
+
+def adafactor_state_specs(param_specs, param_shapes, min_dim_factored=128):
+    def stat_spec(spec, sds):
+        sh = sds.shape
+        if len(sh) >= 2 and sh[-1] >= min_dim_factored \
+                and sh[-2] >= min_dim_factored:
+            return {"vr": P(*spec[:-1]) if len(spec) else P(),
+                    "vc": P(*(tuple(spec[:-2]) + (spec[-1],))) if len(spec) >= 2
+                    else P()}
+        return {"v": spec}
+
+    stats = jax.tree.map(stat_spec, param_specs, param_shapes,
+                         is_leaf=lambda x: isinstance(x, P))
+    return {"step": P(), "stats": stats}

@@ -1,0 +1,332 @@
+"""Jit-able train / prefill / decode steps + per-(arch x shape) input specs.
+
+This is the deployment surface: `build(cfg, shape_name, mesh)` returns the
+step function, fully-sharded example inputs (ShapeDtypeStructs — nothing is
+allocated), so callers can either `.lower().compile()` (dry-run) or feed real
+arrays (training runs, tests).
+
+The paper's technique enters through `consensus`: "allreduce" is the
+centralized baseline (GSPMD gradient reduction); "dec_admm" runs the
+generalized DEC-apx-GP update (core/federated.py) with one parameter opinion
+per consensus-axis member exchanged ring-wise (collective-permute).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import lm, encdec
+from ..models.act_sharding import use_mesh
+from ..models.common import axes_tree, shapes_tree
+from ..optim import adam, adafactor, apply_updates
+from . import sharding as shd
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4_096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32_768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1, long=True),
+}
+
+# long_500k gate (DESIGN.md §5): sub-quadratic archs run as-is; dense archs
+# run the sliding-window variant; whisper (enc-dec audio) skips.
+LONG_OK_NATIVE = {"jamba-v0.1-52b", "xlstm-350m"}
+LONG_SKIP = {"whisper-small"}
+LONG_WINDOW = 8_192
+
+# gradient-accumulation factor for train_4k (saved-residual memory control);
+# tuned so L * B_loc/micro * S * d * 2B stays well under 16 GB/chip HBM.
+MICROBATCH = {
+    "dbrx-132b": 8,
+    "llama4-maverick-400b-a17b": 8,
+    "internvl2-76b": 16,
+    "jamba-v0.1-52b": 4,
+    "granite-3-8b": 4,
+    "phi3-medium-14b": 4,
+    "chatglm3-6b": 2,
+    "whisper-small": 8,     # 12 heads % 16 -> attention replicated on model;
+                            # microbatching bounds the replicated activations
+}
+
+
+def shape_supported(cfg, shape_name: str) -> bool:
+    if shape_name == "long_500k" and cfg.name in LONG_SKIP:
+        return False
+    return True
+
+
+def cfg_for_shape(cfg, shape_name: str):
+    """Per-shape config adjustments (window variant, remat for training)."""
+    if shape_name == "train_4k":
+        cfg = cfg.with_overrides(remat=True)
+    if shape_name == "long_500k" and cfg.name not in LONG_OK_NATIVE:
+        cfg = cfg.with_overrides(window=LONG_WINDOW)
+    if cfg.encdec and shape_name in ("decode_32k", "long_500k", "prefill_32k"):
+        seq = SHAPES[shape_name]["seq"]
+        if cfg.max_seq < seq + 1:
+            cfg = cfg.with_overrides(max_seq=seq + 1)
+    return cfg
+
+
+def pick_optimizer(cfg, lr=1e-4):
+    # llama4-400b's fp32 adam state (8 B/param) exceeds 16 GB/chip at 256
+    # chips; adafactor's factored stats fit (DESIGN.md §6).
+    if cfg.name.startswith("llama4"):
+        return adafactor(lr), "adafactor"
+    return adam(lr), "adam"
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, optimizer, microbatch: int = 1):
+    """microbatch > 1: gradient accumulation — scan over micro-slices of the
+    batch, f32 grad accumulator. Bounds the per-layer saved-residual memory
+    (B_loc * S * d * L / microbatch), which is what actually limits the
+    40-80 layer archs at 65k tokens/device (DESIGN.md §6)."""
+    loss = encdec.loss_fn if cfg.encdec else lm.loss_fn
+    from ..models.act_sharding import constrain
+
+    def train_step(params, opt_state, batch):
+        grad_fn = jax.value_and_grad(
+            lambda p, b: loss(cfg, p, b), has_aux=True)
+        if microbatch == 1:
+            (l, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(t):
+                t = t.reshape((microbatch, t.shape[0] // microbatch)
+                              + t.shape[1:])
+                return constrain(t, (None, "batch") + (None,) * (t.ndim - 2))
+            mb = jax.tree.map(split, batch)
+
+            def acc_step(gacc, b):
+                (l, m), g = grad_fn(params, b)
+                gacc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / microbatch,
+                    gacc, g)
+                return gacc, l
+
+            gacc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            grads, ls = jax.lax.scan(acc_step, gacc0, mb)
+            l, metrics = jnp.mean(ls), {}
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, l, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, max_len: int):
+    if cfg.encdec:
+        def prefill(params, frames, tokens):
+            enc_out = encdec.encode(cfg, params, frames)
+            cache = encdec.init_decode_cache(cfg, tokens.shape[0], max_len,
+                                             params["embed"].dtype)
+            logits, cache = encdec.decode(cfg, params, tokens, enc_out,
+                                          cache=cache, logits_slice=1)
+            return logits, cache, enc_out
+        return prefill
+
+    def prefill(params, tokens, embeds=None):
+        cache = lm.init_decode_cache(cfg, tokens.shape[0], max_len,
+                                     params["embed"].dtype)
+        logits, _, cache = lm.forward(cfg, params, tokens, embeds=embeds,
+                                      cache=cache, logits_slice=1)
+        return logits, cache
+    return prefill
+
+
+def make_decode_step(cfg):
+    if cfg.encdec:
+        def decode(params, cache, enc_out, tokens):
+            logits, cache = encdec.decode(cfg, params, tokens, enc_out,
+                                          cache=cache)
+            return logits, cache
+        return decode
+
+    def decode(params, cache, tokens):
+        logits, _, cache = lm.forward(cfg, params, tokens, cache=cache)
+        return logits, cache
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# federated (paper technique) train step — generalized DEC-apx-GP (eq. 34)
+# ---------------------------------------------------------------------------
+
+def make_federated_train_step(cfg, *, n_agents: int, rho: float = 1.0,
+                              kappa: float = 10.0, exchange: bool = True):
+    """Each of the `n_agents` consensus-axis members keeps its own parameter
+    opinion theta_i and dual p_i; one step = local grad + ring ADMM update.
+    params/duals carry a leading (n_agents,) dim (sharded over 'pod' or
+    'data'); batch carries (n_agents, B_local, S).
+
+    exchange=False builds the LOCAL-ONLY variant (no neighbor messages, no
+    dual update — a pure proximal-gradient step with the same step size).
+    Alternating k-1 local steps with one exchange step implements periodic
+    consensus ("LocalADMM", EXPERIMENTS.md §Perf pair C): collective bytes
+    drop by k at a quantified consensus-error cost."""
+    loss = encdec.loss_fn if cfg.encdec else lm.loss_fn
+
+    def step(params_stacked, duals, batch_stacked):
+        def local_loss(p, b):
+            return loss(cfg, p, b)
+        (ls, _), grads = jax.vmap(
+            jax.value_and_grad(local_loss, has_aux=True))(
+                params_stacked, batch_stacked)
+
+        deg = 2.0 if n_agents > 2 else 1.0
+
+        def upd(th, pdual, g):
+            if exchange:
+                if n_agents > 2:
+                    nbr = jnp.roll(th, 1, axis=0) + jnp.roll(th, -1, axis=0)
+                else:
+                    nbr = jnp.roll(th, 1, axis=0)
+                p_next = pdual + rho * (deg * th - nbr)              # (34a)
+                th_next = (rho * nbr - g.astype(th.dtype)
+                           + (kappa + deg * rho) * th - p_next) \
+                    / (kappa + 2.0 * deg * rho)                      # (34b)
+            else:
+                # local prox step, same effective step size, no messages
+                p_next = pdual
+                th_next = th - g.astype(th.dtype) / (kappa + 2.0 * deg * rho)
+            return th_next.astype(th.dtype), p_next
+
+        out = jax.tree.map(upd, params_stacked, duals, grads)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_duals = jax.tree.map(lambda t: t[1], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, new_duals, jnp.mean(ls)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct, sharded — zero allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_structs(cfg, dtype=jnp.bfloat16):
+    mod = encdec if cfg.encdec else lm
+    defs = mod.param_defs(cfg)
+    return shapes_tree(defs, dtype), axes_tree(defs)
+
+
+def param_specs(cfg, mesh, dtype=jnp.bfloat16):
+    shapes, axes = param_structs(cfg, dtype)
+    return shapes, shd.tree_specs(mesh, axes, shapes)
+
+
+def batch_structs(cfg, shape_name: str, dtype=jnp.bfloat16):
+    """(shapes, logical_axes) for the train/prefill token batch."""
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    tok_ax = ("batch", "seq")
+    if cfg.encdec:
+        shapes = {"frames": _sds((B, cfg.enc_seq, cfg.d_model), dtype),
+                  "tokens": _sds((B, S), jnp.int32),
+                  "labels": _sds((B, S), jnp.int32)}
+        axes = {"frames": ("batch", "enc_seq_act", "embed_act"),
+                "tokens": tok_ax, "labels": tok_ax}
+    elif cfg.vis_tokens:
+        s_text = S - cfg.vis_tokens
+        shapes = {"tokens": _sds((B, s_text), jnp.int32),
+                  "labels": _sds((B, s_text), jnp.int32),
+                  "embeds": _sds((B, cfg.vis_tokens, cfg.d_model), dtype)}
+        axes = {"tokens": tok_ax, "labels": tok_ax,
+                "embeds": ("batch", "vis_act", "embed_act")}
+    else:
+        shapes = {"tokens": _sds((B, S), jnp.int32),
+                  "labels": _sds((B, S), jnp.int32)}
+        axes = {"tokens": tok_ax, "labels": tok_ax}
+    return shapes, axes
+
+
+def cache_structs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    mod = encdec if cfg.encdec else lm
+    shapes = jax.eval_shape(
+        lambda: mod.init_decode_cache(cfg, batch, max_len, dtype))
+    axes = mod.cache_axes(cfg)
+    return shapes, axes
+
+
+def build(cfg, shape_name: str, mesh, dtype=jnp.bfloat16, lr=1e-4,
+          policy=None):
+    """Returns (step_fn, example_inputs tuple of sharded ShapeDtypeStructs).
+
+    step signatures:
+      train  : (params, opt_state, batch)
+      prefill: (params, [frames,] tokens[, embeds])
+      decode : (params, cache, [enc_out,] tokens)
+    """
+    cfg = cfg_for_shape(cfg, shape_name)
+    info = SHAPES[shape_name]
+    kind = info["kind"]
+    B, S = info["batch"], info["seq"]
+    shard_seq = kind == "decode"   # cache-sequence sharding (sharding.py)
+
+    def _meshed(fn):
+        def wrapped(*a, **kw):
+            with use_mesh(mesh, shard_kv_seq=shard_seq, policy=policy):
+                return fn(*a, **kw)
+        return wrapped
+
+    p_shapes, p_axes = param_structs(cfg, dtype)
+    p_specs = shd.tree_specs(mesh, p_axes, p_shapes, policy=policy)
+    params_in = shd.with_sharding(mesh, p_shapes, p_specs)
+
+    if kind == "train":
+        optimizer, opt_name = pick_optimizer(cfg, lr)
+        step = _meshed(make_train_step(cfg, optimizer,
+                                       microbatch=MICROBATCH.get(cfg.name, 1)))
+        opt_shapes = jax.eval_shape(optimizer.init, p_shapes)
+        if opt_name == "adam":
+            opt_specs = shd.adam_state_specs(p_specs)
+        else:
+            opt_specs = shd.adafactor_state_specs(p_specs, p_shapes)
+        opt_in = shd.with_sharding(mesh, opt_shapes, opt_specs)
+        b_shapes, b_axes = batch_structs(cfg, shape_name, dtype)
+        b_specs = shd.tree_specs(mesh, b_axes, b_shapes, policy=policy)
+        batch_in = shd.with_sharding(mesh, b_shapes, b_specs)
+        return step, (params_in, opt_in, batch_in), cfg
+
+    if kind == "prefill":
+        step = _meshed(make_prefill_step(cfg, max_len=S + 1))
+        b_shapes, b_axes = batch_structs(cfg, shape_name, dtype)
+        b_specs = shd.tree_specs(mesh, b_axes, b_shapes, policy=policy)
+        b_in = shd.with_sharding(mesh, b_shapes, b_specs)
+        if cfg.encdec:
+            return step, (params_in, b_in["frames"], b_in["tokens"]), cfg
+        if cfg.vis_tokens:
+            return step, (params_in, b_in["tokens"], b_in["embeds"]), cfg
+        return step, (params_in, b_in["tokens"]), cfg
+
+    # decode: one new token against a cache of S entries
+    step = _meshed(make_decode_step(cfg))
+    c_shapes, c_axes = cache_structs(cfg, B, S, dtype)
+    c_specs = shd.tree_specs(mesh, c_axes, c_shapes, shard_kv_seq=shard_seq,
+                             policy=policy)
+    cache_in = shd.with_sharding(mesh, c_shapes, c_specs)
+    tok = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32,
+        sharding=shd.named(mesh, shd.spec_for_axes(
+            mesh, ("batch", "seq"), (B, 1))))
+    if cfg.encdec:
+        enc_spec = shd.spec_for_axes(mesh, ("batch", "enc_seq_act",
+                                            "embed_act"),
+                                     (B, cfg.enc_seq, cfg.d_model))
+        enc_in = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), dtype,
+                                      sharding=shd.named(mesh, enc_spec))
+        return step, (params_in, cache_in, enc_in, tok), cfg
+    return step, (params_in, cache_in, tok), cfg

@@ -1,0 +1,5 @@
+from .config import ArchConfig
+from . import lm, encdec, common, attention, moe, mamba, xlstm
+
+__all__ = ["ArchConfig", "lm", "encdec", "common", "attention", "moe",
+           "mamba", "xlstm"]

@@ -1,0 +1,36 @@
+"""Activation sharding hints: model code calls constrain(x, logical_axes);
+the launcher installs a mesh via use_mesh(); without one, it's a no-op.
+
+This keeps model code mesh-agnostic while letting GSPMD pin the known-large
+intermediates (MoE dispatch buffers, the residual stream inside scans) to the
+intended layout instead of relying purely on propagation.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+
+import jax
+from jax.sharding import NamedSharding
+
+_CTX = ContextVar("act_sharding_ctx", default=None)  # (mesh, kv_seq, policy)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, shard_kv_seq: bool = False, policy=None):
+    token = _CTX.set((mesh, shard_kv_seq, policy))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def constrain(x, axes: tuple):
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, shard_kv_seq, policy = ctx
+    from ..launch.sharding import spec_for_axes
+    spec = spec_for_axes(mesh, axes, x.shape, shard_kv_seq=shard_kv_seq,
+                         policy=policy)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

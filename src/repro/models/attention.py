@@ -1,0 +1,108 @@
+"""Multi-head / grouped-query attention with RoPE, KV cache, sliding window.
+
+Layout: activations (B, S, d); q/k/v (B, S, H|KH, hd). The attention inner
+product runs through kernels/ops.flash_attention (Pallas on TPU, jnp oracle
+elsewhere). Decode (Sq == 1) always uses the jnp path — it is a GEMV, not a
+kernel-worthy workload, and GSPMD handles cache-sequence sharding there.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .common import ParamDef, apply_rope, rope_freqs
+
+
+def attn_defs(cfg, layers_axis: str = "layers"):
+    d, H, KH = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    return {
+        "wq": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, KH, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, KH, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((H, hd, d), ("heads", "head_dim", "embed_out")),
+    }
+
+
+def attention(p, x, cfg, *, positions, cache=None, causal=True,
+              kv_x=None):
+    """Returns (out (B,S,d), new_cache).
+
+    cache: dict(k, v (B, S_max, KH, hd), index scalar) for autoregressive
+    decode. kv_x: cross-attention source (encoder states) — no cache, no rope.
+    """
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+
+    if cfg.rope != "none" and kv_x is None:
+        frac = 0.5 if cfg.rope == "half" else 1.0
+        cos, sin, rot = rope_freqs(hd, positions, cfg.rope_theta, frac)
+        q = apply_rope(q, cos, sin, rot)
+        k = apply_rope(k, cos, sin, rot)
+
+    new_cache = None
+    if cache is not None:
+        idx = cache["index"]
+        z = jnp.zeros((), idx.dtype)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (z, idx, z, z))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (z, idx, z, z))
+        new_cache = {"k": ck, "v": cv, "index": idx + S}
+        if S == 1:
+            # decode: attend over the whole (masked) cache
+            k, v = ck, cv
+        # prefill (S > 1, idx == 0): attend over the freshly computed k/v —
+        # the padded cache tail would break right-aligned causal masking
+
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+
+    window = cfg.window or None
+    if cache is not None and S == 1:
+        out = _decode_attention(qt, kt, vt, cache["index"], window)
+    else:
+        out = ops.flash_attention(
+            qt, kt, vt, causal=causal and kv_x is None, window=window,
+            use_pallas=cfg.use_pallas)
+    out = jnp.transpose(out, (0, 2, 1, 3))          # (B, S, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def _decode_attention(q, k, v, valid_len, window):
+    """Single-token decode over a (possibly sequence-sharded) cache.
+
+    q (B,H,1,hd); k/v (B,KH,Smax,hd). Masks positions >= valid_len+1 (the new
+    token was just written at `valid_len`). GSPMD turns the reductions over a
+    sharded S axis into partial-softmax collectives automatically.
+    """
+    B, H, _, hd = q.shape
+    KH, S = k.shape[1], k.shape[2]
+    g = H // KH
+    qg = q.reshape(B, KH, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg,
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    pos = jnp.arange(S)
+    mask = pos[None, None, None, :] <= valid_len
+    if window:
+        mask = mask & (pos[None, None, None, :] > valid_len - window)
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, H, 1, hd).astype(q.dtype)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype, kv_heads=None, hd=None):
+    KH = kv_heads or cfg.num_kv_heads
+    hd = hd or cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, KH, hd), dtype),
+        "v": jnp.zeros((batch, max_len, KH, hd), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,110 @@
+"""Shared model components: parameter definition DSL (shapes + logical axes),
+norms, RoPE, embeddings, MLPs.
+
+Every parameter is declared as ParamDef(shape, logical_axes, init); logical
+axes are strings ('embed', 'heads', 'kv_heads', 'head_dim', 'ffn', 'experts',
+'vocab', 'layers', ...) that launch/sharding.py maps to mesh axes with
+divisibility fallbacks. This keeps model code mesh-agnostic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple            # logical axis names, len == len(shape)
+    init: str = "normal"   # normal | zeros | ones | small_normal
+    scale_axis: int = 0    # fan-in axis for normal init
+
+
+def init_param(key, d: ParamDef, dtype):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    fan_in = d.shape[d.scale_axis] if d.shape else 1
+    scale = 0.02 if d.init == "small_normal" else (1.0 / max(fan_in, 1)) ** 0.5
+    return (scale * jax.random.normal(key, d.shape, jnp.float32)).astype(dtype)
+
+
+def init_tree(key, defs, dtype):
+    """Materialize a pytree of ParamDef into arrays (deterministic key split)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    return treedef.unflatten([init_param(k, d, dtype) for k, d in zip(keys, leaves)])
+
+
+def axes_tree(defs):
+    """Extract the logical-axes pytree (same structure, tuples at leaves)."""
+    return jax.tree.map(lambda d: d.axes, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def shapes_tree(defs, dtype):
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, positions, theta: float = 10_000.0,
+               fraction: float = 1.0):
+    """cos/sin tables. fraction=0.5 -> rotary on half the dims (chatglm 2d)."""
+    rot = int(head_dim * fraction)
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., rot/2)
+    return jnp.cos(ang), jnp.sin(ang), rot
+
+
+def apply_rope(x, cos, sin, rot: int):
+    """x (..., S, H, hd); cos/sin (..., S, rot/2) broadcast over heads."""
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    out = jnp.concatenate([out, xp], axis=-1) if rot < x.shape[-1] else out
+    return out.astype(x.dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu(x, wg, wu, wd):
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    return h @ wd
+
+
+def gelu_mlp(x, w1, w2):
+    return gelu(x @ w1) @ w2
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token CE in f32; labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    valid = labels >= 0
+    if mask is not None:
+        valid = valid & (mask > 0)
+    nll = (lse - ll) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)

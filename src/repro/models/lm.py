@@ -1,0 +1,383 @@
+"""Decoder-only language model covering the dense / moe / hybrid (jamba) /
+ssm (xlstm) / vlm families, with scan-over-layers, KV/SSM caches, and a
+single functional API:
+
+    defs   = param_defs(cfg)                  # ParamDef pytree (+ logical axes)
+    params = common.init_tree(key, defs, dtype)
+    logits, aux, cache = forward(cfg, params, tokens, ...)
+    loss, aux = loss_fn(cfg, params, batch)
+
+Layer stacking (compile-time friendly on 512 fake devices; DESIGN.md §6):
+  dense/moe : scan over groups of `moe_every` layers (group = dense*(k-1) +
+              one MoE layer; k == 1 -> homogeneous stack).
+  jamba     : scan over superblocks of `attention_every` (=8) layers:
+              attn(+dense FFN) at position 0, then (k-1)/2+? mamba+MoE layers
+              and the remaining mamba+dense layers. (The real Jamba
+              interleaves MoE every other layer; we run the same LAYER COUNTS
+              — 4 attn / 28 mamba / 16 MoE FFNs for jamba-52b — grouped
+              MoE-first within a superblock. FLOPs/memory/collectives are
+              identical; only the exact function composition order differs.
+              Noted in DESIGN.md §9.)
+  xlstm     : scan over groups of `slstm_every` blocks (mLSTM*(k-1) + sLSTM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .act_sharding import constrain
+from .common import (ParamDef, init_tree, cross_entropy, rmsnorm, swiglu,
+                     gelu_mlp)
+from .attention import attn_defs, attention, init_cache
+from .moe import moe_defs, moe_ffn
+from .mamba import mamba_defs, mamba_layer, init_mamba_state
+from .xlstm import (mlstm_defs, mlstm_layer, init_mlstm_state, slstm_defs,
+                    slstm_layer, init_slstm_state)
+
+
+def _stack_defs(defs, n: int):
+    """Prefix every ParamDef with a scanned `layers` axis of size n."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init,
+                           d.scale_axis + 1),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _mlp_defs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_act == "swiglu":
+        return {"wg": ParamDef((d, f), ("embed", "ffn")),
+                "wu": ParamDef((d, f), ("embed", "ffn")),
+                "wd": ParamDef((f, d), ("ffn", "embed_out"))}
+    return {"w1": ParamDef((d, f), ("embed", "ffn")),
+            "w2": ParamDef((f, d), ("ffn", "embed_out"))}
+
+
+def _norm_def(cfg):
+    return ParamDef((cfg.d_model,), ("embed_norm",), "ones")
+
+
+def _attn_layer_defs(cfg, moe: bool):
+    out = {"ln1": _norm_def(cfg), "attn": attn_defs(cfg), "ln2": _norm_def(cfg)}
+    out["moe" if moe else "mlp"] = moe_defs(cfg) if moe else _mlp_defs(cfg)
+    return out
+
+
+def _mamba_layer_defs(cfg, moe: bool):
+    out = {"ln1": _norm_def(cfg), "mamba": mamba_defs(cfg)}
+    if moe:
+        out["ln2"] = _norm_def(cfg)
+        out["moe"] = moe_defs(cfg)
+    return out
+
+
+def _jamba_split(cfg):
+    """(n_groups, n_moe_mamba, n_dense_mamba) per superblock."""
+    k = cfg.attention_every
+    n_groups = cfg.num_layers // k
+    n_mamba = k - 1
+    n_moe = (n_mamba + 1) // 2 if cfg.num_experts else 0   # 7 -> 4 (16 total)
+    return n_groups, n_moe, n_mamba - n_moe
+
+
+def param_defs(cfg):
+    d, V = cfg.d_model, cfg.vocab_size
+    defs = {
+        "embed": ParamDef((V, d), ("vocab", "embed"), "small_normal"),
+        "final_norm": _norm_def(cfg),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, V), ("embed", "vocab"))
+    bt = cfg.block_type
+    if bt == "transformer":
+        k = cfg.moe_every if cfg.num_experts else 1
+        n_groups = cfg.num_layers // k
+        group = {}
+        if cfg.num_experts:
+            if k > 1:
+                group["dense"] = _stack_defs(_attn_layer_defs(cfg, False), k - 1)
+            group["moe"] = _attn_layer_defs(cfg, True)
+        else:
+            group["dense"] = _stack_defs(_attn_layer_defs(cfg, False), 1)
+        defs["blocks"] = _stack_defs(group, n_groups)
+    elif bt == "jamba":
+        n_groups, n_moe, n_dense = _jamba_split(cfg)
+        group = {"attn": _attn_layer_defs(cfg, False)}
+        if n_moe:
+            group["mamba_moe"] = _stack_defs(_mamba_layer_defs(cfg, True), n_moe)
+        if n_dense:
+            group["mamba_dense"] = _stack_defs(_mamba_layer_defs(cfg, False),
+                                               n_dense)
+        defs["blocks"] = _stack_defs(group, n_groups)
+    elif bt == "xlstm":
+        k = cfg.slstm_every
+        n_groups = cfg.num_layers // k
+        group = {"slstm": {"ln": _norm_def(cfg), "cell": slstm_defs(cfg),
+                           "ln2": _norm_def(cfg), "mlp": _mlp_defs(cfg)}}
+        if k > 1:
+            group["mlstm"] = _stack_defs({"ln": _norm_def(cfg),
+                                          "cell": mlstm_defs(cfg)}, k - 1)
+        defs["blocks"] = _stack_defs(group, n_groups)
+    else:
+        raise ValueError(bt)
+    return defs
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    return init_tree(key, param_defs(cfg), dtype)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _mlp(p, x, cfg):
+    if cfg.mlp_act == "swiglu":
+        return swiglu(x, p["wg"], p["wu"], p["wd"])
+    return gelu_mlp(x, p["w1"], p["w2"])
+
+
+def _attn_block(p, x, cfg, positions, cache, moe: bool):
+    h, new_cache = attention(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                             cfg, positions=positions, cache=cache)
+    x = x + h
+    y = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if moe:
+        out, aux = moe_ffn(p["moe"], y, cfg)
+    else:
+        out, aux = _mlp(p["mlp"], y, cfg), jnp.zeros((), jnp.float32)
+    return x + out, new_cache, aux
+
+
+def _mamba_block(p, x, cfg, state, moe: bool):
+    h, new_state = mamba_layer(p["mamba"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                               cfg, state=state)
+    x = x + h
+    if moe:
+        out, aux = moe_ffn(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg)
+        x = x + out
+    else:
+        aux = jnp.zeros((), jnp.float32)
+    return x, new_state, aux
+
+
+def _scan_sub(fn, params_stacked, x, states_stacked):
+    """Scan a stacked homogeneous sub-group.
+
+    fn(p, x, state) -> (x, new_state, aux)."""
+    def body(carry, xs):
+        x, aux_acc = carry
+        p, st = xs
+        x, st2, aux = fn(p, x, st)
+        return (x, aux_acc + aux), st2
+
+    (x, aux), new_states = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params_stacked, states_stacked))
+    return x, new_states, aux
+
+
+def forward(cfg, params, tokens, *, embeds=None, cache=None, positions=None,
+            logits_slice: int = 0):
+    """tokens (B, S_text) int32; embeds (B, P, d) optional stub-frontend
+    prefix (VLM patches / fused audio). Returns (logits, aux_loss, new_cache).
+    """
+    dt = params["embed"].dtype
+    x = params["embed"][tokens].astype(dt)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(dt), x], axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        start = cache["index"] if cache is not None else 0
+        positions = start + jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    states = cache["blocks"] if cache is not None else _zero_states(
+        cfg, B, dt, for_cache=False)
+    bt = cfg.block_type
+    zero = jnp.zeros((), jnp.float32)
+
+    def group_fn(carry, xs):
+        x, aux_acc = carry
+        x = constrain(x, ("batch", None, None))   # pin the residual stream
+        p, st = xs
+        aux_total = zero
+        new_st = {}
+        if bt == "transformer":
+            if "dense" in p:
+                x, s2, aux = _scan_sub(
+                    lambda pp, xx, ss: _attn_block(pp, xx, cfg, positions, ss,
+                                                   False),
+                    p["dense"], x, st["dense"] if st else None)
+                new_st["dense"] = s2
+                aux_total += aux
+            if "moe" in p:
+                x, c2, aux = _attn_block(p["moe"], x, cfg, positions,
+                                         st["moe"] if st else None, True)
+                new_st["moe"] = c2
+                aux_total += aux
+        elif bt == "jamba":
+            x, c2, aux = _attn_block(p["attn"], x, cfg, positions,
+                                     st["attn"], False)
+            new_st["attn"] = c2
+            aux_total += aux
+            if "mamba_moe" in p:
+                x, s2, aux = _scan_sub(
+                    lambda pp, xx, ss: _mamba_block(pp, xx, cfg, ss, True),
+                    p["mamba_moe"], x, st["mamba_moe"])
+                new_st["mamba_moe"] = s2
+                aux_total += aux
+            if "mamba_dense" in p:
+                x, s2, aux = _scan_sub(
+                    lambda pp, xx, ss: _mamba_block(pp, xx, cfg, ss, False),
+                    p["mamba_dense"], x, st["mamba_dense"])
+                new_st["mamba_dense"] = s2
+        elif bt == "xlstm":
+            if "mlstm" in p:
+                def fx(pp, xx, ss):
+                    h, s2 = mlstm_layer(pp["cell"],
+                                        rmsnorm(xx, pp["ln"], cfg.norm_eps),
+                                        cfg, state=ss)
+                    return xx + h, s2, zero
+                x, s2, _ = _scan_sub(fx, p["mlstm"], x, st["mlstm"])
+                new_st["mlstm"] = s2
+            ps = p["slstm"]
+            h, s2 = slstm_layer(ps["cell"], rmsnorm(x, ps["ln"], cfg.norm_eps),
+                                cfg, state=st["slstm"])
+            x = x + h
+            x = x + _mlp(ps["mlp"], rmsnorm(x, ps["ln2"], cfg.norm_eps), cfg)
+            new_st["slstm"] = s2
+        return (x, aux_acc + aux_total), new_st
+
+    if cfg.remat:
+        if cfg.remat_policy == "dots":
+            group_fn = jax.checkpoint(
+                group_fn,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            group_fn = jax.checkpoint(group_fn)
+    (x, aux), new_states = jax.lax.scan(group_fn, (x, zero),
+                                        (params["blocks"], states))
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if logits_slice:
+        x = x[:, -logits_slice:]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    new_cache = ({"blocks": new_states, "index": cache["index"] + S}
+                 if cache is not None else None)
+    return logits, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# caches / states
+# ---------------------------------------------------------------------------
+
+def _zero_states(cfg, B, dtype, for_cache: bool, max_len: int = 0):
+    """Stacked per-layer states matching the block structure.
+
+    for_cache=False (training): attention layers carry no state (None);
+    recurrent layers still need zero initial states.
+    """
+    bt = cfg.block_type
+
+    def attn_state():
+        return init_cache(cfg, B, max_len, dtype) if for_cache else None
+
+    def stack(tree, n):
+        return jax.tree.map(
+            lambda t: jnp.broadcast_to(t, (n,) + t.shape), tree)
+
+    if bt == "transformer":
+        k = cfg.moe_every if cfg.num_experts else 1
+        n_groups = cfg.num_layers // k
+        group = {}
+        if cfg.num_experts:
+            if k > 1:
+                group["dense"] = stack(attn_state(), k - 1)
+            group["moe"] = attn_state()
+        else:
+            group["dense"] = stack(attn_state(), 1)
+        return stack(group, n_groups)
+    if bt == "jamba":
+        n_groups, n_moe, n_dense = _jamba_split(cfg)
+        group = {"attn": attn_state()}
+        ms = init_mamba_state(cfg, B, dtype)
+        if n_moe:
+            group["mamba_moe"] = stack(ms, n_moe)
+        if n_dense:
+            group["mamba_dense"] = stack(ms, n_dense)
+        return stack(group, n_groups)
+    if bt == "xlstm":
+        k = cfg.slstm_every
+        n_groups = cfg.num_layers // k
+        group = {"slstm": init_slstm_state(cfg, B)}
+        if k > 1:
+            group["mlstm"] = stack(init_mlstm_state(cfg, B), k - 1)
+        return stack(group, n_groups)
+    raise ValueError(bt)
+
+
+def init_decode_cache(cfg, batch: int, max_len: int, dtype=jnp.float32):
+    return {"blocks": _zero_states(cfg, batch, dtype, True, max_len),
+            "index": jnp.zeros((), jnp.int32)}
+
+
+def cache_axes(cfg):
+    """Logical-axes pytree mirroring init_decode_cache (for sharding.py)."""
+    is_ax = lambda x: isinstance(x, tuple)
+    attn_ax = {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+               "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+               "index": ()}
+    mamba_ax = {"conv": ("batch", "conv_k", "mamba_inner"),
+                "h": ("batch", "mamba_inner", "mamba_state")}
+    mlstm_ax = {"C": ("batch", "heads", "head_dim", "head_dim_r"),
+                "n": ("batch", "heads", "head_dim"),
+                "m": ("batch", "heads")}
+    slstm_ax = {k: ("batch", "heads", "head_dim") for k in ("h", "c", "n", "m")}
+
+    def stack(tree):
+        return jax.tree.map(lambda ax: ("layers",) + ax, tree, is_leaf=is_ax)
+
+    bt = cfg.block_type
+    if bt == "transformer":
+        k = cfg.moe_every if cfg.num_experts else 1
+        group = {}
+        if cfg.num_experts:
+            if k > 1:
+                group["dense"] = stack(attn_ax)
+            group["moe"] = attn_ax
+        else:
+            group["dense"] = stack(attn_ax)
+    elif bt == "jamba":
+        _, n_moe, n_dense = _jamba_split(cfg)
+        group = {"attn": attn_ax}
+        if n_moe:
+            group["mamba_moe"] = stack(mamba_ax)
+        if n_dense:
+            group["mamba_dense"] = stack(mamba_ax)
+    elif bt == "xlstm":
+        group = {"slstm": slstm_ax}
+        if cfg.slstm_every > 1:
+            group["mlstm"] = stack(mlstm_ax)
+    else:
+        raise ValueError(bt)
+    return {"blocks": stack(group), "index": ()}
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg, params, batch, aux_weight: float = 0.01):
+    """batch: dict(tokens (B,S), labels (B,S), [embeds (B,P,d)]).
+
+    labels use -1 for ignored positions; for VLM the patch-prefix positions
+    are padded with -1 automatically.
+    """
+    logits, aux, _ = forward(cfg, params, batch["tokens"],
+                             embeds=batch.get("embeds"))
+    labels = batch["labels"]
+    if batch.get("embeds") is not None:
+        pad = -jnp.ones(batch["embeds"].shape[:2], labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    ce = cross_entropy(logits, labels)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}

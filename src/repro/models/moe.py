@@ -1,0 +1,87 @@
+"""Mixture-of-Experts FFN with GShard-style capacity dispatch (top-k, groups).
+
+TPU-native expert parallelism (DESIGN.md §5-6): experts live on the `model`
+mesh axis, tokens on `data`. The dispatch one-hot einsum produces expert
+buffers already sharded by expert — each model-shard computes its expert
+slice against locally available tokens, and the combine einsum's contraction
+over experts becomes a single psum over `model` (fused with the row-parallel
+down-projection reduce). No host-side gather/scatter, no dynamic shapes.
+
+Capacity: C = ceil(k * g * capacity_factor / E) per group of g tokens;
+overflow tokens drop (standard GShard semantics) — exact top-k compute would
+need sort-based megablocks, kept as a perf-iteration candidate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef
+from .act_sharding import constrain
+
+
+def moe_defs(cfg):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": ParamDef((d, E), ("embed", "experts_logits"), "small_normal"),
+        "wg": ParamDef((E, d, f), ("experts", "embed", "ffn"), scale_axis=1),
+        "wu": ParamDef((E, d, f), ("experts", "embed", "ffn"), scale_axis=1),
+        "wd": ParamDef((E, f, d), ("experts", "ffn", "embed_out"), scale_axis=1),
+    }
+
+
+def moe_ffn(p, x, cfg):
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    g = min(cfg.moe_group_size, T)
+    while T % g:                       # largest divisor of T <= group_size
+        g -= 1
+    G = T // g
+    cap = int(max(1, round(k * g * cfg.moe_capacity_factor / E)))
+    if S == 1:
+        cap = g * k          # decode: drop-free (buffers are tiny at S=1)
+
+    xt = x.reshape(G, g, d)
+    xt = constrain(xt, ("batch", None, None))
+    logits = jnp.einsum("Ggd,de->Gge", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                     # (G, g, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # load-balance auxiliary loss (Switch): E * sum_e f_e * p_e
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)       # (G, g, k, E)
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))        # (E,)
+    aux = E * jnp.sum(me * ce) / k
+
+    # choice-major priority positions within each expert (no C dim yet)
+    oh_cm = jnp.transpose(onehot, (0, 2, 1, 3)).reshape(G, k * g, E)
+    pos = jnp.cumsum(oh_cm, axis=1) - oh_cm                    # (G, kg, E)
+    keep = (pos < cap) * oh_cm
+    pos = pos.reshape(G, k, g, E)
+    keep = keep.reshape(G, k, g, E)
+
+    cdt = x.dtype
+    # loop over the k choices: one (G, g, E, C) one-hot at a time instead of
+    # a k-times-larger (G, kg, E, C) tensor (memory-critical for top-4)
+    disp = 0.0
+    comb = 0.0
+    for j in range(k):
+        slot_j = jax.nn.one_hot(pos[:, j].astype(jnp.int32), cap,
+                                dtype=cdt) * keep[:, j][..., None].astype(cdt)
+        disp = disp + slot_j
+        comb = comb + slot_j * top_w[:, :, j][..., None, None].astype(cdt)
+    disp = constrain(disp, ("batch", None, "experts", None))
+    comb = constrain(comb, ("batch", None, "experts", None))
+
+    expert_in = jnp.einsum("GgEC,Ggd->GECd", disp, xt)
+    expert_in = constrain(expert_in, ("batch", "experts", None, None))
+    h = jax.nn.silu(jnp.einsum("GECd,Edf->GECf", expert_in, p["wg"])) \
+        * jnp.einsum("GECd,Edf->GECf", expert_in, p["wu"])
+    h = constrain(h, ("batch", "experts", None, "ffn"))
+    expert_out = jnp.einsum("GECf,Efd->GECd", h, p["wd"])
+    out = jnp.einsum("GgEC,GECd->Ggd", comb, expert_out)
+    out = constrain(out, ("batch", None, None))
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,218 @@
+"""xLSTM blocks (Beck et al. 2024, arXiv:2405.04517): mLSTM (matrix memory,
+exponential input gate, chunked-parallel training form) and sLSTM (scalar
+memory with recurrent gating, inherently sequential).
+
+TPU adaptation: mLSTM trains with the chunkwise-parallel algebra (intra-chunk
+quadratic attention-like einsums + inter-chunk recurrent state), stabilized in
+log space with the running max m — validated against the sequential recurrence
+in tests. Heads are independent -> head axis shards over `model` with no
+cross-shard traffic. sLSTM stays a lax.scan over time (it is a true RNN with
+memory mixing; the paper itself gives it no parallel form).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_defs(cfg):
+    d, H = cfg.d_model, cfg.num_heads
+    hd = cfg.resolved_head_dim
+    return {
+        "wq": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wv": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wi": ParamDef((d, H), ("embed", "heads"), "small_normal"),
+        "wf": ParamDef((d, H), ("embed", "heads"), "small_normal"),
+        "wo_gate": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wo": ParamDef((H, hd, d), ("heads", "head_dim", "embed_out")),
+        "ln_out": ParamDef((H, hd), ("heads", "head_dim"), "ones"),
+    }
+
+
+def _mlstm_chunk(q, k, v, lf, li, state):
+    """One chunk, all heads. q/k/v (B,H,L,hd); lf/li (B,H,L) log gates;
+    state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)). Returns (h, new_state)."""
+    B, H, L, hd = q.shape
+    b = jnp.cumsum(lf, axis=-1)                       # (B,H,L) cumulative log f
+    g = li - b                                         # log i_tau - b_tau
+    # per-position stabilizer
+    gmax = jax.lax.cummax(g, axis=g.ndim - 1)          # max_{tau<=t} (g_tau)
+    m_intra = b + gmax
+    m_inter = state["m"][..., None] + b
+    m_t = jnp.maximum(m_inter, m_intra)                # (B,H,L)
+
+    scale = 1.0 / (hd ** 0.5)
+    scores = jnp.einsum("bhld,bhtd->bhlt", q, k) * scale   # l = query, t = key
+    pos_q = jnp.arange(L)[:, None]
+    pos_k = jnp.arange(L)[None, :]
+    decay = b[..., :, None] - b[..., None, :] + li[..., None, :] \
+        - m_t[..., :, None]
+    w = jnp.exp(jnp.where(pos_k <= pos_q, decay, -jnp.inf))
+    num_intra = jnp.einsum("bhlt,bhtd->bhld", scores * w, v)
+    den_intra = jnp.sum(scores * w, axis=-1)              # n sums k/sqrt(hd)
+
+    coef = jnp.exp(m_inter - m_t)                      # (B,H,L)
+    num_inter = jnp.einsum("bhld,bhde->bhle", q, state["C"]) * coef[..., None]
+    den_inter = jnp.einsum("bhld,bhd->bhl", q, state["n"]) * coef
+
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    # unstabilized rule is max(|q.n|, 1); in exp(-m)-stabilized coordinates
+    # that lower bound becomes exp(-m_t)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # state update to end of chunk
+    bL = b[..., -1:]                                   # (B,H,1)
+    m_new = jnp.maximum(state["m"] + bL[..., 0],
+                        (bL[..., 0] + gmax[..., -1]))
+    upd_w = jnp.exp(li + bL - b - m_new[..., None])    # (B,H,L)
+    C_new = jnp.exp(state["m"] + bL[..., 0] - m_new)[..., None, None] \
+        * state["C"] + jnp.einsum("bhl,bhld,bhle->bhde", upd_w, k * (1.0 / hd ** 0.5), v)
+    n_new = jnp.exp(state["m"] + bL[..., 0] - m_new)[..., None] * state["n"] \
+        + jnp.einsum("bhl,bhld->bhd", upd_w, k * (1.0 / hd ** 0.5))
+    return h, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def mlstm_sequential(q, k, v, lf, li, state):
+    """Step-by-step oracle for tests (same stabilized recurrence)."""
+    hd = q.shape[-1]
+    scale = 1.0 / hd ** 0.5
+
+    def step(st, args):
+        qt, kt, vt, lft, lit = args                   # (B,H,hd)...,(B,H)
+        m_new = jnp.maximum(st["m"] + lft, lit)
+        fw = jnp.exp(st["m"] + lft - m_new)
+        iw = jnp.exp(lit - m_new)
+        C = fw[..., None, None] * st["C"] \
+            + iw[..., None, None] * (kt * scale)[..., :, None] * vt[..., None, :]
+        n = fw[..., None] * st["n"] + iw[..., None] * kt * scale
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.einsum("bhd,bhd->bh", qt, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        return {"C": C, "n": n, "m": m_new}, h
+
+    sw = lambda t: jnp.moveaxis(t, 2, 0)
+    st, hs = jax.lax.scan(step, state, (sw(q), sw(k), sw(v),
+                                        jnp.moveaxis(lf, -1, 0),
+                                        jnp.moveaxis(li, -1, 0)))
+    return jnp.moveaxis(hs, 0, 2), st
+
+
+def mlstm_layer(p, x, cfg, *, state=None):
+    """x (B,S,d) -> (out, new_state). state: C/n/m dict (decode & chunks)."""
+    B, S, d = x.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"])
+    lf = jax.nn.log_sigmoid(jnp.einsum("bsd,dh->bhs", x, p["wf"])
+                            .astype(jnp.float32))
+    li = jnp.einsum("bsd,dh->bhs", x, p["wi"]).astype(jnp.float32)
+
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+
+    if S == 1:
+        h, new_state = mlstm_sequential(qf, kf, vf, lf, li, state)
+    else:
+        L = cfg.xlstm_chunk if S % cfg.xlstm_chunk == 0 else S
+        n_chunks = S // L
+
+        def body(st, args):
+            qc, kc, vc, lfc, lic = args
+            h, st = _mlstm_chunk(qc, kc, vc, lfc, lic, st)
+            return st, h
+
+        ch = lambda t: jnp.moveaxis(
+            t.reshape(B, H, n_chunks, L, -1), 2, 0)
+        chg = lambda t: jnp.moveaxis(t.reshape(B, H, n_chunks, L), 2, 0)
+        new_state, hs = jax.lax.scan(
+            body, state, (ch(qf), ch(kf), ch(vf), chg(lf), chg(li)))
+        h = jnp.moveaxis(hs, 0, 2).reshape(B, H, S, hd)
+
+    # per-head output norm + sigmoid output gate (xLSTM block structure)
+    h = rmsnorm(h, p["ln_out"][None, :, None, :], eps=cfg.norm_eps)
+    h = h * jax.nn.sigmoid(jnp.einsum("bsd,dhk->bhsk", x, p["wo_gate"]))
+    out = jnp.einsum("bhsk,hkd->bsd", h.astype(x.dtype), p["wo"])
+    return out, new_state
+
+
+def init_mlstm_state(cfg, batch: int):
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg):
+    d, H = cfg.d_model, cfg.num_heads
+    hd = cfg.resolved_head_dim
+    return {
+        "wz": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wi": ParamDef((d, H, hd), ("embed", "heads", "head_dim"), "small_normal"),
+        "wf": ParamDef((d, H, hd), ("embed", "heads", "head_dim"), "small_normal"),
+        "wo_g": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "rz": ParamDef((H, hd, hd), ("heads", "head_dim", "head_dim_r"),
+                       "small_normal"),
+        "ri": ParamDef((H, hd, hd), ("heads", "head_dim", "head_dim_r"),
+                       "small_normal"),
+        "rf": ParamDef((H, hd, hd), ("heads", "head_dim", "head_dim_r"),
+                       "small_normal"),
+        "wo": ParamDef((H, hd, d), ("heads", "head_dim", "embed_out")),
+    }
+
+
+def slstm_layer(p, x, cfg, *, state=None):
+    """sLSTM with exponential gating + per-head recurrent memory mixing.
+
+    x (B,S,d); state dict(h,c,n,m each (B,H,hd))."""
+    B, S, d = x.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    if state is None:
+        state = init_slstm_state(cfg, B)
+
+    zx = jnp.einsum("bsd,dhk->sbhk", x, p["wz"]).astype(jnp.float32)
+    ix = jnp.einsum("bsd,dhk->sbhk", x, p["wi"]).astype(jnp.float32)
+    fx = jnp.einsum("bsd,dhk->sbhk", x, p["wf"]).astype(jnp.float32)
+    ox = jnp.einsum("bsd,dhk->sbhk", x, p["wo_g"]).astype(jnp.float32)
+
+    def step(st, args):
+        zt, it, ft, ot = args
+        hr = st["h"]
+        z = jnp.tanh(zt + jnp.einsum("bhk,hkl->bhl", hr, p["rz"]))
+        i_til = it + jnp.einsum("bhk,hkl->bhl", hr, p["ri"])
+        f_til = ft + jnp.einsum("bhk,hkl->bhl", hr, p["rf"])
+        lf = jax.nn.log_sigmoid(f_til)
+        m_new = jnp.maximum(lf + st["m"], i_til)
+        i_p = jnp.exp(i_til - m_new)
+        f_p = jnp.exp(lf + st["m"] - m_new)
+        c = f_p * st["c"] + i_p * z
+        n = f_p * st["n"] + i_p
+        h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+        return {"h": h, "c": c, "n": n, "m": m_new}, h
+
+    new_state, hs = jax.lax.scan(step, state, (zx, ix, fx, ox))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd)    # (B,S,H,hd)
+    out = jnp.einsum("bshk,hkd->bsd", h.astype(x.dtype), p["wo"])
+    return out, new_state
+
+
+def init_slstm_state(cfg, batch: int):
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(),
+            "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}

@@ -1,0 +1,6 @@
+from .adam import adam, sgd, apply_updates
+from .adafactor import adafactor
+from .schedules import constant, cosine, warmup_cosine
+
+__all__ = ["adam", "sgd", "adafactor", "apply_updates",
+           "constant", "cosine", "warmup_cosine"]

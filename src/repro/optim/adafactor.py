@@ -1,0 +1,63 @@
+"""Adafactor (Shazeer & Stern 2018) with factored second moments.
+
+Used for the largest MoE configs (llama4-maverick, dbrx) where Adam's
+8 bytes/param of fp32 state would not fit 16 GB/chip HBM at 256 chips.
+Factored stats store O(rows+cols) per matrix instead of O(rows*cols).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .adam import Optimizer, _lr_at
+
+
+def adafactor(lr, eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8, min_dim_factored: int = 128) -> Optimizer:
+    def factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored and \
+            p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def stat(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "stats": jax.tree.map(stat, params,
+                                      is_leaf=lambda x: isinstance(x, jnp.ndarray))}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-decay)
+        lr_t = _lr_at(lr, step)
+
+        def upd(g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = (vr / jnp.mean(vr, axis=-1, keepdims=True))[..., None] \
+                    * vc[..., None, :]
+                u = g / jnp.sqrt(denom + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g / jnp.sqrt(v + eps)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * u, ns
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state["stats"])
+        outs = [upd(g, s) for g, s in zip(flat_g, flat_s)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        stats = treedef.unflatten([o[1] for o in outs])
+        return updates, {"step": step, "stats": stats}
+
+    return Optimizer(init, update)

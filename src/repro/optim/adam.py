@@ -1,0 +1,82 @@
+"""Minimal pytree optimizers (optax-style (init, update) pairs), built in-repo.
+
+All optimizers return *updates* (deltas to add to params); `apply_updates`
+applies them. Gradient transformations compose functionally.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            updates = jax.tree.map(lambda m: -lr_t * m, mu)
+        else:
+            mu = None
+            updates = jax.tree.map(lambda g: -lr_t * g, grads)
+        return updates, {"step": step, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, grad_clip: float | None = None,
+         state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        if grad_clip is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(state_dtype),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(state_dtype)), state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(state_dtype)
+        bc2 = 1 - b2 ** step.astype(state_dtype)
+        lr_t = _lr_at(lr, step)
+
+        def upd(m_, v_, p):
+            u = -lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(state_dtype)
+            return u
+
+        params_for_wd = params if params is not None else state["m"]
+        updates = jax.tree.map(upd, m, v, params_for_wd)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,12 @@
+import jax
+import pytest
+
+# GP numerics (Cholesky of nearly-singular covariances) need float64; model
+# code uses explicit float32/bfloat16 so this is safe globally in tests.
+# NOTE: dryrun.py / production runs do NOT enable x64.
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,132 @@
+"""Consensus protocols: DAC, JOR, PM, DALE, flooding, graphs — each against
+its paper lemma."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.consensus import (path_graph, cycle_graph, complete_graph,
+                                  random_connected_graph, laplacian,
+                                  max_degree, perron, diameter, is_connected,
+                                  dac, dac_until, dac_sharded, jor,
+                                  power_method, extreme_eigs, optimal_omega,
+                                  dale, flood)
+
+
+def _spd(M, key=0):
+    B = jax.random.normal(jax.random.PRNGKey(key), (M, M))
+    return B @ B.T + M * jnp.eye(M)
+
+
+def test_graph_basics():
+    A = path_graph(5)
+    assert float(max_degree(A)) == 2
+    assert diameter(A) == 4
+    assert is_connected(A)
+    assert diameter(complete_graph(5)) == 1
+    assert diameter(cycle_graph(6)) == 3
+    L = laplacian(A)
+    assert np.allclose(np.asarray(L).sum(axis=1), 0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(3, 30), st.integers(0, 5))
+def test_random_graph_connected_property(M, seed):
+    assert is_connected(random_connected_graph(M, 0.2, seed))
+
+
+@pytest.mark.parametrize("graph", [path_graph, cycle_graph, complete_graph])
+def test_dac_converges_to_average(graph):
+    """Lemma 1: DAC -> average for eps in (0, 1/Delta), any topology."""
+    M = 12
+    w0 = jax.random.normal(jax.random.PRNGKey(0), (M,))
+    w, _ = dac(w0, graph(M), iters=2000)
+    np.testing.assert_allclose(np.asarray(w), float(jnp.mean(w0)), atol=1e-8)
+
+
+def test_dac_until_maximin_stopping():
+    M = 8
+    w0 = jax.random.normal(jax.random.PRNGKey(1), (M,))
+    w, iters = dac_until(w0, path_graph(M), tol=1e-10)
+    np.testing.assert_allclose(np.asarray(w), float(jnp.mean(w0)), atol=1e-8)
+    assert iters < 5000
+
+
+def test_dac_multichannel():
+    M, K = 10, 7
+    w0 = jax.random.normal(jax.random.PRNGKey(2), (M, K))
+    w, _ = dac(w0, path_graph(M), iters=3000)
+    want = np.broadcast_to(np.asarray(jnp.mean(w0, 0)), (M, K))
+    np.testing.assert_allclose(np.asarray(w), want, atol=1e-7)
+
+
+def test_jor_lemma2_and_lemma3():
+    """JOR converges for omega < 2/M; omega* converges strictly faster."""
+    M = 10
+    H = _spd(M)
+    b = jax.random.normal(jax.random.PRNGKey(3), (M,))
+    q_true = jnp.linalg.solve(H, b)
+    q, _ = jor(H, b, 2.0 / M * 0.999, 400)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(q_true), atol=1e-8)
+    om = optimal_omega(H)
+    assert float(om) > 2.0 / M
+    q_fast, _ = jor(H, b, om, 60)
+    q_slow, _ = jor(H, b, 2.0 / M * 0.999, 60)
+    err_fast = float(jnp.abs(q_fast - q_true).max())
+    err_slow = float(jnp.abs(q_slow - q_true).max())
+    assert err_fast < err_slow * 0.1
+
+
+def test_power_method_eigs():
+    M = 12
+    H = _spd(M, 5)
+    R = H / jnp.diagonal(H)[:, None]
+    lam_max, lam_min = extreme_eigs(R, iters=500)
+    evals = np.linalg.eigvals(np.asarray(R))
+    np.testing.assert_allclose(float(lam_max), evals.real.max(), rtol=1e-4)
+    np.testing.assert_allclose(float(lam_min), evals.real.min(), rtol=1e-3,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("graph", [path_graph, cycle_graph,
+                                   lambda M: random_connected_graph(M, 0.3)])
+def test_dale_lemma5_strongly_connected(graph):
+    """Lemma 5: DALE solves Hq=b on merely strongly connected graphs, and
+    every agent ends with the full solution."""
+    M = 8
+    H = _spd(M, 7)
+    b = jax.random.normal(jax.random.PRNGKey(4), (M,))
+    Q, _ = dale(H, b, graph(M), 6000)
+    q_true = np.asarray(jnp.linalg.solve(H, b))
+    for i in range(M):
+        np.testing.assert_allclose(np.asarray(Q[i]), q_true, atol=1e-5)
+
+
+def test_flooding_rounds_equal_diameter():
+    A = path_graph(9)
+    vals = jnp.arange(9.0)
+    gathered, rounds = flood(vals, A)
+    assert rounds == 8
+    np.testing.assert_array_equal(np.asarray(gathered), np.asarray(vals))
+
+
+def test_dac_sharded_matches_simulated():
+    """Sharded (shard_map/ppermute) DAC == simulated cycle-graph DAC."""
+    n_dev = jax.device_count()
+    if n_dev < 4:
+        pytest.skip("needs >= 4 devices (run under forced host devices)")
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from functools import partial
+    M = 4
+    mesh = jax.make_mesh((M,), ("agents",))
+    w0 = jax.random.normal(jax.random.PRNGKey(0), (M,))
+
+    @partial(shard_map, mesh=mesh, in_specs=P("agents"), out_specs=P("agents"))
+    def run(w):
+        return dac_sharded(w, "agents", iters=300)
+
+    w_sh = run(w0)
+    w_sim, _ = dac(w0, cycle_graph(M), iters=300, eps=1.0 / 3.0)
+    np.testing.assert_allclose(np.asarray(w_sh), np.asarray(w_sim), atol=1e-10)

@@ -1,0 +1,91 @@
+"""Beyond-paper extensions: time-varying-graph DAC (Assumption 1) and the
+fused rbf_matvec streaming-prediction kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.consensus import dac_time_varying, path_graph
+from repro.kernels import ref
+from repro.kernels.ops import rbf_matvec
+
+
+def test_dac_time_varying_union_connectivity():
+    """Assumption 1: per-step graphs may be disconnected as long as their
+    gamma-window union is strongly connected — DAC still averages."""
+    M = 6
+    A_full = np.asarray(path_graph(M))
+    # alternate between the even-edge and odd-edge halves of the path:
+    # each instantaneous graph is disconnected, the union is the path
+    A_even = np.zeros_like(A_full)
+    A_odd = np.zeros_like(A_full)
+    for i in range(M - 1):
+        (A_even if i % 2 == 0 else A_odd)[i, i + 1] = 1.0
+        (A_even if i % 2 == 0 else A_odd)[i + 1, i] = 1.0
+    T = 4000
+    A_seq = jnp.asarray(np.stack([A_even if t % 2 == 0 else A_odd
+                                  for t in range(T)]))
+    w0 = jax.random.normal(jax.random.PRNGKey(0), (M,))
+    w, res = dac_time_varying(w0, A_seq, eps=0.3)
+    np.testing.assert_allclose(np.asarray(w), float(jnp.mean(w0)), atol=1e-6)
+    assert float(res[-1]) < 1e-6
+
+
+def test_dac_time_varying_static_matches_dac():
+    from repro.core.consensus import dac
+    M, T = 5, 300
+    A = path_graph(M)
+    w0 = jax.random.normal(jax.random.PRNGKey(1), (M,))
+    w_tv, _ = dac_time_varying(w0, jnp.broadcast_to(A, (T, M, M)), eps=0.3)
+    w_st, _ = dac(w0, A, T, eps=0.3)
+    np.testing.assert_allclose(np.asarray(w_tv), np.asarray(w_st), atol=1e-10)
+
+
+@pytest.mark.parametrize("n,m,d", [(100, 130, 2), (256, 256, 3), (300, 70, 5),
+                                   (64, 512, 1)])
+def test_rbf_matvec_kernel(n, m, d):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    x1 = jax.random.normal(k1, (n, d), jnp.float32)
+    x2 = jax.random.normal(k2, (m, d), jnp.float32)
+    v = jax.random.normal(k3, (m,), jnp.float32)
+    ls = jnp.full((d,), 0.8, jnp.float32)
+    got = rbf_matvec(x1, x2, v, ls, 1.3, use_pallas=True, interpret=True)
+    want = ref.rbf_matvec_ref(x1, x2, v, ls, 1.3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(9, 120), st.integers(9, 120), st.integers(1, 4))
+def test_rbf_matvec_property(n, m, d):
+    """Property: fused matvec == Gram @ v, arbitrary (unaligned) shapes."""
+    x1 = jax.random.normal(jax.random.PRNGKey(n), (n, d), jnp.float32)
+    x2 = jax.random.normal(jax.random.PRNGKey(m + 500), (m, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(7), (m,), jnp.float32)
+    ls = jnp.full((d,), 1.1, jnp.float32)
+    got = rbf_matvec(x1, x2, v, ls, 0.9, use_pallas=True, interpret=True)
+    want = ref.rbf_matvec_ref(x1, x2, v, ls, 0.9)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_streaming_prediction_mean_matches_full():
+    """End-to-end: prediction mean via cached alpha + fused matvec equals
+    core.gp.predict_full's mean."""
+    from repro.core.gp import pack, predict_full, cov_matrix
+    from repro.data import random_inputs, gp_sample_field
+    lt = pack([1.2, 0.3], 1.3, 0.1)
+    X = random_inputs(jax.random.PRNGKey(0), 400)
+    _, y = gp_sample_field(jax.random.PRNGKey(1), X, lt)
+    Xs = random_inputs(jax.random.PRNGKey(2), 50)
+    mean_ref, _ = predict_full(lt, X, y, Xs)
+    C = cov_matrix(X, lt, jitter=1e-8)
+    alpha = jnp.linalg.solve(C, y)
+    ls = jnp.exp(lt[:2]).astype(jnp.float32)
+    mean_stream = rbf_matvec(Xs.astype(jnp.float32), X.astype(jnp.float32),
+                             alpha.astype(jnp.float32), ls,
+                             float(jnp.exp(lt[2])), use_pallas=True,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(mean_stream),
+                               np.asarray(mean_ref), rtol=1e-3, atol=1e-3)

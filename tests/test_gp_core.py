@@ -1,0 +1,105 @@
+"""GP core: kernel math, NLL + gradients, exact GP, partitioning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gp import (se_kernel, cov_matrix, pack, unpack, nll,
+                           nll_grad_analytic, train_full_gp, predict_full,
+                           stripe_partition, communication_dataset, augment)
+from repro.data import random_inputs, gp_sample_field
+
+TRUE_LT = pack([1.2, 0.3], 1.3, 0.1)
+
+
+def _data(n=300, key=0):
+    X = random_inputs(jax.random.PRNGKey(key), n)
+    _, y = gp_sample_field(jax.random.PRNGKey(key + 1), X, TRUE_LT)
+    return X, y
+
+
+def test_kernel_psd_and_symmetric():
+    X, _ = _data(100)
+    K = se_kernel(X, X, TRUE_LT)
+    assert np.allclose(K, K.T, atol=1e-12)
+    evals = np.linalg.eigvalsh(np.asarray(K))
+    assert evals.min() > -1e-8
+    # diagonal = sigma_f^2
+    assert np.allclose(np.diag(K), 1.3**2, atol=1e-10)
+
+
+def test_kernel_matches_paper_form():
+    # paper eq. 2: no factor 2 in the denominator
+    x1 = jnp.array([[0.0, 0.0]])
+    x2 = jnp.array([[0.5, 0.25]])
+    ls, sf, _ = unpack(TRUE_LT)
+    want = sf**2 * np.exp(-(0.5**2 / ls[0]**2 + 0.25**2 / ls[1]**2))
+    got = se_kernel(x1, x2, TRUE_LT)[0, 0]
+    assert np.allclose(got, want, rtol=1e-12)
+
+
+def test_nll_gradient_analytic_vs_autodiff():
+    X, y = _data(150)
+    lt0 = pack([2.0, 0.5], 1.0, 1.0)
+    g_auto = jax.grad(nll)(lt0, X, y)
+    g_ana = nll_grad_analytic(lt0, X, y)
+    np.testing.assert_allclose(g_auto, g_ana, rtol=1e-8, atol=1e-10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.2, 3.0), st.floats(0.2, 3.0), st.floats(0.5, 2.0))
+def test_nll_gradient_property(l1, l2, sf):
+    """Property: analytic trace-identity gradient == autodiff, any theta."""
+    X, y = _data(60)
+    lt = pack([l1, l2], sf, 0.2)
+    np.testing.assert_allclose(jax.grad(nll)(lt, X, y),
+                               nll_grad_analytic(lt, X, y),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_full_gp_hyperparameter_recovery():
+    X, y = _data(800)
+    lt, info = train_full_gp(X, y, jax.random.PRNGKey(2), num_starts=2,
+                             steps=150)
+    theta = np.exp(np.asarray(lt))
+    true = np.exp(np.asarray(TRUE_LT))
+    assert np.all(np.abs(np.log(theta / true)) < 0.5), theta
+
+
+def test_full_gp_prediction_interpolates():
+    X, y = _data(400)
+    mean, var = predict_full(TRUE_LT, X, y, X[:10])
+    # at observed locations the posterior mean is close to y (noise-limited)
+    assert float(jnp.mean((mean - y[:10]) ** 2)) < 0.05
+    assert np.all(np.asarray(var) > 0)
+
+
+def test_posterior_variance_shrinks_with_data():
+    X, y = _data(400)
+    Xs = random_inputs(jax.random.PRNGKey(9), 20)
+    _, v_small = predict_full(TRUE_LT, X[:50], y[:50], Xs)
+    _, v_big = predict_full(TRUE_LT, X, y, Xs)
+    assert float(jnp.mean(v_big)) < float(jnp.mean(v_small))
+
+
+def test_stripe_partition_shapes_and_disjoint():
+    X, y = _data(403)
+    Xp, yp = stripe_partition(X, y, 4)
+    assert Xp.shape == (4, 100, 2) and yp.shape == (4, 100)
+    # stripes are ordered along x-axis
+    maxes = np.asarray(Xp[:, :, 0].max(axis=1))
+    mins = np.asarray(Xp[:, :, 0].min(axis=1))
+    assert np.all(maxes[:-1] <= mins[1:] + 1e-12)
+
+
+def test_communication_dataset_and_augment():
+    X, y = _data(400)
+    Xp, yp = stripe_partition(X, y, 4)
+    Xc, yc = communication_dataset(jax.random.PRNGKey(3), Xp, yp)
+    assert Xc.shape[0] == 4 * (100 // 4)
+    Xa, ya = augment(Xp, yp, Xc, yc)
+    assert Xa.shape == (4, 100 + Xc.shape[0], 2)
+    # every agent's augmented set contains the shared communication data
+    np.testing.assert_array_equal(np.asarray(Xa[0, 100:]), np.asarray(Xc))
+    np.testing.assert_array_equal(np.asarray(Xa[3, 100:]), np.asarray(Xc))

@@ -1,0 +1,124 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps +
+hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ops import rbf_gram, flash_attention
+from repro.kernels.flash_jnp import flash_attention_jnp
+
+
+@pytest.mark.parametrize("n,m,d", [(64, 64, 1), (100, 130, 2), (256, 256, 2),
+                                   (300, 300, 5), (17, 33, 3)])
+def test_rbf_gram_shapes(n, m, d):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x1 = jax.random.normal(k1, (n, d), jnp.float32)
+    x2 = jax.random.normal(k2, (m, d), jnp.float32)
+    ls = jnp.full((d,), 0.7, jnp.float32)
+    got = rbf_gram(x1, x2, ls, 1.3, noise=0.1, with_noise=(n == m),
+                   use_pallas=True, interpret=True)
+    want = ref.rbf_gram_ref(x1, x2, ls, 1.3, noise=0.1 if n == m else 0.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(8, 150), st.integers(8, 150), st.integers(1, 6),
+       st.floats(0.3, 2.0), st.floats(0.5, 2.0))
+def test_rbf_gram_property(n, m, d, ls_val, sf):
+    x1 = jax.random.normal(jax.random.PRNGKey(n), (n, d), jnp.float32)
+    x2 = jax.random.normal(jax.random.PRNGKey(m + 777), (m, d), jnp.float32)
+    ls = jnp.full((d,), ls_val, jnp.float32)
+    got = rbf_gram(x1, x2, ls, sf, use_pallas=True, interpret=True)
+    want = ref.rbf_gram_ref(x1, x2, ls, sf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-5)
+    # kernel values bounded by sf^2 and positive
+    assert np.all(np.asarray(got) <= sf**2 + 1e-4)
+    assert np.all(np.asarray(got) >= 0)
+
+
+@pytest.mark.parametrize("b,h,kh,sq,sk,d,causal,window", [
+    (2, 4, 2, 128, 128, 64, True, None),
+    (1, 8, 8, 256, 256, 64, False, None),
+    (2, 4, 4, 1, 512, 64, True, None),          # decode shape
+    (1, 4, 2, 128, 512, 64, True, 64),          # sliding window
+    (1, 2, 1, 96, 96, 32, True, None),
+    (1, 4, 1, 64, 64, 128, True, None),         # max GQA ratio
+])
+def test_flash_attention_pallas(b, h, kh, sq, sk, d, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, kh, sk, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, kh, sk, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          use_pallas=True, interpret=True, bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64)).astype(dtype)
+    got = flash_attention(q, k, v, use_pallas=True, interpret=True,
+                          bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v)
+    assert got.dtype == dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_jnp_custom_vjp_grads():
+    """The chunked jnp flash backward == autodiff through the reference."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, 4, 64, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 2, 128, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 2, 128, 32), jnp.float32)
+    f1 = lambda *a: jnp.sum(jnp.sin(flash_attention_jnp(*a, True, 64, 32)))
+    f2 = lambda *a: jnp.sum(jnp.sin(
+        ref.flash_attention_ref(*a, causal=True, window=64)))
+    g1 = jax.grad(f1, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([1, 2, 4]),
+       st.sampled_from([32, 64, 96]), st.booleans())
+def test_flash_property_softmax_rows(b, g, s, causal):
+    """Property: attention output is a convex combination of values ->
+    bounded by per-column min/max of v."""
+    h, kh = 2 * g, 2
+    ks = jax.random.split(jax.random.PRNGKey(b * 100 + s), 3)
+    q = jax.random.normal(ks[0], (b, h, s, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (b, kh, s, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (b, kh, s, 16), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, use_pallas=True,
+                          interpret=True, bq=32, bk=32)
+    assert np.all(np.asarray(out) <= float(v.max()) + 1e-4)
+    assert np.all(np.asarray(out) >= float(v.min()) - 1e-4)
+
+
+def test_gp_core_uses_same_kernel_as_pallas():
+    """rbf_gram (pallas) == core.gp.kernel.se_kernel — single source of truth
+    for the paper's covariance."""
+    from repro.core.gp import se_kernel, pack
+    x1 = jax.random.normal(jax.random.PRNGKey(3), (50, 2), jnp.float32)
+    lt = pack([0.9, 0.4], 1.1, 0.1)
+    ls = jnp.exp(lt[:2]).astype(jnp.float32)
+    got = rbf_gram(x1, x1, ls, float(jnp.exp(lt[2])), use_pallas=True,
+                   interpret=True)
+    want = se_kernel(x1.astype(jnp.float64), x1.astype(jnp.float64), lt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)

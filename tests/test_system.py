@@ -1,0 +1,162 @@
+"""End-to-end behaviour: training improves loss (centralized AND federated),
+serving decodes, checkpoints round-trip, sharding policy is sane."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.lm_data import MarkovLMData
+from repro.models import lm
+from repro.launch.steps import (make_train_step, make_federated_train_step,
+                                make_prefill_step, make_decode_step,
+                                pick_optimizer)
+from repro.optim import adam, adafactor, apply_updates
+
+
+def _reduced(arch="internlm2-1.8b"):
+    return get_config(arch).reduced()
+
+
+def _batches(cfg, n, batch=8, seq=64, agent=0):
+    data = MarkovLMData(cfg.vocab_size, seed=0, agent=agent)
+    for _ in range(n):
+        toks, labels = data.batch(batch, seq)
+        yield {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+
+
+def test_training_loss_decreases():
+    cfg = _reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    optimizer, _ = pick_optimizer(cfg, lr=3e-3)
+    step = jax.jit(make_train_step(cfg, optimizer))
+    opt_state = optimizer.init(params)
+    losses = []
+    for batch in _batches(cfg, 25):
+        params, opt_state, loss, _ = step(params, opt_state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 1.0, losses[::6]
+
+
+def test_federated_dec_admm_training_learns_and_agrees():
+    """The paper's technique end-to-end on an LM: loss decreases AND agents
+    reach consensus (disagreement stays bounded)."""
+    cfg = _reduced("xlstm-350m")
+    M = 4
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_federated_train_step(cfg, n_agents=M, rho=0.05,
+                                             kappa=100.0))
+    params_st = jax.tree.map(lambda t: jnp.broadcast_to(t, (M,) + t.shape),
+                             params)
+    duals = jax.tree.map(jnp.zeros_like, params_st)
+    gens = [_batches(cfg, 40, batch=4, agent=a) for a in range(M)]
+    losses = []
+    for bs in zip(*gens):
+        batch_st = jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+        params_st, duals, loss = step(params_st, duals, batch_st)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.3, losses[::10]
+    dis = max(float(jnp.max(jnp.abs(x - jnp.mean(x, 0))))
+              for x in jax.tree.leaves(params_st))
+    assert dis < 0.1
+
+
+def test_microbatched_train_step_matches_plain():
+    """Gradient accumulation == full-batch step (same optimizer update)."""
+    cfg = _reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    optimizer = adam(1e-3)
+    batch = next(iter(_batches(cfg, 1, batch=8)))
+    s1 = make_train_step(cfg, optimizer, microbatch=1)
+    s4 = make_train_step(cfg, optimizer, microbatch=4)
+    p1, _, l1, _ = jax.jit(s1)(params, optimizer.init(params), batch)
+    p4, _, l4, _ = jax.jit(s4)(params, optimizer.init(params), batch)
+    np.testing.assert_allclose(float(l1), float(l4), rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_serve_prefill_decode_loop():
+    cfg = _reduced("chatglm3-6b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    B, P, G = 2, 16, 8
+    prefill = jax.jit(make_prefill_step(cfg, max_len=P + G + 1))
+    decode = jax.jit(make_decode_step(cfg))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                              cfg.vocab_size)
+    logits, cache = prefill(params, toks)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    for _ in range(G):
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        logits, cache = decode(params, cache, tok)
+    assert int(cache["index"]) == P + G
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import save_checkpoint, load_checkpoint, latest_step
+    cfg = _reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), 7, params)
+    assert latest_step(str(tmp_path)) == 7
+    restored = load_checkpoint(str(tmp_path), 7, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_adafactor_descends():
+    cfg = _reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adafactor(1e-2)
+    step = jax.jit(make_train_step(cfg, opt))
+    st = opt.init(params)
+    losses = []
+    for batch in _batches(cfg, 15):
+        params, st, loss, _ = step(params, st, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5
+
+
+def test_sharding_policy_rules():
+    """Divisibility fallbacks of the logical-axis rules (DESIGN.md §6)."""
+    from repro.launch.sharding import spec_for_axes
+    from jax.sharding import PartitionSpec as P
+    if jax.device_count() < 4:
+        pytest.skip("needs multi-device")
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    s = spec_for_axes(mesh, ("embed", "heads", "head_dim"), (64, 4, 16))
+    assert s == P("data", "model", None)
+    s = spec_for_axes(mesh, ("embed", "heads", "head_dim"), (64, 3, 16))
+    assert s == P("data", None, None)
+    s = spec_for_axes(mesh, ("vocab", "embed"), (49155, 64))
+    assert s == P(None, "data")
+    # B=1 long decode: cache sequence takes every free axis
+    s = spec_for_axes(mesh, ("batch", "kv_seq", "kv_heads", "head_dim"),
+                      (1, 1024, 2, 16), shard_kv_seq=True)
+    assert s == P(None, ("data", "model"), None, None)
+    # batched decode: batch claims data, sequence falls back to model
+    s = spec_for_axes(mesh, ("batch", "kv_seq", "kv_heads", "head_dim"),
+                      (8, 1024, 2, 16), shard_kv_seq=True)
+    assert s == P("data", "model", None, None)
+    s = spec_for_axes(mesh, ("batch", "kv_seq", "kv_heads", "head_dim"),
+                      (8, 1024, 2, 16), shard_kv_seq=False)
+    assert s == P("data", None, "model", None)
+
+
+def test_input_specs_cover_all_archs_and_shapes():
+    """batch_structs produce consistent specs for every supported pair
+    (structure-level; the heavy lower/compile proof lives in dryrun)."""
+    from repro.configs import ARCH_IDS
+    from repro.launch.steps import SHAPES, batch_structs, shape_supported
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if not shape_supported(cfg, shape):
+                assert shape == "long_500k" and arch == "whisper-small"
+                continue
+            shapes, axes = batch_structs(cfg, shape)
+            assert set(shapes) == set(axes)
+            B = SHAPES[shape]["batch"]
+            for k, sds in shapes.items():
+                assert sds.shape[0] == B
