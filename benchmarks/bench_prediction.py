@@ -1,5 +1,10 @@
 """Paper Fig. 11-15 + Tables 7-8: decentralized GP prediction RMSE/NLPD on
-the SST-like field, all 13 methods, fleet sweep, CBNN agent reduction."""
+the SST-like field, all 13 methods, fleet sweep, CBNN agent reduction.
+
+`run_serving` additionally benchmarks the factor-cached, query-tiled
+PredictionEngine against the per-call path: repeated-query serving
+throughput (cached vs uncached) and a large-Nt sweep that the all-at-once
+(Nt, M, M) NPAE materialization could not complete under bounded memory."""
 from __future__ import annotations
 
 import time
@@ -16,9 +21,9 @@ from repro.core.prediction import (local_moments, npae_terms, poe, gpoe, bcm,
                                    dec_bcm, dec_rbcm, dec_grbcm, dec_npae,
                                    dec_npae_star, dec_nn_poe, dec_nn_gpoe,
                                    dec_nn_bcm, dec_nn_rbcm, dec_nn_grbcm,
-                                   dec_nn_npae)
+                                   dec_nn_npae, fit_experts, PredictionEngine)
 from repro.core.training import train_dec_gapx_gp
-from repro.data import grid_inputs, sst_like_field
+from repro.data import grid_inputs, sst_like_field, random_inputs
 
 
 def nlpd(mean, var, y):
@@ -103,3 +108,76 @@ def run(n_obs=2000, n_test=100, fleets=(4, 10), reps=2, eta_nn=0.1,
                 nn = float(info["mask"].sum(0).mean())
                 csv(f"table7,{name},{M},{rep},{rmse(m, ys):.4f},"
                     f"{nlpd(m, v, ys):.4f},{dt:.4f},{nn:.1f}")
+
+
+# ---------------------------------------------------------------------------
+# Serving: factor-cached + query-tiled engine vs the per-call path
+# ---------------------------------------------------------------------------
+
+def _time(fn, *args, reps=1):
+    jax.block_until_ready(fn(*args))           # warmup / compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def run_serving(n_obs=8192, M=32, n_queries=4096, batch=256, chunk=256,
+                dac_iters=100, jor_iters=200, reps=3, csv=print):
+    """Cached-vs-uncached serving throughput + large-Nt tiled sweep.
+
+    Repeated-query serving: requests of `batch` queries each, totalling
+    `n_queries`, against an M-agent fleet with Ni = n_obs / M points/agent.
+      uncached-eager : the pre-engine per-call path exactly as the per-call
+                       functions execute it (op-by-op dispatch, refactorizes
+                       every agent per request) — the serving status quo.
+      uncached-jit   : the same per-call path under one jit (still
+                       refactorizes per request).
+      cached-engine  : PredictionEngine — factors computed once, query-tiled,
+                       jit-cached across requests.
+    The large-Nt sweep pushes all `n_queries` through the engine in ONE call:
+    peak NPAE covariance memory is (chunk, M, M) instead of (Nt, M, M).
+    """
+    csv("table,method,M,Ni,batch,qps_eager,qps_jit,qps_cached,"
+        "speedup_vs_eager,speedup_vs_jit")
+    lt = pack([1.2, 0.3], 1.3, 0.1)
+    key = jax.random.PRNGKey(0)
+    X = random_inputs(key, n_obs)
+    _, y = sst_like_field(X / jnp.max(X), key=jax.random.PRNGKey(1))
+    Xp, yp = stripe_partition(X, y, M)
+    A, Ac = path_graph(M), complete_graph(M)
+    fitted = jax.jit(fit_experts)(lt, Xp, yp)
+    eng = PredictionEngine(fitted, A, chunk=chunk, dac_iters=dac_iters,
+                           jor_iters=jor_iters)
+    eng_c = PredictionEngine(fitted, Ac, chunk=chunk, dac_iters=dac_iters,
+                             jor_iters=jor_iters)
+    Ni = Xp.shape[1]
+    Xq = random_inputs(jax.random.PRNGKey(2), batch)
+
+    legacy = {
+        "poe": lambda q: dec_poe(lt, Xp, yp, q, A, iters=dac_iters)[:2],
+        "rbcm": lambda q: dec_rbcm(lt, Xp, yp, q, A, iters=dac_iters)[:2],
+        "npae": lambda q: dec_npae(lt, Xp, yp, q, Ac, jor_iters=jor_iters,
+                                   dac_iters=dac_iters)[:2],
+    }
+    for name, leg in legacy.items():
+        e = eng_c if name == "npae" else eng
+        t_eager = _time(leg, Xq)                       # eager per-call path
+        t_jit = _time(jax.jit(leg), Xq, reps=reps)
+        t_cached = _time(lambda q: e.predict(name, q)[:2], Xq, reps=reps)
+        qps = [batch / t for t in (t_eager, t_jit, t_cached)]
+        csv(f"serving,{name},{M},{Ni},{batch},{qps[0]:.0f},{qps[1]:.0f},"
+            f"{qps[2]:.0f},{t_eager/t_cached:.2f},{t_jit/t_cached:.2f}")
+
+    # large-Nt sweep: one call, Nt queries, tiled to `chunk`
+    csv("table,method,M,Ni,Nt,chunk,qps,peak_CA_MB_tiled,peak_CA_MB_dense")
+    Xbig = random_inputs(jax.random.PRNGKey(3), n_queries)
+    itemsize = jnp.zeros((), Xbig.dtype).dtype.itemsize
+    for name in ("rbcm", "npae"):
+        e = eng_c if name == "npae" else eng
+        t = _time(lambda q: e.predict(name, q)[:2], Xbig)
+        tiled_mb = chunk * M * M * itemsize / 2**20
+        dense_mb = n_queries * M * M * itemsize / 2**20
+        csv(f"sweep,{name},{M},{Ni},{n_queries},{chunk},{n_queries/t:.0f},"
+            f"{tiled_mb:.1f},{dense_mb:.1f}")

@@ -20,6 +20,24 @@ PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
 
+def xla_cost_analysis(compiled) -> dict:
+    """Program-level cost dict from a compiled XLA executable.
+
+    Recent JAX returns a list with one dict per HLO module from
+    `Compiled.cost_analysis()`; older versions return the dict directly.
+    Normalize to the (first) module's dict so callers survive the drift.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+def compiled_flops(compiled) -> float:
+    """FLOPs XLA attributes to a compiled executable (see xla_cost_analysis)."""
+    return float(xla_cost_analysis(compiled).get("flops", 0.0))
+
+
 MESH = {"single": dict(chips=256, data=16, model=16, pod=1),
         "multi": dict(chips=512, data=16, model=16, pod=2),
         # §Perf alternatives (same 256 chips, different logical aspect)

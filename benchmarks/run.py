@@ -19,8 +19,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="all",
-                    choices=["all", "training", "prediction", "roofline",
-                             "kernels"])
+                    choices=["all", "training", "prediction", "serving",
+                             "roofline", "kernels"])
     args = ap.parse_args()
 
     out = sys.stdout
@@ -46,6 +46,15 @@ def main() -> None:
         else:
             bench_prediction.run(n_obs=1800, n_test=60, fleets=(4, 8),
                                  reps=1, csv=csv)
+
+    if args.only in ("all", "serving"):
+        from . import bench_prediction
+        csv("# === GP serving (factor-cached engine vs per-call path) ===")
+        if args.full:
+            bench_prediction.run_serving(n_obs=16384, M=32, n_queries=16384,
+                                         csv=csv)
+        else:
+            bench_prediction.run_serving(csv=csv)
 
     if args.only in ("all", "roofline"):
         from . import bench_roofline

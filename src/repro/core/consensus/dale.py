@@ -15,6 +15,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .graph import axis_size
+
 
 @partial(jax.jit, static_argnames=("iters",))
 def dale(H: jax.Array, b: jax.Array, A: jax.Array, iters: int):
@@ -45,7 +47,7 @@ def dale(H: jax.Array, b: jax.Array, A: jax.Array, iters: int):
 def dale_sharded(h_row: jax.Array, b_i: jax.Array, iters: int, axis_name: str):
     """Sharded DALE on a cycle graph: each member holds (row_i H, b_i), keeps a
     full-length q_i, and exchanges q with ring neighbors via ppermute."""
-    M = jax.lax.axis_size(axis_name)
+    M = axis_size(axis_name)
     hnorm = h_row @ h_row
     x_part = h_row * b_i / hnorm
     perm_fwd = [(i, (i + 1) % M) for i in range(M)]

@@ -78,3 +78,17 @@ def diameter(A: jax.Array) -> float:
 
 def is_connected(A: jax.Array) -> bool:
     return bool(np.isfinite(_all_pairs_dist(A)).all())
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a mapped mesh axis, from inside shard_map/pmap.
+
+    Recent jax exposes jax.lax.axis_size; releases around 0.4.37 return the
+    size directly from jax.core.axis_frame, and older ones return a frame
+    object carrying it as `.size`. Returns a Python int either way (the ring
+    permutation tables need a concrete M).
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return int(jax.lax.axis_size(axis_name))
+    frame = jax.core.axis_frame(axis_name)
+    return int(getattr(frame, "size", frame))

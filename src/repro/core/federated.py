@@ -29,6 +29,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from .consensus.graph import axis_size
+
 
 @dataclass(frozen=True)
 class ConsensusConfig:
@@ -46,15 +48,21 @@ def _ring_perms(M: int):
 
 
 def _neighbor_sum(tree, axis_name: str):
-    """sum of ring-neighbor values of every leaf; cycle graph degree 2."""
-    M = jax.lax.axis_size(axis_name)
+    """sum of ring-neighbor values of every leaf; cycle graph degree
+    min(M-1, 2). On a 2-ring fwd == bwd deliver the SAME single neighbor,
+    so summing both directions would double-count it."""
+    M = axis_size(axis_name)
     fwd, bwd = _ring_perms(M)
 
     def one(x):
-        return (jax.lax.ppermute(x, axis_name, fwd)
-                + jax.lax.ppermute(x, axis_name, bwd))
+        left = jax.lax.ppermute(x, axis_name, fwd)
+        if M == 1:
+            return jnp.zeros_like(x)
+        if M == 2:
+            return left
+        return left + jax.lax.ppermute(x, axis_name, bwd)
 
-    return jax.tree.map(one, tree), 2.0
+    return jax.tree.map(one, tree), float(min(M - 1, 2))
 
 
 def allreduce_grads(grads, axis_names: Sequence[str]):

@@ -1,15 +1,29 @@
-from .local import local_moments, npae_terms
+from .local import (local_moments, npae_terms, chol_factors,
+                    local_moments_cached, npae_terms_cached, stream_means)
 from .aggregation import poe, gpoe, bcm, rbcm, grbcm, npae
-from .cbnn import cbnn_scores, cbnn_mask
+from .cbnn import (cbnn_scores, cbnn_mask, cbnn_scores_cached,
+                   cbnn_mask_cached)
 from .decentralized import (dec_poe, dec_gpoe, dec_bcm, dec_rbcm, dec_grbcm,
                             dec_npae, dec_npae_star, dec_nn_poe, dec_nn_gpoe,
-                            dec_nn_bcm, dec_nn_rbcm, dec_nn_grbcm, dec_nn_npae)
+                            dec_nn_bcm, dec_nn_rbcm, dec_nn_grbcm,
+                            dec_nn_npae, dec_poe_from_moments,
+                            dec_gpoe_from_moments, dec_bcm_from_moments,
+                            dec_rbcm_from_moments, dec_grbcm_from_moments,
+                            dec_npae_from_terms, dec_npae_star_from_terms,
+                            dec_nn_npae_from_terms)
+from .engine import (FittedExperts, fit_experts, map_query_tiles,
+                     PredictionEngine)
 
 __all__ = [
-    "local_moments", "npae_terms",
+    "local_moments", "npae_terms", "chol_factors", "local_moments_cached",
+    "npae_terms_cached", "stream_means",
     "poe", "gpoe", "bcm", "rbcm", "grbcm", "npae",
-    "cbnn_scores", "cbnn_mask",
+    "cbnn_scores", "cbnn_mask", "cbnn_scores_cached", "cbnn_mask_cached",
     "dec_poe", "dec_gpoe", "dec_bcm", "dec_rbcm", "dec_grbcm",
     "dec_npae", "dec_npae_star", "dec_nn_poe", "dec_nn_gpoe",
     "dec_nn_bcm", "dec_nn_rbcm", "dec_nn_grbcm", "dec_nn_npae",
+    "dec_poe_from_moments", "dec_gpoe_from_moments", "dec_bcm_from_moments",
+    "dec_rbcm_from_moments", "dec_grbcm_from_moments", "dec_npae_from_terms",
+    "dec_npae_star_from_terms", "dec_nn_npae_from_terms",
+    "FittedExperts", "fit_experts", "map_query_tiles", "PredictionEngine",
 ]

@@ -4,31 +4,51 @@
 agent i's dataset to the query point; agents below eta_NN sit out the
 aggregation. Computed from purely local quantities (Assumption 2 holds).
 Note eq. (39) coincides with the NPAE cross-covariance (eq. 18).
+
+Like prediction.local, this is split into a factor-cached layer (`*_cached`,
+reusing each agent's Cholesky across query batches — see prediction/engine)
+and thin per-call wrappers with the original signatures.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from ..gp.kernel import se_kernel, unpack
+from ..gp.kernel import se_kernel
 from .local import _chol
+
+
+def cbnn_scores_cached(log_theta, Xp, L, Xs):
+    """(M, Nt) correlation scores [k_mu,*]_i from precomputed factors."""
+    def one(Xi, Li):
+        ks = se_kernel(Xi, Xs, log_theta)
+        w = jax.scipy.linalg.cho_solve((Li, True), ks)
+        return jnp.sum(ks * w, axis=0)
+
+    return jax.vmap(one)(Xp, L)
+
+
+def _mask_from_scores(scores, eta_nn: float):
+    """Threshold scores; guarantee >= 1 agent per query (keep the best)."""
+    mask = scores >= eta_nn
+    best = jnp.argmax(scores, axis=0)
+    mask = mask.at[best, jnp.arange(scores.shape[1])].set(True)
+    return mask
+
+
+def cbnn_mask_cached(log_theta, Xp, L, Xs, eta_nn: float):
+    """Boolean participation mask (M, Nt) from precomputed factors."""
+    scores = cbnn_scores_cached(log_theta, Xp, L, Xs)
+    return _mask_from_scores(scores, eta_nn), scores
 
 
 def cbnn_scores(log_theta, Xp, Xs, jitter=1e-8):
     """(M, Nt) correlation scores [k_mu,*]_i per agent per query."""
-    def one(Xi):
-        L = _chol(Xi, log_theta, jitter)
-        ks = se_kernel(Xi, Xs, log_theta)
-        w = jax.scipy.linalg.cho_solve((L, True), ks)
-        return jnp.sum(ks * w, axis=0)
-    return jax.vmap(one)(Xp)
+    L = jax.vmap(lambda Xi: _chol(Xi, log_theta, jitter))(Xp)
+    return cbnn_scores_cached(log_theta, Xp, L, Xs)
 
 
 def cbnn_mask(log_theta, Xp, Xs, eta_nn: float, jitter=1e-8):
     """Boolean participation mask (M, Nt); guarantees >= 1 agent per query."""
     scores = cbnn_scores(log_theta, Xp, Xs, jitter)
-    mask = scores >= eta_nn
-    # never let a query end up with zero experts: keep the best agent
-    best = jnp.argmax(scores, axis=0)
-    mask = mask.at[best, jnp.arange(Xs.shape[0])].set(True)
-    return mask, scores
+    return _mask_from_scores(scores, eta_nn), scores

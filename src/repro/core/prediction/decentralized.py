@@ -16,6 +16,13 @@ subgraph variant stays connected; both give identical fixed points).
 
 Every method returns (mean, var, info) where info carries the consensus
 residuals so benchmarks can report communication rounds (paper Tables 5, 7).
+
+Each method exists at two levels:
+  `dec_*_from_moments` / `dec_*_from_terms` — the consensus + aggregation
+  core on PRECOMPUTED local quantities. The factor-cached serving engine
+  (prediction/engine.py) feeds these from `FittedExperts`.
+  `dec_*` — per-call wrappers with the original raw-data signatures that
+  recompute the local quantities each time.
 """
 from __future__ import annotations
 
@@ -29,7 +36,11 @@ from ..consensus.power_method import optimal_omega
 from ..gp.kernel import unpack
 from .local import local_moments, npae_terms
 from .cbnn import cbnn_mask
-from . import aggregation as agg
+
+
+def _prior_var(log_theta):
+    _, sigma_f, _ = unpack(log_theta)
+    return sigma_f**2
 
 
 def _dac_sums(w0: jax.Array, A: jax.Array, iters: int):
@@ -42,11 +53,12 @@ def _dac_sums(w0: jax.Array, A: jax.Array, iters: int):
     return M * jnp.mean(w, axis=0), res
 
 
-def _poe_family(log_theta, Xp, yp, Xs, A, iters, beta_mode: str,
-                bcm_correction: bool, mask=None):
-    mu, var = local_moments(log_theta, Xp, yp, Xs)        # (M, Nt)
-    _, sigma_f, _ = unpack(log_theta)
-    prior_var = sigma_f**2
+# ---------------------------------------------------------------------------
+# DAC family — cores on precomputed moments
+# ---------------------------------------------------------------------------
+
+def _poe_family_from_moments(mu, var, prior_var, A, iters, beta_mode: str,
+                             bcm_correction: bool, mask=None):
     m = jnp.ones_like(mu) if mask is None else \
         jnp.broadcast_to(mask, mu.shape).astype(mu.dtype)
     M_eff = jnp.sum(m, axis=0)                            # (Nt,)
@@ -72,28 +84,37 @@ def _poe_family(log_theta, Xp, yp, Xs, A, iters, beta_mode: str,
     return mean, 1.0 / prec, {"dac_residuals": res}
 
 
-def dec_poe(log_theta, Xp, yp, Xs, A, iters=200, mask=None):
-    return _poe_family(log_theta, Xp, yp, Xs, A, iters, "one", False, mask)
+def dec_poe_from_moments(mu, var, prior_var, A, iters=200, mask=None):
+    """DEC-PoE (Alg. 5) on precomputed local moments."""
+    return _poe_family_from_moments(mu, var, prior_var, A, iters, "one",
+                                    False, mask)
 
 
-def dec_gpoe(log_theta, Xp, yp, Xs, A, iters=200, mask=None):
-    return _poe_family(log_theta, Xp, yp, Xs, A, iters, "avg", False, mask)
+def dec_gpoe_from_moments(mu, var, prior_var, A, iters=200, mask=None):
+    """DEC-gPoE (Alg. 6) on precomputed local moments."""
+    return _poe_family_from_moments(mu, var, prior_var, A, iters, "avg",
+                                    False, mask)
 
 
-def dec_bcm(log_theta, Xp, yp, Xs, A, iters=200, mask=None):
-    return _poe_family(log_theta, Xp, yp, Xs, A, iters, "one", True, mask)
+def dec_bcm_from_moments(mu, var, prior_var, A, iters=200, mask=None):
+    """DEC-BCM (Alg. 7) on precomputed local moments."""
+    return _poe_family_from_moments(mu, var, prior_var, A, iters, "one",
+                                    True, mask)
 
 
-def dec_rbcm(log_theta, Xp, yp, Xs, A, iters=200, mask=None):
-    return _poe_family(log_theta, Xp, yp, Xs, A, iters, "entropy", True, mask)
+def dec_rbcm_from_moments(mu, var, prior_var, A, iters=200, mask=None):
+    """DEC-rBCM (Alg. 8) on precomputed local moments."""
+    return _poe_family_from_moments(mu, var, prior_var, A, iters, "entropy",
+                                    True, mask)
 
 
-def dec_grbcm(log_theta, Xp_aug, yp_aug, Xc, yc, Xs, A, iters=200, mask=None):
-    """DEC-grBCM (Alg. 9): three DACs on augmented-expert quantities."""
-    mu_aug, var_aug = local_moments(log_theta, Xp_aug, yp_aug, Xs)
-    mu_c, var_c = local_moments(log_theta, Xc[None], yc[None], Xs)
-    mu_c, var_c = mu_c[0], var_c[0]                        # (Nt,)
+def dec_grbcm_from_moments(mu_aug, var_aug, mu_c, var_c, A, iters=200,
+                           mask=None):
+    """DEC-grBCM (Alg. 9) core: three DACs on augmented-expert quantities.
 
+    mu_aug/var_aug (M, Nt) are the AUGMENTED experts' moments; mu_c/var_c
+    (Nt,) the communication expert's.
+    """
     m = jnp.ones_like(mu_aug) if mask is None else \
         jnp.broadcast_to(mask, mu_aug.shape).astype(mu_aug.dtype)
     beta = 0.5 * (jnp.log(var_c)[None] - jnp.log(var_aug))
@@ -109,15 +130,45 @@ def dec_grbcm(log_theta, Xp_aug, yp_aug, Xc, yc, Xs, A, iters=200, mask=None):
 
 
 # ---------------------------------------------------------------------------
+# DAC family — per-call wrappers
+# ---------------------------------------------------------------------------
+
+def dec_poe(log_theta, Xp, yp, Xs, A, iters=200, mask=None):
+    mu, var = local_moments(log_theta, Xp, yp, Xs)
+    return dec_poe_from_moments(mu, var, _prior_var(log_theta), A, iters, mask)
+
+
+def dec_gpoe(log_theta, Xp, yp, Xs, A, iters=200, mask=None):
+    mu, var = local_moments(log_theta, Xp, yp, Xs)
+    return dec_gpoe_from_moments(mu, var, _prior_var(log_theta), A, iters,
+                                 mask)
+
+
+def dec_bcm(log_theta, Xp, yp, Xs, A, iters=200, mask=None):
+    mu, var = local_moments(log_theta, Xp, yp, Xs)
+    return dec_bcm_from_moments(mu, var, _prior_var(log_theta), A, iters, mask)
+
+
+def dec_rbcm(log_theta, Xp, yp, Xs, A, iters=200, mask=None):
+    mu, var = local_moments(log_theta, Xp, yp, Xs)
+    return dec_rbcm_from_moments(mu, var, _prior_var(log_theta), A, iters,
+                                 mask)
+
+
+def dec_grbcm(log_theta, Xp_aug, yp_aug, Xc, yc, Xs, A, iters=200, mask=None):
+    """DEC-grBCM (Alg. 9): three DACs on augmented-expert quantities."""
+    mu_aug, var_aug = local_moments(log_theta, Xp_aug, yp_aug, Xs)
+    mu_c, var_c = local_moments(log_theta, Xc[None], yc[None], Xs)
+    return dec_grbcm_from_moments(mu_aug, var_aug, mu_c[0], var_c[0], A,
+                                  iters, mask)
+
+
+# ---------------------------------------------------------------------------
 # NPAE family
 # ---------------------------------------------------------------------------
 
-def _npae_via_solver(log_theta, Xp, yp, Xs, A, solver, dac_iters):
+def _npae_consensus(mu, kA, CA, prior_var, A, solver, dac_iters):
     """Shared scaffold: per-query linear solves then DAC to assemble dots."""
-    mu, kA, CA = npae_terms(log_theta, Xp, yp, Xs)         # (M,Nt),(M,Nt),(Nt,M,M)
-    _, sigma_f, _ = unpack(log_theta)
-    prior_var = sigma_f**2
-
     q_mu, q_k, solver_info = solver(CA, mu.T, kA.T)        # (Nt, M) each
 
     # each agent holds w_i = [k_A]_i * q_i ; DAC recovers the dot products
@@ -140,11 +191,11 @@ def _rel_jitter(C, rel=1e-6):
     return C + (1e-12 + rel * scale)[..., None, None] * jnp.eye(M, dtype=C.dtype)
 
 
-def dec_npae(log_theta, Xp, yp, Xs, A, jor_iters=500, dac_iters=200,
-             omega=None, jitter=1e-6):
-    """DEC-NPAE (Alg. 10): JOR (strongly complete) + DAC. Lemma 2 default
-    omega = 2/M * 0.999."""
-    M = Xp.shape[0]
+def dec_npae_from_terms(mu, kA, CA, prior_var, A, jor_iters=500,
+                        dac_iters=200, omega=None, jitter=1e-6):
+    """DEC-NPAE (Alg. 10) core: JOR (strongly complete) + DAC on precomputed
+    NPAE terms. Lemma 2 default omega = 2/M * 0.999."""
+    M = mu.shape[0]
     om = (2.0 / M) * 0.999 if omega is None else omega
 
     def solver(CA, b_mu, b_k):
@@ -156,14 +207,13 @@ def dec_npae(log_theta, Xp, yp, Xs, A, jor_iters=500, dac_iters=200,
         qm, qk, res = jax.vmap(one)(CA, b_mu, b_k)
         return qm, qk, {"jor_residual": jnp.max(res), "omega": om}
 
-    return _npae_via_solver(log_theta, Xp, yp, Xs, A, solver, dac_iters)
+    return _npae_consensus(mu, kA, CA, prior_var, A, solver, dac_iters)
 
 
-def dec_npae_star(log_theta, Xp, yp, Xs, A, jor_iters=500, dac_iters=200,
-                  pm_iters=100, jitter=1e-6):
-    """DEC-NPAE* (Alg. 12): PM/IPM estimate omega* = 2/(lmax+lmin) per query,
-    then JOR with the optimal relaxation (Lemma 3) — faster convergence."""
-    M = Xp.shape[0]
+def dec_npae_star_from_terms(mu, kA, CA, prior_var, A, jor_iters=500,
+                             dac_iters=200, pm_iters=100, jitter=1e-6):
+    """DEC-NPAE* (Alg. 12) core: PM/IPM estimate omega* = 2/(lmax+lmin) per
+    query, then JOR with the optimal relaxation (Lemma 3)."""
 
     def solver(CA, b_mu, b_k):
 
@@ -175,7 +225,24 @@ def dec_npae_star(log_theta, Xp, yp, Xs, A, jor_iters=500, dac_iters=200,
         qm, qk, res, oms = jax.vmap(one)(CA, b_mu, b_k)
         return qm, qk, {"jor_residual": jnp.max(res), "omega": oms}
 
-    return _npae_via_solver(log_theta, Xp, yp, Xs, A, solver, dac_iters)
+    return _npae_consensus(mu, kA, CA, prior_var, A, solver, dac_iters)
+
+
+def dec_npae(log_theta, Xp, yp, Xs, A, jor_iters=500, dac_iters=200,
+             omega=None, jitter=1e-6):
+    """DEC-NPAE (Alg. 10): JOR (strongly complete) + DAC."""
+    mu, kA, CA = npae_terms(log_theta, Xp, yp, Xs)
+    return dec_npae_from_terms(mu, kA, CA, _prior_var(log_theta), A,
+                               jor_iters, dac_iters, omega, jitter)
+
+
+def dec_npae_star(log_theta, Xp, yp, Xs, A, jor_iters=500, dac_iters=200,
+                  pm_iters=100, jitter=1e-6):
+    """DEC-NPAE* (Alg. 12): PM-estimated omega*, then JOR — faster
+    convergence (Lemma 3)."""
+    mu, kA, CA = npae_terms(log_theta, Xp, yp, Xs)
+    return dec_npae_star_from_terms(mu, kA, CA, _prior_var(log_theta), A,
+                                    jor_iters, dac_iters, pm_iters, jitter)
 
 
 # ---------------------------------------------------------------------------
@@ -217,18 +284,15 @@ def dec_nn_grbcm(log_theta, Xp_aug, yp_aug, Xc, yc, Xs, A, eta_nn, iters=200,
     return m, v, {**info, "mask": mask}
 
 
-def dec_nn_npae(log_theta, Xp, yp, Xs, A, eta_nn, dale_iters=2000,
-                jitter=1e-6):
-    """DEC-NN-NPAE (Alg. 18): CBNN + DALE — strongly connected suffices.
+def dec_nn_npae_from_terms(mask, mu, kA, CA, prior_var, A, dale_iters=2000,
+                           jitter=1e-6):
+    """DEC-NN-NPAE (Alg. 18) core: CBNN-masked NPAE system solved by DALE —
+    strongly connected suffices.
 
     Masked agents are decoupled (unit diagonal rows in H, zero b), so DALE
     solves the selected block exactly; the prediction is assembled from any
     agent's converged full solution vector.
     """
-    mask, _ = cbnn_mask(log_theta, Xp, Xs, eta_nn)
-    mu, kA, CA = npae_terms(log_theta, Xp, yp, Xs)
-    _, sigma_f, _ = unpack(log_theta)
-    prior_var = sigma_f**2
     M, Nt = mu.shape
     mkT = mask.T.astype(mu.dtype)                           # (Nt, M)
     eye = jnp.eye(M, dtype=mu.dtype)
@@ -248,3 +312,12 @@ def dec_nn_npae(log_theta, Xp, yp, Xs, A, eta_nn, dale_iters=2000,
     mean, kck, res = jax.vmap(one)(H, mu_m, kA_m, kA_m)
     var = jnp.maximum(prior_var - kck, 1e-12)
     return mean, var, {"dale_residual": jnp.max(res), "mask": mask}
+
+
+def dec_nn_npae(log_theta, Xp, yp, Xs, A, eta_nn, dale_iters=2000,
+                jitter=1e-6):
+    """DEC-NN-NPAE (Alg. 18): CBNN + DALE on a strongly connected graph."""
+    mask, _ = cbnn_mask(log_theta, Xp, Xs, eta_nn)
+    mu, kA, CA = npae_terms(log_theta, Xp, yp, Xs)
+    return dec_nn_npae_from_terms(mask, mu, kA, CA, _prior_var(log_theta), A,
+                                  dale_iters, jitter)

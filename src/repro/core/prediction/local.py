@@ -1,10 +1,24 @@
 """Local GP sub-model moments (paper eq. 10-11) and NPAE local quantities
-(eq. 18-19), vmapped over the agent axis."""
+(eq. 18-19), vmapped over the agent axis.
+
+Two layers (see prediction/engine.py for the serving front-end):
+
+  factor level — `chol_factors` computes each agent's Cholesky L_i and weight
+  vector alpha_i = C_i^{-1} y_i ONCE after training; the `*_cached` functions
+  consume precomputed factors, so repeated query batches never re-factorize
+  the (Ni, Ni) kernel matrices. This is the Rulliere et al.-style fit-once /
+  serve-many split every nested-aggregation implementation assumes.
+
+  per-call wrappers — `local_moments` / `npae_terms` keep the original
+  fit-and-predict-in-one-call signatures; they are the reference path the
+  cached engine is tested against.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from ...kernels.ops import rbf_matvec
 from ..gp.kernel import se_kernel, unpack
 
 
@@ -15,25 +29,57 @@ def _chol(X, log_theta, jitter=1e-8):
     return jnp.linalg.cholesky(C)
 
 
-def local_moments(log_theta, Xp, yp, Xs, jitter=1e-8):
-    """mu_i, var_i at test points. Xp (M,Ni,D), Xs (Nt,D) -> (M,Nt) each."""
-    _, sigma_f, _ = unpack(log_theta)
-    kss = sigma_f**2
+def chol_factors(log_theta, Xp, yp, jitter=1e-8):
+    """Per-agent factors, computed once after training.
 
+    Xp (M, Ni, D), yp (M, Ni) -> (L (M, Ni, Ni), alpha (M, Ni)) with
+    L_i = chol(K(X_i, X_i) + sigma_eps^2 I) and alpha_i = C_i^{-1} y_i.
+    """
     def one(Xi, yi):
         L = _chol(Xi, log_theta, jitter)
-        ks = se_kernel(Xi, Xs, log_theta)                       # (Ni, Nt)
-        alpha = jax.scipy.linalg.cho_solve((L, True), yi)
-        mu = ks.T @ alpha
-        v = jax.scipy.linalg.solve_triangular(L, ks, lower=True)
-        var = kss - jnp.sum(v * v, axis=0)
-        return mu, jnp.maximum(var, 1e-12)
+        return L, jax.scipy.linalg.cho_solve((L, True), yi)
 
     return jax.vmap(one)(Xp, yp)
 
 
-def npae_terms(log_theta, Xp, yp, Xs, jitter=1e-8):
-    """NPAE aggregation terms (paper eq. 18-21 context).
+def stream_means(log_theta, Xp, alpha, Xs):
+    """Per-agent posterior means via the fused Gram-matvec kernel.
+
+    mu_i = k(Xs, X_i) alpha_i with O(Ni + Nt) transient memory — the
+    streaming Pallas path on TPU (kernels.rbf_matvec), jnp reference on CPU.
+    Returns (M, Nt).
+    """
+    ls, sigma_f, _ = unpack(log_theta)
+    mu = jax.vmap(lambda Xi, ai: rbf_matvec(Xs, Xi, ai, ls, sigma_f))(Xp, alpha)
+    return mu.astype(Xs.dtype)
+
+
+def local_moments_cached(log_theta, Xp, L, alpha, Xs,
+                         stream_mean: bool = False):
+    """mu_i, var_i at test points from precomputed factors -> (M, Nt) each.
+
+    `stream_mean=True` routes the mean term through the fused Gram-matvec
+    (the serving hot path); the variance term still needs the triangular
+    solve against the cached factor either way.
+    """
+    _, sigma_f, _ = unpack(log_theta)
+    kss = sigma_f**2
+
+    def one(Xi, Li, ai):
+        ks = se_kernel(Xi, Xs, log_theta)                       # (Ni, Nt)
+        v = jax.scipy.linalg.solve_triangular(Li, ks, lower=True)
+        var = jnp.maximum(kss - jnp.sum(v * v, axis=0), 1e-12)
+        return ks.T @ ai, var
+
+    if stream_mean:
+        # XLA dead-code-eliminates the unused dense mean matmul here.
+        var = jax.vmap(lambda Xi, Li, ai: one(Xi, Li, ai)[1])(Xp, L, alpha)
+        return stream_means(log_theta, Xp, alpha, Xs), var
+    return jax.vmap(one)(Xp, L, alpha)
+
+
+def npae_terms_cached(log_theta, Xp, L, alpha, Xs):
+    """NPAE aggregation terms (paper eq. 18-21 context) from cached factors.
 
     Returns (mu (M,Nt), k_A (M,Nt), C_A (Nt,M,M)) where
       [k_A]_i      = k_{i,*}^T C_i^-1 k_{i,*}                       (eq. 18)
@@ -46,16 +92,14 @@ def npae_terms(log_theta, Xp, yp, Xs, jitter=1e-8):
     """
     M = Xp.shape[0]
 
-    def solve_one(Xi, yi):
-        L = _chol(Xi, log_theta, jitter)
+    def solve_one(Xi, Li, ai):
         ks = se_kernel(Xi, Xs, log_theta)                       # (Ni, Nt)
-        w = jax.scipy.linalg.cho_solve((L, True), ks)           # C_i^-1 k_i*
-        alpha = jax.scipy.linalg.cho_solve((L, True), yi)
-        mu = ks.T @ alpha                                        # (Nt,)
+        w = jax.scipy.linalg.cho_solve((Li, True), ks)          # C_i^-1 k_i*
+        mu = ks.T @ ai                                           # (Nt,)
         kA = jnp.sum(ks * w, axis=0)                             # (Nt,)
         return mu, kA, w
 
-    mu, kA, W = jax.vmap(solve_one)(Xp, yp)                      # W (M, Ni, Nt)
+    mu, kA, W = jax.vmap(solve_one)(Xp, L, alpha)                # W (M, Ni, Nt)
 
     def cross(i, j):
         Kij = se_kernel(Xp[i], Xp[j], log_theta)                 # (Ni, Nj)
@@ -67,3 +111,16 @@ def npae_terms(log_theta, Xp, yp, Xs, jitter=1e-8):
     # exact diagonal = k_A (includes the C_i^-1 through-noise path once)
     CA = CA.at[:, idx, idx].set(kA.T)
     return mu, kA, CA
+
+
+def local_moments(log_theta, Xp, yp, Xs, jitter=1e-8):
+    """Per-call wrapper (factorize-then-predict). Xp (M,Ni,D), Xs (Nt,D)
+    -> (mu, var), each (M, Nt)."""
+    L, alpha = chol_factors(log_theta, Xp, yp, jitter)
+    return local_moments_cached(log_theta, Xp, L, alpha, Xs)
+
+
+def npae_terms(log_theta, Xp, yp, Xs, jitter=1e-8):
+    """Per-call wrapper around `npae_terms_cached` (see its docstring)."""
+    L, alpha = chol_factors(log_theta, Xp, yp, jitter)
+    return npae_terms_cached(log_theta, Xp, L, alpha, Xs)

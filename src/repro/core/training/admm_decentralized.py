@@ -21,6 +21,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..consensus.graph import axis_size
+
 from ..gp.nll import nll
 
 _local_grad = jax.vmap(jax.grad(nll), in_axes=(0, 0, 0))
@@ -118,13 +120,18 @@ def train_dec_gapx_gp(log_theta0, Xp_aug, yp_aug, A, rho: float = 500.0,
 def dec_apx_gp_sharded_step(theta_i, p_i, Xi, yi, axis_name: str,
                             rho: float = 500.0, kappa: float = 5000.0):
     """One DEC-apx-GP round for THIS agent inside shard_map (cycle graph)."""
-    M = jax.lax.axis_size(axis_name)
+    M = axis_size(axis_name)
     perm_fwd = [(i, (i + 1) % M) for i in range(M)]
     perm_bwd = [(i, (i - 1) % M) for i in range(M)]
     left = jax.lax.ppermute(theta_i, axis_name, perm_fwd)
     right = jax.lax.ppermute(theta_i, axis_name, perm_bwd)
-    nbr_sum = left + right
-    deg = jnp.asarray(2.0 if M > 2 else float(min(M - 1, 1)), theta_i.dtype)
+    if M == 1:
+        nbr_sum = jnp.zeros_like(theta_i)      # self-permute: no neighbors
+    elif M == 2:
+        nbr_sum = left                          # fwd == bwd: ONE shared neighbor
+    else:
+        nbr_sum = left + right
+    deg = jnp.asarray(float(min(M - 1, 2)), theta_i.dtype)
     g = jax.grad(nll)(theta_i, Xi, yi)
     th, p = dec_apx_update(theta_i[None], p_i[None], g[None],
                            nbr_sum[None], deg[None], rho, kappa)

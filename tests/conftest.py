@@ -1,10 +1,117 @@
+"""Test-session config: float64 numerics and a graceful `hypothesis` fallback.
+
+GP numerics (Cholesky of nearly-singular covariances) need float64; model
+code uses explicit float32/bfloat16 so this is safe globally in tests.
+NOTE: dryrun.py / production runs do NOT enable x64.
+
+Several tier-1 modules use hypothesis property tests. The container image is
+not guaranteed to ship `hypothesis` (it is a dev-only dependency, see
+requirements-dev.txt), and a missing import used to kill COLLECTION of five
+whole test modules. When the real package is absent we install a minimal,
+deterministic stand-in that supports exactly the API surface the suite uses
+(`given`, `settings`, `strategies.{integers,floats,sampled_from,booleans}`)
+and runs each property on a fixed pseudo-random sample including the
+strategy endpoints. Install the real package to get actual shrinking
+property-based testing.
+"""
+import random
+import sys
+import types
+
 import jax
 import pytest
 
-# GP numerics (Cholesky of nearly-singular covariances) need float64; model
-# code uses explicit float32/bfloat16 so this is safe globally in tests.
-# NOTE: dryrun.py / production runs do NOT enable x64.
 jax.config.update("jax_enable_x64", True)
+
+
+def _install_hypothesis_fallback():
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_at(self, rnd, k):
+            return self._draw(rnd, k)
+
+    def integers(min_value, max_value):
+        def draw(rnd, k):
+            if k == 0:
+                return min_value
+            if k == 1:
+                return max_value
+            return rnd.randint(min_value, max_value)
+        return _Strategy(draw)
+
+    def floats(min_value, max_value, **_kw):
+        def draw(rnd, k):
+            if k == 0:
+                return float(min_value)
+            if k == 1:
+                return float(max_value)
+            return rnd.uniform(min_value, max_value)
+        return _Strategy(draw)
+
+    def sampled_from(elements):
+        elements = list(elements)
+
+        def draw(rnd, k):
+            if k < len(elements):
+                return elements[k]
+            return rnd.choice(elements)
+        return _Strategy(draw)
+
+    def booleans():
+        return sampled_from([False, True])
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    def given(*strategies, **kw_strategies):
+        def decorate(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_stub_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                rnd = random.Random(0)
+                for k in range(n):
+                    pos = tuple(s.example_at(rnd, k) for s in strategies)
+                    kws = {name: s.example_at(rnd, k)
+                           for name, s in kw_strategies.items()}
+                    fn(*args, *pos, **kwargs, **kws)
+            # NOTE: deliberately no __wrapped__ — pytest would follow it and
+            # mistake the strategy parameters for fixtures.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return decorate
+
+    class settings:
+        def __init__(self, max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None,
+                     **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._stub_max_examples = self.max_examples
+            return fn
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.floats = floats
+    st_mod.sampled_from = sampled_from
+    st_mod.booleans = booleans
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st_mod
+    hyp.__version__ = "0.0-fallback"
+    hyp.IS_FALLBACK_STUB = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:  # pragma: no cover - depends on the environment
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:  # pragma: no cover
+    _install_hypothesis_fallback()
 
 
 @pytest.fixture(scope="session")

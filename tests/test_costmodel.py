@@ -31,7 +31,7 @@ def _compiled_fwd_flops(cfg, B, S):
         return logits
 
     c = jax.jit(f).lower(params, toks).compile()
-    return float(c.cost_analysis()["flops"])
+    return cm.compiled_flops(c)
 
 
 def test_xla_counts_scan_body_once():
@@ -43,7 +43,7 @@ def test_xla_counts_scan_body_once():
     def scanned(x, W):
         return jax.lax.scan(lambda c, w: (c @ w, None), x, W)[0]
 
-    got = jax.jit(scanned).lower(x, W).compile().cost_analysis()["flops"]
+    got = cm.compiled_flops(jax.jit(scanned).lower(x, W).compile())
     assert abs(got - 2 * n**3) / (2 * n**3) < 0.01   # 1 body, not 8
 
 

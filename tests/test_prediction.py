@@ -51,16 +51,31 @@ def test_proposition_1_gpoe_conservative_variance(setup):
     assert np.all(np.asarray(v_gpoe) <= PRIOR_VAR + 1e-9)
 
 
-def test_npae_closest_to_full_gp(setup):
-    Xp, yp, Xs, mu, var = setup
-    X = Xp.reshape(-1, 2)
-    y = yp.reshape(-1)
-    m_full, v_full = predict_full(TRUE_LT, X, y, Xs)
-    mu_n, kA, CA = npae_terms(TRUE_LT, Xp, yp, Xs)
-    m_np, v_np = npae(mu_n, kA, CA, PRIOR_VAR)
-    m_poe, _ = poe(mu, var)
-    assert rmse(m_np, m_full) <= rmse(m_poe, m_full) + 1e-6
-    assert rmse(m_np, m_full) < 0.1
+def test_npae_closest_to_full_gp():
+    """NPAE is the consistent nested aggregation (Rulliere et al.) and should
+    track the full GP at least as well as PoE — but only IN EXPECTATION. On
+    individual draws PoE can win by a hair (seed 0 of this generator: 0.0314
+    vs 0.0333 RMSE, regardless of solve jitter down to exactly zero), so the
+    assertion is statistical: aggregate RMSE over independent fields.
+    Documented tolerance: NPAE wins on aggregate, and stays within 0.1
+    absolute of the full GP on every draw."""
+    sq_np = sq_poe = 0.0
+    for s in range(4):
+        X = random_inputs(jax.random.PRNGKey(10 * s), 1600)
+        _, y = gp_sample_field(jax.random.PRNGKey(10 * s + 1), X, TRUE_LT)
+        Xp, yp = stripe_partition(X, y, M)
+        Xs = random_inputs(jax.random.PRNGKey(10 * s + 2), 40)
+        mu, var = local_moments(TRUE_LT, Xp, yp, Xs)
+        m_full, _ = predict_full(TRUE_LT, Xp.reshape(-1, 2), yp.reshape(-1),
+                                 Xs)
+        mu_n, kA, CA = npae_terms(TRUE_LT, Xp, yp, Xs)
+        m_np, _ = npae(mu_n, kA, CA, PRIOR_VAR)
+        m_poe, _ = poe(mu, var)
+        r_np, r_poe = rmse(m_np, m_full), rmse(m_poe, m_full)
+        assert r_np < 0.1
+        sq_np += r_np**2
+        sq_poe += r_poe**2
+    assert sq_np <= sq_poe + 1e-6
 
 
 @pytest.mark.parametrize("dec_fn,cen_fn,needs_prior", [

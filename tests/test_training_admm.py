@@ -113,3 +113,22 @@ def test_dec_apx_sharded_matches_simulated():
     th_sim, _ = train_dec_apx_gp(LT0, Xp, yp, cycle_graph(4), iters=40)
     np.testing.assert_allclose(np.asarray(th_sh), np.asarray(th_sim),
                                rtol=1e-6, atol=1e-8)
+
+
+def test_dec_apx_sharded_two_agents_matches_simulated():
+    """M=2 ring regression for dec_apx_gp_sharded_step: ppermute fwd == bwd
+    delivers ONE shared neighbor; summing both directions double-counted it
+    (nbr_sum = 2*theta_other with deg = 1), so 2-agent sharded training
+    diverged from the simulated reference."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices (run under forced host devices)")
+    from repro.core.training import train_dec_apx_gp_sharded
+    from repro.core.consensus import cycle_graph
+    X = random_inputs(jax.random.PRNGKey(0), 200)
+    _, y = gp_sample_field(jax.random.PRNGKey(1), X, TRUE_LT)
+    Xp, yp = stripe_partition(X, y, 2)
+    mesh = jax.make_mesh((2,), ("agents",))
+    th_sh, _ = train_dec_apx_gp_sharded(mesh, "agents", LT0, Xp, yp, iters=40)
+    th_sim, _ = train_dec_apx_gp(LT0, Xp, yp, cycle_graph(2), iters=40)
+    np.testing.assert_allclose(np.asarray(th_sh), np.asarray(th_sim),
+                               rtol=1e-6, atol=1e-8)
