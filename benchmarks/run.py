@@ -20,7 +20,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="all",
                     choices=["all", "training", "prediction", "serving",
-                             "roofline", "kernels"])
+                             "online", "roofline", "kernels"])
     args = ap.parse_args()
 
     out = sys.stdout
@@ -55,6 +55,15 @@ def main() -> None:
                                          csv=csv)
         else:
             bench_prediction.run_serving(csv=csv)
+
+    if args.only in ("all", "online"):
+        from . import bench_online
+        csv("# === online GP (incremental update vs refit; live serving) ===")
+        if args.full:
+            bench_online.run(sizes=(128, 512, 2048, 4096), reps=5,
+                             serve_rounds=64, csv=csv)
+        else:
+            bench_online.run(csv=csv)
 
     if args.only in ("all", "roofline"):
         from . import bench_roofline

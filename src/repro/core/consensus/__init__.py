@@ -1,6 +1,7 @@
 from .graph import (path_graph, cycle_graph, complete_graph,
                     random_connected_graph, degree_matrix, laplacian,
-                    max_degree, perron, diameter, is_connected)
+                    max_degree, perron, diameter, is_connected,
+                    attach_agent, remove_agent)
 from .dac import dac, dac_until, dac_residual, dac_sharded, dac_time_varying
 from .jor import jor, jor_sharded
 from .power_method import power_method, extreme_eigs, optimal_omega
@@ -10,7 +11,8 @@ from .flooding import flood, flood_sharded
 __all__ = [
     "path_graph", "cycle_graph", "complete_graph", "random_connected_graph",
     "degree_matrix", "laplacian", "max_degree", "perron", "diameter",
-    "is_connected", "dac", "dac_until", "dac_residual", "dac_sharded",
+    "is_connected", "attach_agent", "remove_agent",
+    "dac", "dac_until", "dac_residual", "dac_sharded",
     "dac_time_varying",
     "jor", "jor_sharded", "power_method", "extreme_eigs", "optimal_omega",
     "dale", "dale_sharded", "flood", "flood_sharded",

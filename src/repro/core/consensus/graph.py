@@ -41,6 +41,42 @@ def random_connected_graph(M: int, p: float, seed: int = 0) -> jnp.ndarray:
     return jnp.asarray(A)
 
 
+def attach_agent(A: jax.Array, neighbors) -> jnp.ndarray:
+    """Grow A by one node wired (bidirectionally) to `neighbors`.
+
+    The joiner must attach to at least one existing agent or the fleet
+    would split into components and consensus would silently average
+    per-component.
+    """
+    An = np.asarray(A)
+    M = An.shape[0]
+    neighbors = [int(n) for n in np.atleast_1d(np.asarray(neighbors))]
+    if M and not neighbors:
+        raise ValueError("joining agent needs at least one neighbor")
+    if any(not 0 <= n < M for n in neighbors):
+        raise ValueError(f"neighbors {neighbors} out of range for M={M}")
+    A2 = np.zeros((M + 1, M + 1), An.dtype)
+    A2[:M, :M] = An
+    for n in neighbors:
+        A2[M, n] = A2[n, M] = 1.0
+    return jnp.asarray(A2)
+
+
+def remove_agent(A: jax.Array, i: int, reconnect: bool = True) -> jnp.ndarray:
+    """Delete node i from A. With `reconnect`, the removed node's former
+    neighbors are chained in index order, so removing a cut vertex (e.g.
+    an interior path node) cannot disconnect the graph."""
+    An = np.asarray(A)
+    i = int(i)
+    nbrs = np.flatnonzero(An[i] > 0)
+    A2 = np.delete(np.delete(An, i, axis=0), i, axis=1)
+    if reconnect and len(nbrs) > 1:
+        shifted = [int(n) - (n > i) for n in nbrs]
+        for a, b in zip(shifted[:-1], shifted[1:]):
+            A2[a, b] = A2[b, a] = 1.0
+    return jnp.asarray(A2)
+
+
 def degree_matrix(A: jax.Array) -> jax.Array:
     return jnp.diag(jnp.sum(A, axis=1))
 

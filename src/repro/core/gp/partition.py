@@ -7,6 +7,8 @@ agent augments D_{+i} = D_i ∪ D_c (so |D_{+i}| = 2 N_i).
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 
@@ -14,12 +16,19 @@ import jax.numpy as jnp
 def stripe_partition(X: jax.Array, y: jax.Array, M: int, axis: int = 0):
     """Sort by coordinate `axis` and split into M equal stripes.
 
-    Returns (Xp, yp) with shapes (M, N_i, D) and (M, N_i). Drops a remainder of
-    at most M-1 points so all local datasets are equal-sized (paper assumes
-    N_i = N/M exactly).
+    Returns (Xp, yp) with shapes (M, N_i, D) and (M, N_i). Drops a remainder
+    of at most M-1 points so all local datasets are equal-sized (paper
+    assumes N_i = N/M exactly); a non-zero drop is signalled with a
+    UserWarning so truncation can't pass silently.
     """
     order = jnp.argsort(X[:, axis])
     n = (X.shape[0] // M) * M
+    dropped = X.shape[0] - n
+    if dropped:
+        warnings.warn(
+            f"stripe_partition: dropping {dropped} trailing point(s) of "
+            f"N={X.shape[0]} to make {M} equal stripes of {n // M}",
+            UserWarning, stacklevel=2)
     order = order[:n]
     Xs, ys = X[order], y[order]
     return (Xs.reshape(M, n // M, X.shape[1]), ys.reshape(M, n // M))

@@ -1,0 +1,13 @@
+"""Online/streaming GP subsystem: sliding-window experts with incremental
+rank-1 Cholesky factor maintenance, and dynamic fleet membership.
+
+See docs/online_gp.md for the update/downdate math, window semantics, the
+join/leave protocol, and serving integration."""
+from .experts import (OnlineExperts, evict_oldest, from_batch, init_online,
+                      observe, observe_fleet, refit)
+from .membership import join, leave
+
+__all__ = [
+    "OnlineExperts", "init_online", "from_batch", "refit",
+    "observe", "observe_fleet", "evict_oldest", "join", "leave",
+]

@@ -1,0 +1,65 @@
+"""Dynamic agent membership for a streaming fleet.
+
+Agents join and leave a live fleet. Both operations change the agent-axis
+shape, so they run host-side (outside jit); the returned (state, A) pair
+re-enters the jit world through `PredictionEngine.rewire` — the consensus
+protocols (DAC/JOR/DALE) are stateless across predict calls, so re-syncing
+them means exactly: new adjacency, new Perron weights, fresh compiled
+traces. Connectivity is preserved by construction: a joiner attaches to at
+least one existing agent, and a leaver's former neighbors are re-chained
+(consensus over a disconnected graph silently averages per-component,
+which would corrupt every DAC-family prediction).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..consensus.graph import attach_agent, is_connected, remove_agent
+from .experts import OnlineExperts, from_batch, init_online
+
+
+def join(state: OnlineExperts, A, X_new=None, y_new=None,
+         neighbors=None):
+    """Add one agent; returns (state', A') with M+1 agents.
+
+    `X_new (n, D)` / `y_new (n,)` seed the joiner's window (last W points
+    kept); omitted, it joins empty and warms up through `observe`.
+    `neighbors` are the existing agents it can exchange messages with
+    (default: the current last agent — extends a path/ring topology).
+    """
+    M, W, D = state.Xw.shape
+    if neighbors is None:
+        neighbors = (M - 1,)
+    if X_new is not None:
+        new = from_batch(state.log_theta, jnp.asarray(X_new)[None],
+                         jnp.asarray(y_new)[None], window=W,
+                         jitter=float(state.jitter))
+    else:
+        new = init_online(state.log_theta, 1, W, D, dtype=state.Xw.dtype,
+                          jitter=float(state.jitter))
+    merged = state._replace(
+        Xw=jnp.concatenate([state.Xw, new.Xw]),
+        yw=jnp.concatenate([state.yw, new.yw]),
+        L=jnp.concatenate([state.L, new.L]),
+        alpha=jnp.concatenate([state.alpha, new.alpha]),
+        count=jnp.concatenate([state.count, new.count]))
+    return merged, attach_agent(A, neighbors)
+
+
+def leave(state: OnlineExperts, A, agent: int):
+    """Remove agent `agent`; returns (state', A') with M-1 agents, former
+    neighbors re-chained so the consensus graph stays connected."""
+    M = state.num_agents
+    agent = int(agent)
+    if not 0 <= agent < M:
+        raise ValueError(f"agent {agent} not in fleet of {M}")
+    if M <= 1:
+        raise ValueError("cannot remove the last agent")
+    keep = np.delete(np.arange(M), agent)
+    shrunk = state._replace(
+        Xw=state.Xw[keep], yw=state.yw[keep], L=state.L[keep],
+        alpha=state.alpha[keep], count=state.count[keep])
+    A2 = remove_agent(A, agent, reconnect=True)
+    assert is_connected(A2), "leave() broke graph connectivity"
+    return shrunk, A2

@@ -1,4 +1,4 @@
-from .local import (local_moments, npae_terms, chol_factors,
+from .local import (local_moments, npae_terms, chol_factors, cross_gram,
                     local_moments_cached, npae_terms_cached, stream_means)
 from .aggregation import poe, gpoe, bcm, rbcm, grbcm, npae
 from .cbnn import (cbnn_scores, cbnn_mask, cbnn_scores_cached,
@@ -15,8 +15,8 @@ from .engine import (FittedExperts, fit_experts, map_query_tiles,
                      PredictionEngine)
 
 __all__ = [
-    "local_moments", "npae_terms", "chol_factors", "local_moments_cached",
-    "npae_terms_cached", "stream_means",
+    "local_moments", "npae_terms", "chol_factors", "cross_gram",
+    "local_moments_cached", "npae_terms_cached", "stream_means",
     "poe", "gpoe", "bcm", "rbcm", "grbcm", "npae",
     "cbnn_scores", "cbnn_mask", "cbnn_scores_cached", "cbnn_mask_cached",
     "dec_poe", "dec_gpoe", "dec_bcm", "dec_rbcm", "dec_grbcm",

@@ -37,8 +37,8 @@ from .decentralized import (dec_poe_from_moments, dec_gpoe_from_moments,
                             dec_bcm_from_moments, dec_rbcm_from_moments,
                             dec_grbcm_from_moments, dec_npae_from_terms,
                             dec_npae_star_from_terms, dec_nn_npae_from_terms)
-from .local import (chol_factors, local_moments_cached, npae_terms_cached,
-                    stream_means)
+from .local import (chol_factors, cross_gram, local_moments_cached,
+                    npae_terms_cached, stream_means)
 
 
 class FittedExperts(NamedTuple):
@@ -48,6 +48,8 @@ class FittedExperts(NamedTuple):
     yp: jax.Array          # (M, Ni)
     L: jax.Array           # (M, Ni, Ni)  chol(K(X_i, X_i) + sigma_eps^2 I)
     alpha: jax.Array       # (M, Ni)      C_i^{-1} y_i
+    Kcross: jax.Array | None = None   # (M, M, Ni, Ni) cross-agent Gram
+    #                                   blocks (fit_experts cache_cross=True)
 
     @property
     def num_agents(self) -> int:
@@ -59,10 +61,32 @@ class FittedExperts(NamedTuple):
         return sigma_f**2
 
 
-def fit_experts(log_theta, Xp, yp, jitter: float = 1e-8) -> FittedExperts:
-    """Factorize every agent's kernel matrix ONCE; reused by all methods."""
+def fit_experts(log_theta, Xp, yp, jitter: float = 1e-8,
+                cache_cross: bool = False,
+                cross_cache_limit_mb: float = 1024.0) -> FittedExperts:
+    """Factorize every agent's kernel matrix ONCE; reused by all methods.
+
+    `cache_cross=True` additionally precomputes the (M, M, Ni, Ni)
+    cross-agent Gram blocks the NPAE family re-assembles on every query
+    batch, trading O(M^2 Ni^2) memory for the dominant per-request cost.
+    The estimate is guarded against `cross_cache_limit_mb` at trace time
+    (shapes are static); raise the limit explicitly for big fleets. Note
+    `cache_cross` is a Python-level flag: under jit, close over it
+    (functools.partial) rather than passing it as a traced argument.
+    """
     L, alpha = chol_factors(log_theta, Xp, yp, jitter)
-    return FittedExperts(log_theta, Xp, yp, L, alpha)
+    Kcross = None
+    if cache_cross:
+        M, Ni = Xp.shape[0], Xp.shape[1]
+        est_mb = M * M * Ni * Ni * jnp.dtype(Xp.dtype).itemsize / 2**20
+        if est_mb > cross_cache_limit_mb:
+            raise ValueError(
+                f"cache_cross would materialize {est_mb:.2f} MB of cross-"
+                f"agent Gram blocks (M={M}, Ni={Ni}) > limit "
+                f"{cross_cache_limit_mb:.0f} MB; raise "
+                f"cross_cache_limit_mb or serve without the cache")
+        Kcross = cross_gram(log_theta, Xp)
+    return FittedExperts(log_theta, Xp, yp, L, alpha, Kcross)
 
 
 def map_query_tiles(tile_fn, Xs, chunk: int):
@@ -112,7 +136,11 @@ class PredictionEngine:
     One compiled program per (method, query-batch geometry): repeated
     requests with the same Nt reuse the jit cache, and `chunk`-sized tiles
     bound peak memory at any Nt. Configuration attributes are baked at first
-    `predict` per method — treat the engine as immutable after construction.
+    `predict` per method — mutate the engine only through `swap_experts`
+    (same-shape factor hot-swap, keeps every compiled program: the experts
+    are a traced ARGUMENT of the cached jits) and `rewire` (membership /
+    topology change, drops the compiled cache because A and M are baked
+    into the traces).
     """
 
     METHODS = ("poe", "gpoe", "bcm", "rbcm", "grbcm", "npae", "npae_star",
@@ -148,7 +176,8 @@ class PredictionEngine:
                                     stream_mean=self.stream_mean)
 
     def _terms(self, f: FittedExperts, Xq):
-        return npae_terms_cached(f.log_theta, f.Xp, f.L, f.alpha, Xq)
+        return npae_terms_cached(f.log_theta, f.Xp, f.L, f.alpha, Xq,
+                                 Kcross=f.Kcross)
 
     def _tile(self, method: str, f, fa, fc, Xq):
         A, pv = self.A, f.prior_var
@@ -237,6 +266,58 @@ class PredictionEngine:
         if mask_t is not None:
             info["mask"] = mask_t.T
         return perq["mean"], perq["var"], info
+
+    def swap_experts(self, fitted: FittedExperts,
+                     fitted_aug: FittedExperts | None = None,
+                     fitted_comm: FittedExperts | None = None):
+        """Hot-swap the served factors WITHOUT recompilation.
+
+        The experts pytree is an argument of every compiled program, so a
+        same-structure, same-shape replacement (the streaming case:
+        `OnlineExperts.to_fitted()` after observe/evict events) reuses the
+        jit cache. Raises if the structure/shapes changed — that is a
+        membership change; use `rewire`.
+        """
+        def spec(t):
+            leaves, treedef = jax.tree.flatten(t)
+            return treedef, [(a.shape, jnp.asarray(a).dtype) for a in leaves]
+
+        for name, new, old in (("fitted", fitted, self.fitted),
+                               ("fitted_aug", fitted_aug, self.fitted_aug),
+                               ("fitted_comm", fitted_comm,
+                                self.fitted_comm)):
+            if new is None:
+                continue
+            if old is not None and spec(new) != spec(old):
+                raise ValueError(
+                    f"swap_experts: {name} structure/shapes changed (agent "
+                    f"membership or window geometry) — use rewire()")
+        self.fitted = fitted
+        if fitted_aug is not None:
+            self.fitted_aug = fitted_aug
+        if fitted_comm is not None:
+            self.fitted_comm = fitted_comm
+
+    def rewire(self, A, fitted: FittedExperts | None = None,
+               fitted_aug: FittedExperts | None = None,
+               fitted_comm: FittedExperts | None = None):
+        """Apply a membership/topology change (core.online.join / leave):
+        new adjacency and optionally a new fleet. Drops every compiled
+        program — the consensus protocols bake A (and M) into the trace,
+        so this is also what re-syncs DAC/JOR/DALE to the new graph."""
+        experts = fitted if fitted is not None else self.fitted
+        if experts.num_agents != A.shape[0]:
+            raise ValueError(
+                f"rewire: {experts.num_agents} fitted agents vs "
+                f"adjacency for {A.shape[0]}")
+        self.A = A
+        if fitted is not None:
+            self.fitted = fitted
+        if fitted_aug is not None:
+            self.fitted_aug = fitted_aug
+        if fitted_comm is not None:
+            self.fitted_comm = fitted_comm
+        self._compiled.clear()
 
     def posterior_means_streamed(self, Xs):
         """Per-agent streamed posterior means (M, Nt) via the fused

@@ -78,7 +78,19 @@ def local_moments_cached(log_theta, Xp, L, alpha, Xs,
     return jax.vmap(one)(Xp, L, alpha)
 
 
-def npae_terms_cached(log_theta, Xp, L, alpha, Xs):
+def cross_gram(log_theta, Xp):
+    """All cross-agent Gram blocks K(X_i, X_j) -> (M, M, Ni, Ni).
+
+    O(M^2 Ni^2) memory — `fit_experts(cache_cross=True)` guards the
+    estimate before materializing; `npae_terms_cached` consumes it to skip
+    the per-query-batch cross-covariance assembly (the NPAE serving
+    bottleneck, see ROADMAP).
+    """
+    return jax.vmap(lambda Xi: jax.vmap(
+        lambda Xj: se_kernel(Xi, Xj, log_theta))(Xp))(Xp)
+
+
+def npae_terms_cached(log_theta, Xp, L, alpha, Xs, Kcross=None):
     """NPAE aggregation terms (paper eq. 18-21 context) from cached factors.
 
     Returns (mu (M,Nt), k_A (M,Nt), C_A (Nt,M,M)) where
@@ -89,6 +101,10 @@ def npae_terms_cached(log_theta, Xp, L, alpha, Xs):
     typo; we implement the Rulliere et al. / Bachoc et al. covariance
     Cov(mu_i, mu_j) above. Off-diagonal blocks use the noise-free K(X_i, X_j)
     because measurement noise is iid across disjoint local datasets.
+
+    `Kcross` (M, M, Ni, Ni), when given (see `cross_gram` /
+    `fit_experts(cache_cross=True)`), replaces the per-call off-diagonal
+    Gram assembly — the dominant NPAE serving cost at large Ni.
     """
     M = Xp.shape[0]
 
@@ -102,7 +118,8 @@ def npae_terms_cached(log_theta, Xp, L, alpha, Xs):
     mu, kA, W = jax.vmap(solve_one)(Xp, L, alpha)                # W (M, Ni, Nt)
 
     def cross(i, j):
-        Kij = se_kernel(Xp[i], Xp[j], log_theta)                 # (Ni, Nj)
+        Kij = (se_kernel(Xp[i], Xp[j], log_theta) if Kcross is None
+               else Kcross[i, j])                                # (Ni, Nj)
         return jnp.einsum("it,ij,jt->t", W[i], Kij, W[j])        # (Nt,)
 
     idx = jnp.arange(M)

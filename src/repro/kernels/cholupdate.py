@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: blocked rank-1 Cholesky update / downdate.
+
+Given L lower-triangular with L L^T = A, computes L' with
+
+  L' L'^T = A + sign * x x^T        (sign = +1 update, -1 downdate)
+
+in O(n^2) — the streaming-GP primitive that replaces the O(n^3)
+refactorization when an observation is appended to or evicted from an
+agent's window (core/online). The column sweep is the LINPACK
+Givens/hyperbolic-rotation recurrence; columns are processed in panels of
+`bk` so each grid step owns one (n, bk) VMEM-resident panel while the
+rotated rank-1 vector x is carried across panels in a VMEM scratch
+accumulator (same sequential-grid + scratch-carry schedule as
+rbf_matvec's accumulator).
+
+Per column k:  r   = sqrt(L_kk^2 + sign * x_k^2)
+               c,s = r / L_kk,  x_k / L_kk
+               L'_{tail,k} = (L_{tail,k} + sign * s * x_tail) / c
+               x_tail      = c * x_tail - s * L'_{tail,k}
+
+Zero x_k leaves column k untouched (c=1, s=0), which ops.py exploits to
+pad to tile-aligned shapes with an identity diagonal, and core/online
+exploits to restrict the rotation to the trailing sub-block of a factor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(sign_ref, x_ref, l_ref, out_ref, x_acc, *, bk, n):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        x_acc[...] = x_ref[...]
+
+    sign = sign_ref[0, 0]
+    panel = l_ref[...]                                   # (n, bk)
+    x = x_acc[...]                                       # (n, 1)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
+
+    def body(t, carry):
+        panel, x = carry
+        k = j * bk + t
+        col = jax.lax.dynamic_slice_in_dim(panel, t, 1, axis=1)   # (n, 1)
+        at_k = (rows == k).astype(panel.dtype)
+        Lkk = jnp.sum(col * at_k)
+        xk = jnp.sum(x * at_k)
+        r = jnp.sqrt(jnp.maximum(Lkk * Lkk + sign * xk * xk, 1e-30))
+        c = r / Lkk
+        s = xk / Lkk
+        below = rows > k
+        newcol = jnp.where(below, (col + sign * s * x) / c, col)
+        newcol = jnp.where(rows == k, r, newcol)
+        x = jnp.where(below, c * x - s * newcol, x)
+        panel = jax.lax.dynamic_update_slice_in_dim(panel, newcol, t, axis=1)
+        return panel, x
+
+    panel, x = jax.lax.fori_loop(0, bk, body, (panel, x))
+    out_ref[...] = panel
+    x_acc[...] = x
+
+
+def cholupdate_pallas(L, x, sign, bk: int = 128, interpret: bool = False):
+    """L (n, n) float32 lower-triangular, x (n,), n % bk == 0 (ops.py pads
+    with a unit diagonal). Returns the updated factor (n, n) float32."""
+    n = L.shape[0]
+    params = jnp.asarray(sign, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk, n=n),
+        grid=(n // bk,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+            pl.BlockSpec((n, 1), lambda j: (0, 0)),
+            pl.BlockSpec((n, bk), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n, bk), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, 1), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(params, x.reshape(n, 1).astype(jnp.float32), L)
+    return out

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .cholupdate import cholupdate_pallas
 from .rbf_gram import rbf_gram_pallas
 from .rbf_matvec import rbf_matvec_pallas
 from .flash_attention import flash_attention_pallas
@@ -106,3 +107,50 @@ def rbf_matvec(x1, x2, v, lengthscales, sigma_f, use_pallas: bool | None = None,
     out = rbf_matvec_pallas(a, b, vp, jnp.asarray(sigma_f) ** 2,
                             bn=bn_, bm=bm_, interpret=interpret)
     return out[:N]
+
+
+@partial(jax.jit, static_argnames=("downdate", "use_pallas", "interpret",
+                                   "bk", "shift"))
+def cholupdate(L, x, downdate: bool = False, use_pallas: bool | None = None,
+               interpret: bool | None = None, bk: int = 256,
+               shift: int = 0):
+    """Rank-1 Cholesky update/downdate chol(L L^T +/- x x^T) — O(n^2).
+
+    L (n, n) lower-triangular, x (n,). Padded columns get a unit diagonal
+    and a zero x entry, which the column sweep provably leaves untouched,
+    so tile alignment never perturbs the factor. The pure-jnp path keeps
+    the input dtype (float64-safe); the Pallas path COMPUTES in float32
+    like the other TPU kernels but casts back to L.dtype — callers that
+    persist the factor in a pytree (core/online) rely on the dtype being
+    preserved.
+
+    `shift=k` (static) updates the trailing block L[k:, k:] with x[k:] and
+    returns it moved k slots up-left (fused on the jnp path; the trailing
+    k rows/cols of the result are stale — see ref.cholupdate_ref).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.cholupdate_ref(L, x, downdate, bk, shift)
+    if interpret is None:
+        interpret = not _on_tpu()
+    if shift:
+        # Pallas path: update the trailing block, then one block move
+        # (HBM bandwidth makes the extra copy cheap on TPU)
+        n = L.shape[0]
+        sub = cholupdate(L[shift:, shift:], x[shift:], downdate,
+                         use_pallas, interpret, bk)
+        return L.at[:n - shift, :n - shift].set(sub.astype(L.dtype))
+    n = L.shape[0]
+    # the Pallas kernel holds two (n, bk) panels in VMEM — cap the panel
+    # width (the jnp path takes `bk` as given)
+    bk_ = min(bk, 128, max(8, n))
+    pad = (-n) % bk_
+    Lp = jnp.pad(L.astype(jnp.float32), ((0, pad), (0, pad)))
+    if pad:
+        tail = jnp.arange(n, n + pad)
+        Lp = Lp.at[tail, tail].set(1.0)
+    xp = _pad_to(x.astype(jnp.float32), bk_, 0)
+    sign = -1.0 if downdate else 1.0
+    out = cholupdate_pallas(Lp, xp, sign, bk=bk_, interpret=interpret)
+    return out[:n, :n].astype(L.dtype)

@@ -52,3 +52,76 @@ def flash_attention_ref(q, k, v, causal: bool = True, scale: float | None = None
 def rbf_matvec_ref(x1, x2, v, lengthscales, sigma_f):
     """k(X1, X2) @ v without the kernel (oracle materializes the Gram)."""
     return rbf_gram_ref(x1, x2, lengthscales, sigma_f) @ v
+
+
+def cholupdate_ref(L, x, downdate: bool = False, bk: int = 128,
+                   shift: int = 0):
+    """Rank-1 Cholesky update/downdate: chol(L L^T + sign x x^T) in O(n^2).
+
+    Blocked LINPACK column sweep (Givens rotations for the update,
+    hyperbolic for the downdate), the jnp mirror of the Pallas panel
+    schedule in cholupdate.py. Columns are processed in `bk`-wide panels
+    over STATIC slices (the Python loop unrolls into the jit), each panel a
+    lax.scan over its columns carrying only the rotated rank-1 vector. Two
+    hot-path properties:
+
+      panel skip — a panel whose x entries are all zero applies only
+      identity rotations, so it is skipped behind a lax.cond without
+      touching its columns. Callers exploit this: padding (identity
+      diagonal, zero x) is provably untouched, and a rotation vector that
+      is zero up to position p (evicting/inserting window slot p in
+      core/online) only ever sweeps the trailing panels.
+
+      maskless steps with deferred scaling — within a step, entries ABOVE
+      the current column's diagonal are never read again by construction
+      (step t reads x[t] and writes only information consumed at indices
+      > t), so the sweep skips the tail masking entirely; the garbage it
+      leaves lives only in the panel's top (b, b) triangle, zeroed with
+      one small triu per panel. Each emitted column is kept UNSCALED (the
+      1/c_t division is applied panel-wide after the scan), shaving one
+      full vector pass per column off the hot loop.
+
+    `shift=k` (static) runs the update on the trailing block L[k:, k:]
+    with x[k:] and writes the result k slots up-left — the fused
+    evict-the-oldest move of core/online's sliding window, for free: a
+    panel's shifted destination covers only columns strictly left of every
+    later panel's reads. Rows/cols n-k .. n-1 of the output hold stale
+    values the caller must refresh (the sentinel row/column).
+
+    Downdates assume L L^T - x x^T stays positive definite; the sqrt
+    argument is clamped to the dtype tiny so a marginally indefinite
+    downdate degrades instead of producing NaNs.
+    """
+    n = L.shape[0]
+    sign = -1.0 if downdate else 1.0
+    tiny = jnp.finfo(L.dtype).tiny
+
+    for k0 in range(shift, n, bk):
+        b = min(bk, n - k0)
+        panel = L[k0:, k0:k0 + b]                          # (m, b) static
+        xs = x[k0:]
+
+        def process(args, b=b):
+            panel, xs = args
+
+            def step(xc, inp):
+                t, col = inp
+                Lkk = col[t]
+                xk = xc[t]
+                r = jnp.sqrt(jnp.maximum(Lkk * Lkk + sign * xk * xk, tiny))
+                c = r / Lkk
+                s = xk / Lkk
+                u = (col + (sign * s) * xc).at[t].set(r * c)   # newcol * c
+                xc = c * xc - (s / c) * u
+                return xc, (u, c)
+
+            xs, (cols, cs) = jax.lax.scan(step, xs, (jnp.arange(b), panel.T))
+            cols = cols / cs[:, None]
+            cols = cols.at[:, :b].set(jnp.triu(cols[:, :b]))
+            return cols.T, xs
+
+        panel, xs = jax.lax.cond(jnp.any(xs[:b] != 0.0), process,
+                                 lambda args: args, (panel, xs))
+        L = L.at[k0 - shift:n - shift, k0 - shift:k0 + b - shift].set(panel)
+        x = x.at[k0:].set(xs)
+    return L
