@@ -1,6 +1,7 @@
 """Paper Fig. 8/9 + Table 6: hyperparameter estimation accuracy, computation
 time per agent, and communication rounds for every GP training method across
-fleet sizes.
+fleet sizes. Plus `run_fused`: the fused cached-geometry NLL gradient vs the
+seed autodiff path, per ADMM iteration (BENCH_training.json).
 
 Scaled protocol (CPU CI budget): N and replications are configurable; the
 full paper protocol (N=8100, 10 reps) runs with --full. Communication-round
@@ -8,17 +9,19 @@ accounting follows the paper's Tables 1/3/4 formulas.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gp import (pack, stripe_partition, communication_dataset,
+from repro.core.gp import (nll, pack, stripe_partition, communication_dataset,
                            augment)
 from repro.core.training import (train_fact_gp, train_c_gp, train_apx_gp,
                                  train_gapx_gp, train_dec_c_gp,
-                                 train_dec_apx_gp, train_dec_gapx_gp)
+                                 train_dec_apx_gp, train_dec_gapx_gp,
+                                 build_training_cache, nll_grad_cached)
 from repro.core.consensus import path_graph
 from repro.data import random_inputs, gp_sample_field
 
@@ -70,3 +73,149 @@ def run(n_train=2000, fleets=(4, 10), reps=2, iters=100, csv=print):
             record("DEC-gapx-GP",
                    lambda: jnp.mean(train_dec_gapx_gp(
                        LT0, Xa, ya, A, iters=iters)[0], axis=0), iters)
+
+
+# ---------------------------------------------------------------------------
+# Fused training hot path: cached-geometry gradient vs seed autodiff
+# ---------------------------------------------------------------------------
+
+def _aot_compile(jitted, *args, **kwargs):
+    """AOT-compile once so the SAME executable serves both the timing loop
+    and memory_analysis (calling the jit again would re-compile: the AOT
+    cache and the __call__ cache are separate). None if lowering fails."""
+    try:
+        return jitted.lower(*args, **kwargs).compile()
+    except Exception:
+        return None
+
+
+def _mem_highwater(compiled):
+    """Compiled-program memory high-water (bytes): temps + outputs + args.
+
+    XLA's memory_analysis is backend-dependent (absent or partial on some
+    CPU builds) — return None rather than fail the bench."""
+    try:
+        ma = compiled.memory_analysis()
+        return int(ma.temp_size_in_bytes + ma.output_size_in_bytes
+                   + ma.argument_size_in_bytes)
+    except Exception:
+        return None
+
+
+def _time_per_iter(fns, iters, reps):
+    """{name: (best-of-`reps` wall time per iteration, result)} for a dict
+    of competing fns. Reps are INTERLEAVED across the contenders so
+    background load (shared CI boxes) biases every path equally rather
+    than whichever happened to run during a quiet window."""
+    out = {name: jax.block_until_ready(fn())     # warmup / compile
+           for name, fn in fns.items()}
+    best = {name: float("inf") for name in fns}
+    for _ in range(reps):
+        for name, fn in fns.items():
+            t0 = time.time()
+            out[name] = jax.block_until_ready(fn())
+            best[name] = min(best[name], (time.time() - t0) / iters)
+    return {name: (best[name], out[name]) for name in fns}
+
+
+def run_fused(n_train=1024, M=16, D=2, iters=50, reps=5, csv=print,
+              json_path="BENCH_training.json", smoke=False):
+    """Per-ADMM-iteration cost of DEC-apx-GP: fused cached-geometry gradient
+    (grad_fn default) vs the seed autodiff path (grad_fn="autodiff"), same
+    update rule, same data. Acceptance: >= 2x at N=1024, D=2, M=16 on the
+    CPU jnp reference path, trained thetas matching to 1e-6, and the Pallas
+    kernel verified against the blocked jnp oracle in interpret mode.
+
+    `smoke=True` shrinks everything to seconds for CI: the point of the
+    smoke run is exercising the Pallas kernel in interpret mode and the
+    JSON plumbing, not stable timings.
+    """
+    if smoke:
+        n_train, M, iters, reps = 256, 4, 10, 2
+    key = jax.random.PRNGKey(0)
+    lt_true = pack([1.2] + [0.3] * (D - 1), 1.3, 0.1)
+    lt0 = pack([2.0] + [0.5] * (D - 1), 1.0, 1.0)
+    X = random_inputs(key, n_train, D=D)
+    _, y = gp_sample_field(jax.random.fold_in(key, 1), X, lt_true)
+    Xp, yp = stripe_partition(X, y, M)
+    A = path_graph(M)
+
+    rho, kappa = 500.0, 5000.0
+    runs, mem = {}, {}
+    for name in ("fused", "autodiff"):
+        grad_fn = None if name == "fused" else name
+        c = _aot_compile(train_dec_apx_gp, lt0, Xp, yp, A, rho, kappa,
+                         iters=iters, grad_fn=grad_fn)
+        if c is not None:
+            runs[name] = lambda c=c: c(lt0, Xp, yp, A, rho, kappa)[0]
+        else:        # backend without AOT support: fall back to the jit
+            runs[name] = lambda g=grad_fn: train_dec_apx_gp(
+                lt0, Xp, yp, A, rho, kappa, iters=iters, grad_fn=g)[0]
+        mem[name] = _mem_highwater(c) if c is not None else None
+    timed = _time_per_iter(runs, iters, reps)
+    t = {name: tv for name, (tv, _) in timed.items()}
+    speedup = t["autodiff"] / t["fused"]
+    theta_diff = float(jnp.max(jnp.abs(timed["fused"][1]
+                                       - timed["autodiff"][1])))
+
+    # the gradient stage alone (the fleet-wide per-iteration hot spot the
+    # fused path replaces; the loop numbers above additionally carry the
+    # shared eq. (34) sweep + consensus residual)
+    thetas = jnp.broadcast_to(lt0, (M, lt0.shape[0])).astype(Xp.dtype)
+    d2u = jax.vmap(lambda Xi, yi: build_training_cache(Xi, yi).d2u)(Xp, yp)
+    g_fused = jax.jit(jax.vmap(nll_grad_cached, in_axes=(0, 0, 0)))
+    g_auto = jax.jit(jax.vmap(jax.grad(nll), in_axes=(0, 0, 0)))
+    tg_timed = _time_per_iter(
+        {"fused": lambda: g_fused(thetas, d2u, yp),
+         "autodiff": lambda: g_auto(thetas, Xp, yp)}, 1, reps)
+    tg = {name: tv for name, (tv, _) in tg_timed.items()}
+    grad_speedup = tg["autodiff"] / tg["fused"]
+
+    # Pallas kernel vs blocked jnp oracle, interpret mode (tile-unaligned N)
+    ni = 70
+    Xi = random_inputs(jax.random.fold_in(key, 2), ni, D=D)
+    _, yi = gp_sample_field(jax.random.fold_in(key, 3), Xi, lt_true)
+    d2u = build_training_cache(Xi, yi).d2u
+    g_ref = nll_grad_cached(lt0, d2u, yi)                 # jnp reference path
+    g_pal = nll_grad_cached(lt0, d2u, yi, use_pallas=True, interpret=True)
+    pal_rel = float(jnp.max(jnp.abs(g_pal - g_ref)
+                            / jnp.maximum(jnp.abs(g_ref), 1e-6)))
+    pal_ok = bool(pal_rel < 1e-3)                         # f32 kernel compute
+
+    csv("table,N,M,D,t_fused_ms_per_iter,t_autodiff_ms_per_iter,speedup,"
+        "grad_speedup,theta_max_diff,mem_fused_bytes,mem_autodiff_bytes,"
+        "pallas_rel_err")
+    csv(f"training_fused,{n_train},{M},{D},{t['fused']*1e3:.3f},"
+        f"{t['autodiff']*1e3:.3f},{speedup:.2f},{grad_speedup:.2f},"
+        f"{theta_diff:.2e},{mem['fused']},{mem['autodiff']},{pal_rel:.2e}")
+
+    out = {"fused_vs_autodiff": {
+               "N": int(n_train), "M": int(M), "D": int(D),
+               "iters": int(iters),
+               "t_fused_ms_per_iter": t["fused"] * 1e3,
+               "t_autodiff_ms_per_iter": t["autodiff"] * 1e3,
+               "speedup": speedup,
+               "t_grad_fused_ms": tg["fused"] * 1e3,
+               "t_grad_autodiff_ms": tg["autodiff"] * 1e3,
+               "grad_speedup": grad_speedup,
+               "theta_max_diff": theta_diff,
+               "mem_fused_bytes": mem["fused"],
+               "mem_autodiff_bytes": mem["autodiff"]},
+           "pallas_interpret": {"N": ni, "max_rel_err": pal_rel,
+                                "ok": pal_ok},
+           "smoke": bool(smoke)}
+    with open(json_path, "w") as fh:
+        json.dump(out, fh, indent=2)
+    csv(f"# wrote {json_path}")
+    # correctness is enforced, not just reported — a broken kernel or a
+    # fused/autodiff divergence must fail the (CI) invocation
+    if not pal_ok:
+        raise SystemExit(f"nll_grad Pallas kernel diverged from the jnp "
+                         f"oracle: rel err {pal_rel:.2e}")
+    # run.py enables x64; a direct f32 invocation gets the f32-roundoff
+    # tolerance (mirrors tests/test_training_fused.py)
+    theta_tol = 1e-6 if Xp.dtype == jnp.float64 else 1e-3
+    if not theta_diff < theta_tol:
+        raise SystemExit(f"fused vs autodiff trained thetas diverged: "
+                         f"{theta_diff:.2e} (tol {theta_tol:.0e})")
+    return out

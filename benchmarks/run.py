@@ -18,10 +18,20 @@ jax.config.update("jax_enable_x64", True)
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI pass: skips every paper-protocol "
+                         "sweep and runs only the smoke-capable sections "
+                         "(training: fused-gradient bench with the Pallas "
+                         "kernel in interpret mode + the JSON artifact)")
     ap.add_argument("--only", default="all",
                     choices=["all", "training", "prediction", "serving",
                              "online", "roofline", "kernels"])
     args = ap.parse_args()
+    if args.smoke and args.only not in ("all", "training"):
+        # fail loudly: a CI step combining these would otherwise stay green
+        # while executing nothing
+        raise SystemExit(f"--smoke: section {args.only!r} has no "
+                         "seconds-scale mode; use --only training (or all)")
 
     out = sys.stdout
     def csv(line):
@@ -29,13 +39,23 @@ def main() -> None:
 
     if args.only in ("all", "training"):
         from . import bench_training
-        csv("# === GP training (paper Fig. 8-9, Table 6) ===")
-        if args.full:
-            bench_training.run(n_train=8100, fleets=(4, 10, 20, 40),
-                               reps=10, csv=csv)
-        else:
-            bench_training.run(n_train=1600, fleets=(4, 8), reps=2,
-                               iters=80, csv=csv)
+        if not args.smoke:
+            csv("# === GP training (paper Fig. 8-9, Table 6) ===")
+            if args.full:
+                bench_training.run(n_train=8100, fleets=(4, 10, 20, 40),
+                                   reps=10, csv=csv)
+            else:
+                bench_training.run(n_train=1600, fleets=(4, 8), reps=2,
+                                   iters=80, csv=csv)
+        csv("# === training hot path (fused cached-geometry gradient) ===")
+        bench_training.run_fused(csv=csv, smoke=args.smoke)
+
+    if args.smoke:
+        # no other section has a seconds-scale mode yet; refuse to
+        # silently run minutes-scale sweeps under a flag named smoke
+        csv("# --smoke: skipping sections prediction serving online "
+            "roofline kernels (no smoke mode)")
+        return
 
     if args.only in ("all", "prediction"):
         from . import bench_prediction

@@ -1,11 +1,15 @@
-from .kernel import se_kernel, cov_matrix, cov_grads, pack, unpack, sq_dists
-from .nll import nll, nll_value_and_grad, nll_grad_analytic
+from .kernel import (se_kernel, cov_matrix, cov_grads, diff2_stack, pack,
+                     unpack, sq_dists)
+from .nll import (nll, nll_value_and_grad, nll_grad_analytic,
+                  effective_jitter, nll_from_cov, inner_from_cov)
 from .exact import train_full_gp, predict_full
 from .partition import stripe_partition, communication_dataset, augment
 
 __all__ = [
-    "se_kernel", "cov_matrix", "cov_grads", "pack", "unpack", "sq_dists",
-    "nll", "nll_value_and_grad", "nll_grad_analytic",
+    "se_kernel", "cov_matrix", "cov_grads", "diff2_stack", "pack", "unpack",
+    "sq_dists",
+    "nll", "nll_value_and_grad", "nll_grad_analytic", "effective_jitter",
+    "nll_from_cov", "inner_from_cov",
     "train_full_gp", "predict_full",
     "stripe_partition", "communication_dataset", "augment",
 ]

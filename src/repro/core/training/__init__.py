@@ -2,11 +2,16 @@ from .factorized import local_nlls, factorized_nll, train_fact_gp
 from .admm_centralized import train_c_gp, train_apx_gp, train_gapx_gp
 from .admm_decentralized import (train_dec_c_gp, train_dec_apx_gp,
                                  train_dec_gapx_gp, dec_apx_update,
+                                 dec_apx_gp_sharded_step,
                                  train_dec_apx_gp_sharded)
+from .cache import (TrainingCache, build_training_cache, cov_from_cache,
+                    nll_from_cache, nll_grad_cached, make_local_grad)
 
 __all__ = [
     "local_nlls", "factorized_nll", "train_fact_gp",
     "train_c_gp", "train_apx_gp", "train_gapx_gp",
     "train_dec_c_gp", "train_dec_apx_gp", "train_dec_gapx_gp",
-    "dec_apx_update", "train_dec_apx_gp_sharded",
+    "dec_apx_update", "dec_apx_gp_sharded_step", "train_dec_apx_gp_sharded",
+    "TrainingCache", "build_training_cache", "cov_from_cache",
+    "nll_from_cache", "nll_grad_cached", "make_local_grad",
 ]

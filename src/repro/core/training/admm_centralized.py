@@ -2,7 +2,10 @@
 apx-GP (eq. 26, Xie et al. 2019), and the paper's proposed gapx-GP (Alg. 1).
 
 All agent-local quantities live on a leading agent axis (M, ...) and are
-vmapped; the server steps (z-update) are means over that axis.
+vmapped; the server steps (z-update) are means over that axis. Local NLL
+gradients go through the same `grad_fn` hook as the decentralized loops
+(default: the cached-geometry fused path of core.training.cache; "autodiff"
+restores the seed behavior; callables plug in custom local objectives).
 """
 from __future__ import annotations
 
@@ -11,10 +14,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..gp.nll import nll
-
-_local_grad = jax.vmap(jax.grad(nll), in_axes=(0, 0, 0))
-_local_grad_shared = jax.vmap(jax.grad(nll), in_axes=(None, 0, 0))
+from .cache import make_local_grad
 
 
 def _z_update(thetas, psis, rho):
@@ -22,25 +22,27 @@ def _z_update(thetas, psis, rho):
     return jnp.mean(thetas + psis / rho, axis=0)
 
 
-@partial(jax.jit, static_argnames=("iters", "nested_iters"))
+@partial(jax.jit, static_argnames=("iters", "nested_iters", "grad_fn"))
 def train_c_gp(log_theta0, Xp, yp, rho: float = 500.0, iters: int = 100,
-               nested_iters: int = 10, nested_lr: float = 1e-5):
+               nested_iters: int = 10, nested_lr: float = 1e-5, grad_fn=None):
     """c-GP (eq. 24): exact consensus ADMM, nested GD per agent per round.
 
     Returns (z, thetas, history dict). The nested problem (24b) is solved with
-    `nested_iters` plain GD steps (the paper uses GD with alpha=1e-5).
+    `nested_iters` plain GD steps (the paper uses GD with alpha=1e-5); the
+    local NLL gradient inside each step comes from the grad_fn hook, the
+    penalty terms are analytic.
     """
     M = Xp.shape[0]
     D2 = log_theta0.shape[0]
     thetas = jnp.broadcast_to(log_theta0, (M, D2)).astype(Xp.dtype)
     psis = jnp.zeros_like(thetas)
+    prepare, lgrad = make_local_grad(grad_fn)
+    aux = prepare(Xp, yp)                        # once per fit, NOT per iter
 
-    def nested(theta_i, z, psi_i, Xi, yi):
+    def nested(theta_i, z, psi_i, aux_i):
         # minimize L_i(th) + psi^T (th - z) + rho/2 ||th - z||^2
-        def obj(th):
-            return nll(th, Xi, yi) + psi_i @ (th - z) \
-                + 0.5 * rho * jnp.sum((th - z) ** 2)
-        g = jax.grad(obj)
+        def g(th):
+            return lgrad(th, aux_i) + psi_i + rho * (th - z)
 
         def body(th, _):
             return th - nested_lr * g(th), None
@@ -50,8 +52,8 @@ def train_c_gp(log_theta0, Xp, yp, rho: float = 500.0, iters: int = 100,
     def body(carry, _):
         thetas, psis = carry
         z = _z_update(thetas, psis, rho)                        # (24a)
-        thetas = jax.vmap(nested, in_axes=(0, None, 0, 0, 0))(
-            thetas, z, psis, Xp, yp)                            # (24b)
+        thetas = jax.vmap(nested, in_axes=(0, None, 0, 0))(
+            thetas, z, psis, aux)                               # (24b)
         psis = psis + rho * (thetas - z)                        # (24c)
         resid = jnp.max(jnp.linalg.norm(thetas - z, axis=1))
         return (thetas, psis), (z, resid)
@@ -61,9 +63,9 @@ def train_c_gp(log_theta0, Xp, yp, rho: float = 500.0, iters: int = 100,
     return zs[-1], thetas, {"z_history": zs, "residuals": resids}
 
 
-@partial(jax.jit, static_argnames=("iters",))
+@partial(jax.jit, static_argnames=("iters", "grad_fn"))
 def train_apx_gp(log_theta0, Xp, yp, rho: float = 500.0, L: float = 5000.0,
-                 iters: int = 100):
+                 iters: int = 100, grad_fn=None):
     """apx-GP (eq. 26): proximal ADMM with analytic theta-update.
 
     theta_i = z - (grad L_i(z) + psi_i) / (rho + L_i)   (26b)
@@ -71,11 +73,14 @@ def train_apx_gp(log_theta0, Xp, yp, rho: float = 500.0, L: float = 5000.0,
     M = Xp.shape[0]
     thetas = jnp.broadcast_to(log_theta0, (M, log_theta0.shape[0])).astype(Xp.dtype)
     psis = jnp.zeros_like(thetas)
+    prepare, lgrad = make_local_grad(grad_fn)
+    aux = prepare(Xp, yp)                        # once per fit, NOT per iter
+    shared_grads = jax.vmap(lgrad, in_axes=(None, 0))
 
     def body(carry, _):
         thetas, psis = carry
         z = _z_update(thetas, psis, rho)                        # (26a)
-        g = _local_grad_shared(z, Xp, yp)                       # grad L_i(z)
+        g = shared_grads(z, aux)                                # grad L_i(z)
         thetas = z[None] - (g + psis) / (rho + L)               # (26b)
         psis = psis + rho * (thetas - z[None])                  # (26c)
         resid = jnp.max(jnp.linalg.norm(thetas - z[None], axis=1))
@@ -87,10 +92,11 @@ def train_apx_gp(log_theta0, Xp, yp, rho: float = 500.0, L: float = 5000.0,
 
 
 def train_gapx_gp(log_theta0, Xp_aug, yp_aug, rho: float = 500.0,
-                  L: float = 5000.0, iters: int = 100):
+                  L: float = 5000.0, iters: int = 100, grad_fn=None):
     """gapx-GP (Alg. 1): apx-GP on the augmented datasets D_{+i}.
 
     Callers build (Xp_aug, yp_aug) with gp.partition.communication_dataset +
     augment (sample -> flood -> union), then this is exactly apx-GP.
     """
-    return train_apx_gp(log_theta0, Xp_aug, yp_aug, rho=rho, L=L, iters=iters)
+    return train_apx_gp(log_theta0, Xp_aug, yp_aug, rho=rho, L=L, iters=iters,
+                        grad_fn=grad_fn)

@@ -11,6 +11,13 @@ exact reference semantics for ANY strongly connected graph.
 Sharded mode: shard_map over a mesh axis with ppermute ring messages —
 the TPU-native deployment (cycle graph), bitwise-same update rule.
 
+Every loop takes a `grad_fn` hook for the local NLL gradient (default: the
+cached-geometry fused path of core.training.cache — per-iteration work is
+elementwise exp + Cholesky + the one-pass ops.nll_grad_fused contraction;
+"autodiff" restores the seed jax.grad(nll) behavior; any callable
+(log_theta, Xi, yi) -> (D+2,) plugs in custom local objectives). The
+update rule of eq. (34) is identical under every hook.
+
 Theorem 1 requires kappa_i > L_i^2/m_i^2 - rho*lambda_min(D+A); the paper uses
 kappa_i = 5000, rho = 500 in all experiments and so do we by default.
 """
@@ -24,32 +31,38 @@ import jax.numpy as jnp
 from ..consensus.graph import axis_size
 
 from ..gp.nll import nll
-
-_local_grad = jax.vmap(jax.grad(nll), in_axes=(0, 0, 0))
-
-
-def _neighbor_terms(thetas: jax.Array, A: jax.Array):
-    """(sum_j theta_j for j in N_i, card(N_i)) via one adjacency matmul."""
-    deg = jnp.sum(A, axis=1)
-    return A.astype(thetas.dtype) @ thetas, deg
+from .cache import make_local_grad
 
 
-@partial(jax.jit, static_argnames=("iters", "nested_iters"))
+def _graph_terms(A: jax.Array, dtype):
+    """(A cast for matmul, degree vector) — static across ADMM iterations,
+    computed ONCE before the scan (the seed re-derived sum(A) every round
+    inside the loop bodies)."""
+    return A.astype(dtype), jnp.sum(A, axis=1).astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("iters", "nested_iters", "grad_fn"))
 def train_dec_c_gp(log_theta0, Xp, yp, A, rho: float = 500.0,
                    iters: int = 100, nested_iters: int = 10,
-                   nested_lr: float = 1e-5):
+                   nested_lr: float = 1e-5, grad_fn=None):
     """DEC-c-GP (Alg. 2, eq. 30). Nested problem solved by GD with the
-    gradient of Appendix A.2."""
+    gradient of Appendix A.2 (local NLL gradient through the grad_fn hook,
+    quadratic/linear terms analytic)."""
     M = Xp.shape[0]
     thetas = jnp.broadcast_to(log_theta0, (M, log_theta0.shape[0])).astype(Xp.dtype)
     p = jnp.zeros_like(thetas)
+    prepare, lgrad = make_local_grad(grad_fn)
+    aux = prepare(Xp, yp)
+    Af, deg = _graph_terms(A, thetas.dtype)
 
-    def nested(theta_i, theta_i_prev, nbr_sum, deg_i, p_i, Xi, yi):
+    def nested(theta_i, theta_i_prev, nbr_sum, deg_i, p_i, aux_i):
         # obj = L_i(th) + th^T p_i + rho * sum_j ||th - (th_i^s + th_j^s)/2||^2
-        def obj(th):
-            quad = deg_i * (th @ th) - th @ (deg_i * theta_i_prev + nbr_sum)
-            return nll(th, Xi, yi) + th @ p_i + rho * quad
-        g = jax.grad(obj)
+        # d(obj)/dth = grad L_i(th) + p_i
+        #              + rho * (2 deg th - deg th_i^s - nbr_sum)
+        def g(th):
+            return (lgrad(th, aux_i) + p_i
+                    + rho * (2.0 * deg_i * th
+                             - (deg_i * theta_i_prev + nbr_sum)))
 
         def body(th, _):
             return th - nested_lr * g(th), None
@@ -58,10 +71,10 @@ def train_dec_c_gp(log_theta0, Xp, yp, A, rho: float = 500.0,
 
     def body(carry, _):
         thetas, p = carry
-        nbr_sum, deg = _neighbor_terms(thetas, A)
+        nbr_sum = Af @ thetas
         p = p + rho * (deg[:, None] * thetas - nbr_sum)             # (30a)
-        thetas_next = jax.vmap(nested, in_axes=(0, 0, 0, 0, 0, 0, 0))(
-            thetas, thetas, nbr_sum, deg, p, Xp, yp)                # (30b)
+        thetas_next = jax.vmap(nested, in_axes=(0, 0, 0, 0, 0, 0))(
+            thetas, thetas, nbr_sum, deg, p, aux)                   # (30b)
         disagreement = jnp.max(jnp.abs(thetas_next - jnp.mean(thetas_next, 0)))
         return (thetas_next, p), disagreement
 
@@ -83,18 +96,26 @@ def dec_apx_update(thetas, p, grads, nbr_sum, deg, rho, kappa):
     return thetas_next, p_next
 
 
-@partial(jax.jit, static_argnames=("iters",))
+@partial(jax.jit, static_argnames=("iters", "grad_fn"))
 def train_dec_apx_gp(log_theta0, Xp, yp, A, rho: float = 500.0,
-                     kappa: float = 5000.0, iters: int = 100):
-    """DEC-apx-GP (Alg. 3 / Theorem 1): closed-form decentralized ADMM."""
+                     kappa: float = 5000.0, iters: int = 100, grad_fn=None):
+    """DEC-apx-GP (Alg. 3 / Theorem 1): closed-form decentralized ADMM.
+
+    The per-iteration hot path: the cached-geometry gradient (grad_fn hook)
+    vmapped across the agent axis, one adjacency matmul, the closed-form
+    sweep of eq. (34)."""
     M = Xp.shape[0]
     thetas = jnp.broadcast_to(log_theta0, (M, log_theta0.shape[0])).astype(Xp.dtype)
     p = jnp.zeros_like(thetas)
+    prepare, lgrad = make_local_grad(grad_fn)
+    aux = prepare(Xp, yp)                       # once per fit, NOT per iter
+    fleet_grads = jax.vmap(lgrad, in_axes=(0, 0))
+    Af, deg = _graph_terms(A, thetas.dtype)
 
     def body(carry, _):
         thetas, p = carry
-        nbr_sum, deg = _neighbor_terms(thetas, A)
-        grads = _local_grad(thetas, Xp, yp)
+        nbr_sum = Af @ thetas
+        grads = fleet_grads(thetas, aux)
         thetas, p = dec_apx_update(thetas, p, grads, nbr_sum, deg, rho, kappa)
         disagreement = jnp.max(jnp.abs(thetas - jnp.mean(thetas, axis=0)))
         return (thetas, p), disagreement
@@ -104,11 +125,11 @@ def train_dec_apx_gp(log_theta0, Xp, yp, A, rho: float = 500.0,
 
 
 def train_dec_gapx_gp(log_theta0, Xp_aug, yp_aug, A, rho: float = 500.0,
-                      kappa: float = 5000.0, iters: int = 100):
+                      kappa: float = 5000.0, iters: int = 100, grad_fn=None):
     """DEC-gapx-GP (Alg. 4): sample -> flood -> augment (done by caller via
     gp.partition), then DEC-apx-GP on D_{+i}."""
     return train_dec_apx_gp(log_theta0, Xp_aug, yp_aug, A,
-                            rho=rho, kappa=kappa, iters=iters)
+                            rho=rho, kappa=kappa, iters=iters, grad_fn=grad_fn)
 
 
 # ---------------------------------------------------------------------------
@@ -118,8 +139,15 @@ def train_dec_gapx_gp(log_theta0, Xp_aug, yp_aug, A, rho: float = 500.0,
 # ---------------------------------------------------------------------------
 
 def dec_apx_gp_sharded_step(theta_i, p_i, Xi, yi, axis_name: str,
-                            rho: float = 500.0, kappa: float = 5000.0):
-    """One DEC-apx-GP round for THIS agent inside shard_map (cycle graph)."""
+                            rho: float = 500.0, kappa: float = 5000.0,
+                            local_grad=None):
+    """One DEC-apx-GP round for THIS agent inside shard_map (cycle graph).
+
+    `local_grad` is the per-shard resolution of the grad_fn hook: a callable
+    (theta,) -> (D+2,) already closed over this agent's cached geometry
+    (train_dec_apx_gp_sharded builds the TrainingCache once per fit, outside
+    the iteration scan). None falls back to autodiffing nll on (Xi, yi) so
+    the step stays usable standalone."""
     M = axis_size(axis_name)
     perm_fwd = [(i, (i + 1) % M) for i in range(M)]
     perm_bwd = [(i, (i - 1) % M) for i in range(M)]
@@ -132,7 +160,10 @@ def dec_apx_gp_sharded_step(theta_i, p_i, Xi, yi, axis_name: str,
     else:
         nbr_sum = left + right
     deg = jnp.asarray(float(min(M - 1, 2)), theta_i.dtype)
-    g = jax.grad(nll)(theta_i, Xi, yi)
+    if local_grad is None:
+        g = jax.grad(nll)(theta_i, Xi, yi)
+    else:
+        g = local_grad(theta_i)
     th, p = dec_apx_update(theta_i[None], p_i[None], g[None],
                            nbr_sum[None], deg[None], rho, kappa)
     return th[0], p[0]
@@ -140,10 +171,12 @@ def dec_apx_gp_sharded_step(theta_i, p_i, Xi, yi, axis_name: str,
 
 def train_dec_apx_gp_sharded(mesh, axis_name, log_theta0, Xp, yp,
                              rho: float = 500.0, kappa: float = 5000.0,
-                             iters: int = 100):
+                             iters: int = 100, grad_fn=None):
     """Full DEC-apx-GP under shard_map on `mesh` (cycle graph over axis_name).
 
-    Xp, yp carry the agent axis which is sharded over the mesh axis.
+    Xp, yp carry the agent axis which is sharded over the mesh axis. The
+    grad_fn hook resolves PER SHARD: each agent builds its own TrainingCache
+    inside the shard_map body, once, before the iteration scan.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
@@ -151,15 +184,22 @@ def train_dec_apx_gp_sharded(mesh, axis_name, log_theta0, Xp, yp,
     M = Xp.shape[0]
     thetas0 = jnp.broadcast_to(log_theta0, (M, log_theta0.shape[0])).astype(Xp.dtype)
     p0 = jnp.zeros_like(thetas0)
+    prepare, lgrad = make_local_grad(grad_fn)
 
     @partial(shard_map, mesh=mesh,
              in_specs=(P(axis_name), P(axis_name), P(axis_name), P(axis_name)),
              out_specs=(P(axis_name), P(axis_name)))
     def run(thetas, p, Xl, yl):
+        aux = jax.tree.map(lambda a: a[0], prepare(Xl, yl))
+
+        def local_grad(th):
+            return lgrad(th, aux)
+
         def body(carry, _):
             th, pp = carry
             th2, pp2 = dec_apx_gp_sharded_step(
-                th[0], pp[0], Xl[0], yl[0], axis_name, rho=rho, kappa=kappa)
+                th[0], pp[0], Xl[0], yl[0], axis_name, rho=rho, kappa=kappa,
+                local_grad=local_grad)
             return (th2[None], pp2[None]), None
         (th, pp), _ = jax.lax.scan(body, (thetas, p), None, length=iters)
         return th, pp

@@ -54,6 +54,60 @@ def rbf_matvec_ref(x1, x2, v, lengthscales, sigma_f):
     return rbf_gram_ref(x1, x2, lengthscales, sigma_f) @ v
 
 
+def nll_grad_fused_ref(log_theta, d2u, inner, K=None, bn: int = 256):
+    """Fused trace-identity NLL gradient — blocked jnp mirror of nll_grad.py.
+
+    d2u (D, N, N) is the once-per-fit UNSCALED diff^2 stack, inner (N, N)
+    is C^-1 - alpha alpha^T. Returns dNLL/dlog_theta (D+2,) without ever
+    materializing the (D+2, N, N) derivative stack of cov_grads: row blocks
+    of size `bn` are streamed with lax.map (sequential => O(D * bn * N)
+    transients at any N), each block contributing all D+2 components at
+    once. `K` optionally reuses an already-materialized kernel matrix (the
+    ADMM iteration built it for the Cholesky anyway); when absent, K is
+    rebuilt blockwise from d2u — exactly what the Pallas kernel does in
+    registers.
+
+    Component algebra (the 2's of dC/dtheta cancel the identity's 0.5):
+      d/dlog l_d    = sum W ⊙ d2u[d] / l_d^2        with W = inner ⊙ K
+      d/dlog sf     = sum W
+      d/dlog se     = sigma_eps^2 * tr(inner)
+    """
+    D, n = d2u.shape[0], d2u.shape[1]
+    theta = jnp.exp(log_theta)
+    ls, sigma_f, sigma_eps = theta[:-2], theta[-2], theta[-1]
+    inv_l2 = 1.0 / ls**2
+    tr = jnp.trace(inner)
+
+    def block_sums(d2u_b, inner_b, K_b):
+        if K_b is None:
+            K_b = sigma_f**2 * jnp.exp(-jnp.einsum("d,dij->ij", inv_l2,
+                                                   d2u_b))
+        W = inner_b * K_b
+        return jnp.concatenate([jnp.einsum("dij,ij->d", d2u_b, W),
+                                jnp.sum(W)[None]])
+
+    n_blocks = -(-n // bn)
+    if n_blocks == 1:
+        sums = block_sums(d2u, inner, K)
+    else:
+        pad = n_blocks * bn - n
+        # zero-padded rows of `inner` null every contribution
+        d2u_p = jnp.pad(d2u, ((0, 0), (0, pad), (0, 0)))
+        inner_p = jnp.pad(inner, ((0, pad), (0, 0)))
+        d2u_b = d2u_p.reshape(D, n_blocks, bn, n).transpose(1, 0, 2, 3)
+        inner_b = inner_p.reshape(n_blocks, bn, n)
+        if K is None:
+            sums = jax.lax.map(lambda a: block_sums(a[0], a[1], None),
+                               (d2u_b, inner_b))
+        else:
+            K_b = jnp.pad(K, ((0, pad), (0, 0))).reshape(n_blocks, bn, n)
+            sums = jax.lax.map(lambda a: block_sums(*a),
+                               (d2u_b, inner_b, K_b))
+        sums = jnp.sum(sums, axis=0)
+    return jnp.concatenate([sums[:D] * inv_l2, sums[D:D + 1],
+                            (sigma_eps**2 * tr)[None]])
+
+
 def cholupdate_ref(L, x, downdate: bool = False, bk: int = 128,
                    shift: int = 0):
     """Rank-1 Cholesky update/downdate: chol(L L^T + sign x x^T) in O(n^2).

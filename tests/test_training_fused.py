@@ -1,0 +1,244 @@
+"""Fused cached-geometry training hot path (docs/training_engine.md):
+gradient equivalence with autodiff, the Pallas kernel vs its blocked jnp
+oracle, the grad_fn hook, and trained-hyperparameter equivalence of the
+cached ADMM loops vs the seed autodiff loops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.consensus import path_graph
+from repro.core.gp import nll, pack, stripe_partition
+from repro.core.training import (build_training_cache, cov_from_cache,
+                                 make_local_grad, nll_from_cache,
+                                 nll_grad_cached, train_apx_gp, train_c_gp,
+                                 train_dec_apx_gp, train_dec_c_gp)
+from repro.core.training.cache import TrainingCache
+from repro.data import gp_sample_field, random_inputs
+from repro.kernels import ops
+from repro.kernels.ref import nll_grad_fused_ref
+
+TRUE_LT = pack([1.2, 0.3], 1.3, 0.1)
+LT0 = pack([2.0, 0.5], 1.0, 1.0)
+
+
+def _agent_data(n, D, key=0, dtype=jnp.float64):
+    lt_true = pack([1.2] + [0.3] * (D - 1), 1.3, 0.1)
+    X = random_inputs(jax.random.PRNGKey(key), n, D=D)
+    _, y = gp_sample_field(jax.random.PRNGKey(key + 1), X, lt_true)
+    return X.astype(dtype), y.astype(dtype)
+
+
+def _inner_of(lt, d2u, y):
+    n = y.shape[0]
+    C, K = cov_from_cache(lt, d2u)
+    L = jnp.linalg.cholesky(C)
+    Cinv = jax.scipy.linalg.cho_solve((L, True), jnp.eye(n, dtype=C.dtype))
+    alpha = Cinv @ y
+    return Cinv - jnp.outer(alpha, alpha), K
+
+
+# -- gradient equivalence ----------------------------------------------------
+
+@pytest.mark.parametrize("D", [1, 2, 4])
+@pytest.mark.parametrize("n", [33, 65])          # deliberately tile-unaligned
+def test_fused_grad_matches_autodiff_f64(D, n):
+    """Cached-geometry fused gradient == jax.grad(nll) to 1e-6 (f64)."""
+    X, y = _agent_data(n, D, key=D)
+    lt0 = pack([1.5] + [0.7] * (D - 1), 1.0, 0.5)
+    cache = build_training_cache(X, y)
+    g_auto = jax.grad(nll)(lt0, X, y)
+    g_fused = nll_grad_cached(lt0, cache.d2u, y)
+    np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_auto),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_fused_grad_matches_autodiff_f32():
+    """Float32 training path: equivalence to 1e-4, guarded by the
+    dtype-aware relative jitter (no NaNs from the f32 Cholesky)."""
+    X, y = _agent_data(64, 2, key=7, dtype=jnp.float32)
+    lt0 = pack([1.5, 0.7], 1.0, 0.5).astype(jnp.float32)
+    cache = build_training_cache(X, y)
+    g_auto = jax.grad(nll)(lt0, X, y)
+    g_fused = nll_grad_cached(lt0, cache.d2u, y)
+    assert np.isfinite(np.asarray(g_fused)).all()
+    scale = np.max(np.abs(np.asarray(g_auto)))
+    np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_auto),
+                               rtol=1e-4, atol=1e-4 * scale)
+
+
+def test_f32_nll_guarded_against_singular_gram():
+    """Duplicated inputs make K exactly singular; the relative jitter with
+    the 8*eps(f32) floor keeps the f32 Cholesky finite even when sigma_eps
+    is too small to regularize (the seed's absolute 1e-8 was a no-op)."""
+    X = jnp.repeat(random_inputs(jax.random.PRNGKey(0), 16), 2, axis=0)
+    X = X.astype(jnp.float32)
+    y = jax.random.normal(jax.random.PRNGKey(1), (32,), jnp.float32)
+    lt = pack([1.0, 1.0], 1.0, 1e-4).astype(jnp.float32)
+    assert np.isfinite(float(nll(lt, X, y)))
+    assert np.isfinite(np.asarray(jax.grad(nll)(lt, X, y))).all()
+
+
+def test_nll_from_cache_matches_nll():
+    X, y = _agent_data(80, 2)
+    cache = build_training_cache(X, y)
+    np.testing.assert_allclose(float(nll_from_cache(LT0, cache.d2u, y)),
+                               float(nll(LT0, X, y)), rtol=1e-12)
+
+
+# -- kernel vs oracle --------------------------------------------------------
+
+def test_fused_ref_blocked_matches_unblocked():
+    """The lax.map row-block streaming path == the single fused einsum, and
+    reusing a precomputed K changes nothing."""
+    X, y = _agent_data(70, 2)
+    lt0 = pack([1.5, 0.7], 1.0, 0.5)
+    d2u = build_training_cache(X, y).d2u
+    inner, K = _inner_of(lt0, d2u, y)
+    g = nll_grad_fused_ref(lt0, d2u, inner)
+    g_K = nll_grad_fused_ref(lt0, d2u, inner, K=K)
+    g_blk = nll_grad_fused_ref(lt0, d2u, inner, bn=32)
+    g_blk_K = nll_grad_fused_ref(lt0, d2u, inner, K=K, bn=32)
+    for other in (g_K, g_blk, g_blk_K):
+        np.testing.assert_allclose(np.asarray(other), np.asarray(g),
+                                   rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("D", [1, 2, 4])
+def test_pallas_kernel_interpret_matches_ref(D):
+    """One-pass Pallas kernel (interpret mode, f32 compute, zero-padded to
+    tiles) == the jnp oracle."""
+    X, y = _agent_data(70, D, key=D + 3)
+    lt0 = pack([1.5] + [0.7] * (D - 1), 1.0, 0.5)
+    d2u = build_training_cache(X, y).d2u
+    inner, _ = _inner_of(lt0, d2u, y)
+    g_ref = ops.nll_grad_fused(lt0, d2u, inner, use_pallas=False)
+    g_pal = ops.nll_grad_fused(lt0, d2u, inner, use_pallas=True,
+                               interpret=True, bn=32, bm=32)
+    scale = np.max(np.abs(np.asarray(g_ref)))
+    np.testing.assert_allclose(np.asarray(g_pal), np.asarray(g_ref),
+                               rtol=1e-3, atol=1e-4 * scale)
+
+
+# -- the grad_fn hook --------------------------------------------------------
+
+def test_make_local_grad_resolutions():
+    X, y = _agent_data(40, 2)
+    Xp, yp = X[None], y[None]
+    for grad_fn in (None, "fused"):
+        prepare, g = make_local_grad(grad_fn)
+        aux = prepare(Xp, yp)
+        assert isinstance(aux, TrainingCache)
+        assert aux.d2u.shape == (1, 2, 40, 40)
+        got = g(LT0, jax.tree.map(lambda a: a[0], aux))
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(jax.grad(nll)(LT0, X, y)),
+                                   rtol=1e-6, atol=1e-8)
+    prepare, g = make_local_grad("autodiff")
+    aux = prepare(Xp, yp)
+    got = g(LT0, jax.tree.map(lambda a: a[0], aux))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jax.grad(nll)(LT0, X, y)))
+
+
+def test_cache_memory_guard_falls_back_to_autodiff():
+    """The default hook estimates the O(M D N^2) diff^2 cache at trace time
+    and falls back to autodiff gradients past the limit (same policy as
+    fit_experts' cross-Gram guard); grad_fn='fused' is the unguarded
+    opt-in. Gradients are identical either way."""
+    X, y = _agent_data(40, 2)
+    Xp, yp = X[None], y[None]
+    prepare, g = make_local_grad(None, cache_limit_mb=1e-6)
+    with pytest.warns(UserWarning, match="falling back to autodiff"):
+        aux = prepare(Xp, yp)
+    assert not isinstance(aux, TrainingCache)
+    got = g(LT0, jax.tree.map(lambda a: a[0], aux))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jax.grad(nll)(LT0, X, y)),
+                               rtol=1e-12, atol=1e-12)
+    prepare_forced, _ = make_local_grad("fused")
+    assert isinstance(prepare_forced(Xp, yp), TrainingCache)
+
+
+def test_grad_fn_custom_callable():
+    """A custom callable hooks straight into the ADMM loop (here: a scaled
+    gradient, which must visibly change the trajectory)."""
+    X, y = _agent_data(200, 2)
+    Xp, yp = stripe_partition(X, y, 4)
+    A = path_graph(4)
+
+    def scaled(lt, Xi, yi):
+        return 0.5 * jax.grad(nll)(lt, Xi, yi)
+
+    th_default, _ = train_dec_apx_gp(LT0, Xp, yp, A, iters=20)
+    th_custom, _ = train_dec_apx_gp(LT0, Xp, yp, A, iters=20, grad_fn=scaled)
+    assert np.isfinite(np.asarray(th_custom)).all()
+    assert float(jnp.max(jnp.abs(th_default - th_custom))) > 1e-6
+
+
+# -- trained-hyperparameter equivalence: cached loops vs seed loops ----------
+
+@pytest.fixture(scope="module")
+def fleet_data():
+    X = random_inputs(jax.random.PRNGKey(0), 600)
+    _, y = gp_sample_field(jax.random.PRNGKey(1), X, TRUE_LT)
+    return stripe_partition(X, y, 4)
+
+
+def test_trained_equiv_dec_apx(fleet_data):
+    Xp, yp = fleet_data
+    A = path_graph(4)
+    th_f, hist_f = train_dec_apx_gp(LT0, Xp, yp, A, iters=100)
+    th_a, hist_a = train_dec_apx_gp(LT0, Xp, yp, A, iters=100,
+                                    grad_fn="autodiff")
+    np.testing.assert_allclose(np.asarray(th_f), np.asarray(th_a),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(hist_f["residuals"]),
+                               np.asarray(hist_a["residuals"]),
+                               rtol=1e-4, atol=1e-8)
+
+
+def test_trained_equiv_apx(fleet_data):
+    Xp, yp = fleet_data
+    z_f, th_f, _ = train_apx_gp(LT0, Xp, yp, iters=100)
+    z_a, th_a, _ = train_apx_gp(LT0, Xp, yp, iters=100, grad_fn="autodiff")
+    np.testing.assert_allclose(np.asarray(z_f), np.asarray(z_a),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(th_f), np.asarray(th_a),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_trained_equiv_dec_c(fleet_data):
+    Xp, yp = fleet_data
+    A = path_graph(4)
+    th_f, _ = train_dec_c_gp(LT0, Xp, yp, A, iters=8, nested_iters=4)
+    th_a, _ = train_dec_c_gp(LT0, Xp, yp, A, iters=8, nested_iters=4,
+                             grad_fn="autodiff")
+    np.testing.assert_allclose(np.asarray(th_f), np.asarray(th_a),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_trained_equiv_c(fleet_data):
+    Xp, yp = fleet_data
+    z_f, _, _ = train_c_gp(LT0, Xp, yp, iters=8, nested_iters=4)
+    z_a, _, _ = train_c_gp(LT0, Xp, yp, iters=8, nested_iters=4,
+                           grad_fn="autodiff")
+    np.testing.assert_allclose(np.asarray(z_f), np.asarray(z_a),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_sharded_cached_matches_simulated():
+    """The per-shard TrainingCache build (inside shard_map, outside the
+    scan) reproduces the simulated vmapped cache path exactly."""
+    if jax.device_count() < 4:
+        pytest.skip("needs >= 4 devices (run under forced host devices)")
+    from repro.core.consensus import cycle_graph
+    from repro.core.training import train_dec_apx_gp_sharded
+    X = random_inputs(jax.random.PRNGKey(0), 400)
+    _, y = gp_sample_field(jax.random.PRNGKey(1), X, TRUE_LT)
+    Xp, yp = stripe_partition(X, y, 4)
+    mesh = jax.make_mesh((4,), ("agents",))
+    th_sh, _ = train_dec_apx_gp_sharded(mesh, "agents", LT0, Xp, yp, iters=30)
+    th_sim, _ = train_dec_apx_gp(LT0, Xp, yp, cycle_graph(4), iters=30)
+    np.testing.assert_allclose(np.asarray(th_sh), np.asarray(th_sim),
+                               rtol=1e-6, atol=1e-8)
