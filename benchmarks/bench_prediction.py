@@ -4,9 +4,17 @@ the SST-like field, all 13 methods, fleet sweep, CBNN agent reduction.
 `run_serving` additionally benchmarks the factor-cached, query-tiled
 PredictionEngine against the per-call path: repeated-query serving
 throughput (cached vs uncached) and a large-Nt sweep that the all-at-once
-(Nt, M, M) NPAE materialization could not complete under bounded memory."""
+(Nt, M, M) NPAE materialization could not complete under bounded memory.
+
+`run_sharded` benchmarks agent-sharded serving (core.prediction.sharded):
+replicated vs sharded fleet throughput in the micro-batch latency regime,
+and CBNN query routing vs full-fleet consensus in the large-batch
+throughput regime, at tight eta_nn. Run it under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU (or on a real
+multi-device platform); results land in BENCH_serving.json."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -21,7 +29,8 @@ from repro.core.prediction import (local_moments, npae_terms, poe, gpoe, bcm,
                                    dec_bcm, dec_rbcm, dec_grbcm, dec_npae,
                                    dec_npae_star, dec_nn_poe, dec_nn_gpoe,
                                    dec_nn_bcm, dec_nn_rbcm, dec_nn_grbcm,
-                                   dec_nn_npae, fit_experts, PredictionEngine)
+                                   dec_nn_npae, fit_experts, PredictionEngine,
+                                   ShardedEngine)
 from repro.core.training import train_dec_gapx_gp
 from repro.data import grid_inputs, sst_like_field, random_inputs
 
@@ -123,6 +132,12 @@ def _time(fn, *args, reps=1):
     return (time.time() - t0) / reps
 
 
+def _time_best(fn, *args, reps=1, trials=3):
+    """Min over `trials` timing blocks — the standard noise-robust estimate
+    on shared machines (the minimum is the least-contended run)."""
+    return min(_time(fn, *args, reps=reps) for _ in range(trials))
+
+
 def run_serving(n_obs=8192, M=32, n_queries=4096, batch=256, chunk=256,
                 dac_iters=100, jor_iters=200, reps=3, csv=print):
     """Cached-vs-uncached serving throughput + large-Nt tiled sweep.
@@ -181,3 +196,123 @@ def run_serving(n_obs=8192, M=32, n_queries=4096, batch=256, chunk=256,
         dense_mb = n_queries * M * M * itemsize / 2**20
         csv(f"sweep,{name},{M},{Ni},{n_queries},{chunk},{n_queries/t:.0f},"
             f"{tiled_mb:.1f},{dense_mb:.1f}")
+
+
+# ---------------------------------------------------------------------------
+# Serving: agent-sharded fleet + CBNN query routing vs the replicated engine
+# ---------------------------------------------------------------------------
+
+def run_sharded(n_obs=8192, M=32, batch=256, big_batch=2048, chunk=256,
+                dac_iters=100, eta_nn=1.5, reps=10, csv=print,
+                json_path="BENCH_serving.json", smoke=False):
+    """Agent-sharded serving throughput (ISSUE 4 acceptance numbers).
+
+    Two regimes, both at tight eta_nn for the CBNN rows:
+      micro-batch (`batch` queries/request) — the latency-oriented front-
+        door shape: replicated `PredictionEngine` vs `ShardedEngine`
+        full-fleet consensus on the device ring.
+      large-batch (`big_batch` queries/request) — the throughput-oriented
+        shape: full-fleet nn_* consensus vs `predict_routed` (each query
+        served by the single shard holding its most-correlated experts —
+        1/ndev of the per-agent work and zero collectives).
+    Needs >= 2 devices to be meaningful; run CPU benchmarks under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8. `smoke=True`
+    shrinks everything to a seconds-scale CI pass (artifact marked).
+    """
+    from repro.launch.mesh import make_agent_mesh
+
+    if smoke:
+        n_obs, M, batch, big_batch, chunk, reps = 512, 8, 64, 256, 32, 2
+    ndev = len(jax.devices())
+    if ndev < 2:
+        csv("# run_sharded: single device — sharded timings are not "
+            "meaningful; set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=8 (results below measure overhead only)")
+    # short lengthscales: correlation is LOCAL, the massive-fleet regime
+    # where CBNN routing is meaningful (each query has a few nearby
+    # relevant agents, the rest sit below eta_nn)
+    lt = pack([0.15, 0.15], 1.3, 0.1)
+    X = random_inputs(jax.random.PRNGKey(0), n_obs)
+    _, y = sst_like_field(X / jnp.max(X), key=jax.random.PRNGKey(1))
+    Xp, yp = stripe_partition(X, y, M)
+    Ni = Xp.shape[1]
+    fitted = jax.jit(fit_experts)(lt, Xp, yp)
+    mesh = make_agent_mesh(M)
+    rep = PredictionEngine(fitted, path_graph(M), chunk=chunk,
+                           dac_iters=dac_iters, eta_nn=eta_nn)
+    sh = ShardedEngine(fitted, mesh, chunk=chunk, dac_iters=dac_iters,
+                       eta_nn=eta_nn)
+    sh_exact = ShardedEngine(fitted, mesh, chunk=chunk, eta_nn=eta_nn,
+                             consensus="exact")
+    out = {"devices": int(mesh.shape["agents"]), "M": M, "Ni": int(Ni),
+           "eta_nn": eta_nn, "dac_iters": dac_iters, "chunk": chunk,
+           "smoke": bool(smoke)}
+
+    # regime 1: micro-batch latency shape — replicated vs sharded fleet.
+    # Two sharded consensus modes: the paper-faithful ring DAC iteration
+    # (matches the replicated engine's protocol) and the exact finite ring
+    # all-reduce (ndev - 1 hops instead of dac_iters rounds — the mode a
+    # physical device ring would deploy, and the headline speedup).
+    Xq = random_inputs(jax.random.PRNGKey(2), batch)
+    csv("table,regime,method,M,devices,batch,qps_replicated,"
+        "qps_sharded_dac,qps_sharded_exact,speedup_dac,speedup_exact")
+    rows = []
+    for method in ("poe", "rbcm"):
+        t_rep = _time_best(lambda q: rep.predict(method, q)[:2], Xq,
+                           reps=reps)
+        t_dac = _time_best(lambda q: sh.predict(method, q)[:2], Xq,
+                           reps=reps)
+        t_ex = _time_best(lambda q: sh_exact.predict(method, q)[:2], Xq,
+                          reps=reps)
+        rows.append({"method": method, "batch": batch,
+                     "qps_replicated": batch / t_rep,
+                     "qps_sharded_dac": batch / t_dac,
+                     "qps_sharded_exact": batch / t_ex,
+                     "speedup_dac": t_rep / t_dac,
+                     "speedup_exact": t_rep / t_ex})
+        csv(f"sharded,micro,{method},{M},{out['devices']},{batch},"
+            f"{batch/t_rep:.0f},{batch/t_dac:.0f},{batch/t_ex:.0f},"
+            f"{t_rep/t_dac:.2f},{t_rep/t_ex:.2f}")
+    out["micro_batch"] = rows
+
+    # regime 2: large-batch throughput shape — CBNN routing at tight eta_nn
+    Xb = random_inputs(jax.random.PRNGKey(3), big_batch)
+    csv("table,regime,method,M,devices,batch,qps_replicated,qps_full_fleet,"
+        "qps_routed,routed_speedup_vs_full,mean_participants,"
+        "max_routed_deviation")
+    method = "nn_rbcm"
+    r3 = max(1, reps // 3)
+    t_rep = _time_best(lambda q: rep.predict(method, q)[:2], Xb, reps=r3)
+    t_full = _time_best(lambda q: sh.predict(method, q)[:2], Xb, reps=r3)
+    t_routed = _time_best(lambda q: sh.predict_routed(method, q)[:2], Xb,
+                          reps=r3)
+    m_full, _, info_full = sh.predict(method, Xb)
+    m_routed, _, _ = sh.predict_routed(method, Xb)
+    participants = float(np.asarray(info_full["mask"]).sum(0).mean())
+    dev = np.abs(np.asarray(m_full) - np.asarray(m_routed))
+    # routing is exact for queries whose participant set is shard-local;
+    # report how often that holds alongside the worst boundary query
+    exact_frac = float(np.mean(dev < 1e-6))
+    out["routing"] = {
+        "method": method, "batch": big_batch,
+        "qps_replicated": big_batch / t_rep,
+        "qps_full_fleet": big_batch / t_full,
+        "qps_routed": big_batch / t_routed,
+        "routed_speedup_vs_full": t_full / t_routed,
+        "routed_speedup_vs_replicated": t_rep / t_routed,
+        "mean_participants": participants,
+        "routed_exact_fraction": exact_frac,
+        "max_routed_deviation": float(dev.max()),
+        "median_routed_deviation": float(np.median(dev)),
+    }
+    csv(f"sharded,routing,{method},{M},{out['devices']},{big_batch},"
+        f"{big_batch/t_rep:.0f},{big_batch/t_full:.0f},"
+        f"{big_batch/t_routed:.0f},{t_full/t_routed:.2f},"
+        f"{participants:.2f},{dev.max():.3e}")
+    csv(f"# routing agreement: {100*exact_frac:.1f}% of queries exact "
+        f"(<1e-6), median deviation {np.median(dev):.2e}")
+
+    with open(json_path, "w") as fh:
+        json.dump(out, fh, indent=2)
+    csv(f"# wrote {json_path}")
+    return out

@@ -22,16 +22,19 @@ def main() -> None:
                     help="seconds-scale CI pass: skips every paper-protocol "
                          "sweep and runs only the smoke-capable sections "
                          "(training: fused-gradient bench with the Pallas "
-                         "kernel in interpret mode + the JSON artifact)")
+                         "kernel in interpret mode + the JSON artifact; "
+                         "sharded: shrunken fleet through both serving "
+                         "regimes)")
     ap.add_argument("--only", default="all",
                     choices=["all", "training", "prediction", "serving",
-                             "online", "roofline", "kernels"])
+                             "sharded", "online", "roofline", "kernels"])
     args = ap.parse_args()
-    if args.smoke and args.only not in ("all", "training"):
+    if args.smoke and args.only not in ("all", "training", "sharded"):
         # fail loudly: a CI step combining these would otherwise stay green
         # while executing nothing
         raise SystemExit(f"--smoke: section {args.only!r} has no "
-                         "seconds-scale mode; use --only training (or all)")
+                         "seconds-scale mode; use --only training or "
+                         "sharded (or all)")
 
     out = sys.stdout
     def csv(line):
@@ -49,6 +52,11 @@ def main() -> None:
                                    iters=80, csv=csv)
         csv("# === training hot path (fused cached-geometry gradient) ===")
         bench_training.run_fused(csv=csv, smoke=args.smoke)
+
+    if args.only in ("all", "sharded"):
+        from . import bench_prediction
+        csv("# === agent-sharded serving + CBNN query routing ===")
+        bench_prediction.run_sharded(csv=csv, smoke=args.smoke)
 
     if args.smoke:
         # no other section has a seconds-scale mode yet; refuse to

@@ -113,3 +113,51 @@ def dac_sharded(w_local: jax.Array, axis_name: str, iters: int,
 
     w, _ = jax.lax.scan(body, w_local, None, length=iters)
     return w
+
+
+def dac_sharded_residual(w_local: jax.Array, axis_name: str) -> jax.Array:
+    """Maximin consensus spread ACROSS the mesh axis (sharded counterpart of
+    `dac_residual`): max over devices minus min over devices, worst entry.
+
+    The result is computed with pmax/pmin so it is replicated on every
+    device — safe to emit through an unsharded shard_map out_spec.
+    """
+    hi = jax.lax.pmax(w_local, axis_name)
+    lo = jax.lax.pmin(w_local, axis_name)
+    return jnp.max(hi - lo)
+
+
+def ring_allreduce(w_local: jax.Array, axis_name: str, op=jnp.add):
+    """EXACT all-reduce over a mesh axis using only neighbor ring messages.
+
+    Each of the `n - 1` steps forwards the travelling message one hop with
+    ppermute and folds it into the local accumulator, so after a full lap
+    every device holds op(w_0, ..., w_{n-1}) — the same neighbor-only
+    message pattern as `dac_sharded`, but a finite exact protocol instead of
+    an asymptotic averaging iteration. Used by the sharded serving engine
+    for the reductions that must match the replicated engine bit-for-bit-ish
+    (CBNN M_eff counts, global score maxima) and as its
+    `consensus="exact"` mode.
+
+    Note devices fold contributions in ring-arrival order, so different
+    devices may differ in the last ulp for non-associative ops; follow with
+    `jax.lax.pmean` if exact replication is required.
+    """
+    n = axis_size(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    acc, msg = w_local, w_local
+    for _ in range(n - 1):
+        msg = jax.lax.ppermute(msg, axis_name, perm)
+        acc = op(acc, msg)
+    return acc
+
+
+def ring_allsum(w_local: jax.Array, axis_name: str) -> jax.Array:
+    """`ring_allreduce` with addition (exact network sums on the ring)."""
+    return ring_allreduce(w_local, axis_name, jnp.add)
+
+
+def ring_allmax(w_local: jax.Array, axis_name: str) -> jax.Array:
+    """`ring_allreduce` with elementwise max — the ring-message realization
+    of max-flooding (every agent learns the global max in n-1 hops)."""
+    return ring_allreduce(w_local, axis_name, jnp.maximum)

@@ -16,10 +16,17 @@ import jax.numpy as jnp
 def stripe_partition(X: jax.Array, y: jax.Array, M: int, axis: int = 0):
     """Sort by coordinate `axis` and split into M equal stripes.
 
-    Returns (Xp, yp) with shapes (M, N_i, D) and (M, N_i). Drops a remainder
-    of at most M-1 points so all local datasets are equal-sized (paper
-    assumes N_i = N/M exactly); a non-zero drop is signalled with a
-    UserWarning so truncation can't pass silently.
+    Returns (Xp, yp) with shapes (M, N_i, D) and (M, N_i).
+
+    DROPPED POINTS: when M does not divide N, the last `N mod M` points in
+    sort order — i.e. those with the LARGEST coordinate along `axis` — are
+    silently absent from every local dataset (the paper assumes N_i = N/M
+    exactly, and equal sizes are what keep the agent axis stackable /
+    shardable). The drop is signalled with a UserWarning so truncation
+    can't pass unnoticed; pad or subsample to a multiple of M first if
+    every point must be used. Stripes are contiguous in the sort
+    coordinate, which is also what makes per-shard agent blocks spatially
+    coherent for CBNN query routing (docs/serving_sharded.md).
     """
     order = jnp.argsort(X[:, axis])
     n = (X.shape[0] // M) * M

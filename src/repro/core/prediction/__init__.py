@@ -1,3 +1,16 @@
+"""Decentralized GP prediction (paper §5): the 13 methods at three layers.
+
+  per-call wrappers   dec_* / cbnn_* / local_moments / npae_terms — original
+                      raw-data signatures, refactorize every call (reference
+                      semantics the engines are tested against)
+  `*_cached`          consume precomputed Cholesky factors (FittedExperts)
+  `*_from_moments` /  the consensus + aggregation cores on precomputed local
+  `*_from_terms`      quantities (what both engines feed)
+
+Serving front-ends: PredictionEngine (replicated fleet, all 13 methods +
+centralized references) and ShardedEngine (fleet sharded over the agent
+axis of a device mesh, DAC family + CBNN query routing).
+"""
 from .local import (local_moments, npae_terms, chol_factors, cross_gram,
                     local_moments_cached, npae_terms_cached, stream_means)
 from .aggregation import poe, gpoe, bcm, rbcm, grbcm, npae
@@ -13,6 +26,8 @@ from .decentralized import (dec_poe, dec_gpoe, dec_bcm, dec_rbcm, dec_grbcm,
                             dec_nn_npae_from_terms)
 from .engine import (FittedExperts, fit_experts, map_query_tiles,
                      PredictionEngine)
+from .sharded import (ShardedEngine, expert_specs, replicated_specs,
+                      shard_experts)
 
 __all__ = [
     "local_moments", "npae_terms", "chol_factors", "cross_gram",
@@ -26,4 +41,5 @@ __all__ = [
     "dec_rbcm_from_moments", "dec_grbcm_from_moments", "dec_npae_from_terms",
     "dec_npae_star_from_terms", "dec_nn_npae_from_terms",
     "FittedExperts", "fit_experts", "map_query_tiles", "PredictionEngine",
+    "ShardedEngine", "expert_specs", "replicated_specs", "shard_experts",
 ]

@@ -1,10 +1,17 @@
-"""Centralized aggregation of GP experts (paper §2.3.2): PoE, gPoE, BCM,
-rBCM, grBCM, NPAE. These are the server-side references the decentralized
-methods must converge to (zero approximation error for DAC-based ones).
+"""Centralized aggregation of GP experts (paper §2.3.2): PoE, gPoE (eq.
+12-13), BCM, rBCM (eq. 14-15), grBCM (eq. 16-17), NPAE (eq. 20-21). These
+are the server-side references the decentralized methods must converge to
+(zero approximation error for DAC-based ones).
+
+Engine layer: these closed forms sit at the `*_from_moments` altitude —
+they consume precomputed per-agent moments, never raw data. The replicated
+engine serves them as the `cen_*` methods; the sharded engine's routed mode
+evaluates the same masked sums block-locally (network sums restricted to a
+shard-local mask coincide with block sums).
 
 All take per-agent moments (M, Nt) and an optional agent mask (M,) or (M, Nt)
-— the mask is what CBNN produces; masked-out agents contribute nothing and
-M_eff = sum(mask).
+— the mask is what CBNN produces (eq. 39); masked-out agents contribute
+nothing and M_eff = sum(mask).
 """
 from __future__ import annotations
 

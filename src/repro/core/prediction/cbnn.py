@@ -3,11 +3,21 @@
 [k_mu,*]_i = k_{i,*}^T C_i^-1 k_{i,*} measures the statistical correlation of
 agent i's dataset to the query point; agents below eta_NN sit out the
 aggregation. Computed from purely local quantities (Assumption 2 holds).
-Note eq. (39) coincides with the NPAE cross-covariance (eq. 18).
+Note eq. (39) coincides with the NPAE cross-covariance (eq. 18), which also
+means the score equals sigma_f^2 - var_i: CBNN selects exactly the agents
+whose local posterior variance at the query is smallest.
 
 Like prediction.local, this is split into a factor-cached layer (`*_cached`,
 reusing each agent's Cholesky across query batches — see prediction/engine)
-and thin per-call wrappers with the original signatures.
+and thin per-call wrappers with the original signatures. The agent-sharded
+serving engine (prediction/sharded.py) computes the scores shard-locally and
+closes the >= 1-agent guarantee with an exact ring max
+(consensus.ring_allmax), which is why `_mask_from_scores` keeps the
+best-score agents via a max comparison rather than a positional argmax.
+
+Layers:
+  cbnn_scores_cached / cbnn_mask_cached — factor-cached (engine serving path)
+  cbnn_scores / cbnn_mask               — per-call wrappers (refactorize)
 """
 from __future__ import annotations
 
@@ -19,7 +29,8 @@ from .local import _chol
 
 
 def cbnn_scores_cached(log_theta, Xp, L, Xs):
-    """(M, Nt) correlation scores [k_mu,*]_i from precomputed factors."""
+    """(M, Nt) correlation scores [k_mu,*]_i (eq. 39) from precomputed
+    factors — the `*_cached` engine layer (no refactorization per call)."""
     def one(Xi, Li):
         ks = se_kernel(Xi, Xs, log_theta)
         w = jax.scipy.linalg.cho_solve((Li, True), ks)
@@ -29,26 +40,33 @@ def cbnn_scores_cached(log_theta, Xp, L, Xs):
 
 
 def _mask_from_scores(scores, eta_nn: float):
-    """Threshold scores; guarantee >= 1 agent per query (keep the best)."""
-    mask = scores >= eta_nn
-    best = jnp.argmax(scores, axis=0)
-    mask = mask.at[best, jnp.arange(scores.shape[1])].set(True)
-    return mask
+    """Threshold scores (eq. 39); guarantee >= 1 agent per query.
+
+    The guarantee keeps every agent achieving the per-query maximum score
+    (ties — a measure-zero event on real data — keep all tied agents).
+    Max-equality rather than argmax so the sharded engine can reproduce the
+    mask exactly from shard-local scores plus one exact ring max.
+    """
+    best = scores >= jnp.max(scores, axis=0, keepdims=True)
+    return (scores >= eta_nn) | best
 
 
 def cbnn_mask_cached(log_theta, Xp, L, Xs, eta_nn: float):
-    """Boolean participation mask (M, Nt) from precomputed factors."""
+    """Boolean participation mask (M, Nt) from precomputed factors
+    (`*_cached` engine layer); returns (mask, scores)."""
     scores = cbnn_scores_cached(log_theta, Xp, L, Xs)
     return _mask_from_scores(scores, eta_nn), scores
 
 
 def cbnn_scores(log_theta, Xp, Xs, jitter=1e-8):
-    """(M, Nt) correlation scores [k_mu,*]_i per agent per query."""
+    """(M, Nt) correlation scores [k_mu,*]_i (eq. 39) per agent per query.
+    Per-call wrapper: factorizes every agent, then scores."""
     L = jax.vmap(lambda Xi: _chol(Xi, log_theta, jitter))(Xp)
     return cbnn_scores_cached(log_theta, Xp, L, Xs)
 
 
 def cbnn_mask(log_theta, Xp, Xs, eta_nn: float, jitter=1e-8):
-    """Boolean participation mask (M, Nt); guarantees >= 1 agent per query."""
+    """Boolean participation mask (M, Nt) (eq. 39 thresholded at eta_nn);
+    guarantees >= 1 agent per query. Per-call wrapper."""
     scores = cbnn_scores(log_theta, Xp, Xs, jitter)
     return _mask_from_scores(scores, eta_nn), scores

@@ -55,33 +55,72 @@ def _dac_sums(w0: jax.Array, A: jax.Array, iters: int):
 
 # ---------------------------------------------------------------------------
 # DAC family — cores on precomputed moments
+#
+# The weight / per-agent-summand / posterior-assembly steps are split out so
+# the agent-sharded serving engine (prediction/sharded.py) can evaluate the
+# SAME formulas on shard-local agent blocks with ring reductions in place of
+# the simulated DAC — formula parity between the two execution modes is by
+# construction, not by parallel maintenance.
 # ---------------------------------------------------------------------------
+
+def _poe_beta(var, prior_var, m, M_eff, beta_mode: str):
+    """Per-agent PoE-family weights beta_i (eq. 12-15). `m` is the CBNN
+    participation mask as floats (all-ones when unmasked); `M_eff` the
+    NETWORK-WIDE mask count per query (only consumed by beta_mode='avg')."""
+    if beta_mode == "one":
+        return m
+    if beta_mode == "avg":
+        return m / M_eff
+    if beta_mode == "entropy":
+        return 0.5 * (jnp.log(prior_var) - jnp.log(var)) * m
+    raise ValueError(beta_mode)
+
+
+def _poe_summands(beta, mu, var):
+    """The three per-agent consensus payloads [beta mu / var, beta / var,
+    beta] -> (..., Nt, 3). Network sums of these assemble every PoE/BCM
+    posterior."""
+    return jnp.stack([beta * mu / var, beta / var, beta], axis=-1)
+
+
+def _poe_posterior(s_mu, s_prec, s_beta, prior_var, bcm_correction: bool):
+    """Posterior from NETWORK SUMS of the `_poe_summands` payloads."""
+    if bcm_correction:
+        prec = s_prec + (1.0 - s_beta) / prior_var        # (15)
+    else:
+        prec = s_prec                                     # (13)
+    return s_mu / prec, 1.0 / prec                        # (12)/(14)
+
+
+def _grbcm_beta(var_aug, var_c, m, agent_index):
+    """grBCM weights (eq. 16-17): beta_1 = 1 for the GLOBAL first augmented
+    expert, entropy weights against the communication expert otherwise.
+    `agent_index` carries global agent ids so a shard-local block can place
+    the beta_1 = 1 row correctly."""
+    beta = 0.5 * (jnp.log(var_c)[None] - jnp.log(var_aug))
+    return jnp.where((agent_index == 0)[:, None], 1.0, beta) * m
+
+
+def _grbcm_posterior(s_mu, s_prec, s_beta, mu_c, var_c):
+    """grBCM posterior from network sums of the `_poe_summands` payloads on
+    augmented-expert moments."""
+    prec = s_prec + (1.0 - s_beta) / var_c                 # (17)
+    mean = (s_mu - (s_beta - 1.0) * mu_c / var_c) / prec   # (16)
+    return mean, 1.0 / prec
+
 
 def _poe_family_from_moments(mu, var, prior_var, A, iters, beta_mode: str,
                              bcm_correction: bool, mask=None):
     m = jnp.ones_like(mu) if mask is None else \
         jnp.broadcast_to(mask, mu.shape).astype(mu.dtype)
     M_eff = jnp.sum(m, axis=0)                            # (Nt,)
-
-    if beta_mode == "one":
-        beta = m
-    elif beta_mode == "avg":
-        beta = m / M_eff
-    elif beta_mode == "entropy":
-        beta = 0.5 * (jnp.log(prior_var) - jnp.log(var)) * m
-    else:
-        raise ValueError(beta_mode)
-
-    w0 = jnp.stack([beta * mu / var, beta / var, beta], axis=-1)  # (M, Nt, 3)
+    beta = _poe_beta(var, prior_var, m, M_eff, beta_mode)
+    w0 = _poe_summands(beta, mu, var)                     # (M, Nt, 3)
     sums, res = _dac_sums(w0.reshape(w0.shape[0], -1), A, iters)
     sums = sums.reshape(mu.shape[1], 3)
-    s_mu, s_prec, s_beta = sums[:, 0], sums[:, 1], sums[:, 2]
-    if bcm_correction:
-        prec = s_prec + (1.0 - s_beta) / prior_var        # (15)
-    else:
-        prec = s_prec                                     # (13)
-    mean = s_mu / prec                                    # (12)/(14)
-    return mean, 1.0 / prec, {"dac_residuals": res}
+    mean, v = _poe_posterior(sums[:, 0], sums[:, 1], sums[:, 2], prior_var,
+                             bcm_correction)
+    return mean, v, {"dac_residuals": res}
 
 
 def dec_poe_from_moments(mu, var, prior_var, A, iters=200, mask=None):
@@ -117,16 +156,13 @@ def dec_grbcm_from_moments(mu_aug, var_aug, mu_c, var_c, A, iters=200,
     """
     m = jnp.ones_like(mu_aug) if mask is None else \
         jnp.broadcast_to(mask, mu_aug.shape).astype(mu_aug.dtype)
-    beta = 0.5 * (jnp.log(var_c)[None] - jnp.log(var_aug))
-    beta = beta.at[0].set(1.0) * m
-
-    w0 = jnp.stack([beta * mu_aug / var_aug, beta / var_aug, beta], axis=-1)
+    beta = _grbcm_beta(var_aug, var_c, m, jnp.arange(mu_aug.shape[0]))
+    w0 = _poe_summands(beta, mu_aug, var_aug)
     sums, res = _dac_sums(w0.reshape(w0.shape[0], -1), A, iters)
     sums = sums.reshape(mu_aug.shape[1], 3)
-    s_mu, s_prec, s_beta = sums[:, 0], sums[:, 1], sums[:, 2]
-    prec = s_prec + (1.0 - s_beta) / var_c                 # (17)
-    mean = (s_mu - (s_beta - 1.0) * mu_c / var_c) / prec   # (16)
-    return mean, 1.0 / prec, {"dac_residuals": res}
+    mean, v = _grbcm_posterior(sums[:, 0], sums[:, 1], sums[:, 2], mu_c,
+                               var_c)
+    return mean, v, {"dac_residuals": res}
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,12 @@ factors; this module does the same:
                     With `stream_mean=True` posterior means ride the fused
                     Gram-matvec Pallas kernel (kernels.rbf_matvec).
 
+This engine runs the fleet REPLICATED on one device (and is the only server
+of the NPAE family, whose per-query (M, M) solves need strongly-complete
+exchange). Its multi-device sibling is prediction/sharded.ShardedEngine:
+the same FittedExperts sharded over the agent axis of a mesh, consensus on
+the device ring, plus CBNN query routing (docs/serving_sharded.md).
+
 Equivalence with the per-call paths is covered by tests/test_engine.py
 (<= 1e-6 for every method).
 """

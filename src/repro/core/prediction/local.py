@@ -43,7 +43,8 @@ def chol_factors(log_theta, Xp, yp, jitter=1e-8):
 
 
 def stream_means(log_theta, Xp, alpha, Xs):
-    """Per-agent posterior means via the fused Gram-matvec kernel.
+    """Per-agent posterior means (the eq. 10 mean term) via the fused
+    Gram-matvec kernel — `*_cached` engine layer, mean-only hot path.
 
     mu_i = k(Xs, X_i) alpha_i with O(Ni + Nt) transient memory — the
     streaming Pallas path on TPU (kernels.rbf_matvec), jnp reference on CPU.
@@ -56,7 +57,8 @@ def stream_means(log_theta, Xp, alpha, Xs):
 
 def local_moments_cached(log_theta, Xp, L, alpha, Xs,
                          stream_mean: bool = False):
-    """mu_i, var_i at test points from precomputed factors -> (M, Nt) each.
+    """Local GP moments (eq. 10-11) from precomputed factors — the
+    `*_cached` engine layer. mu_i, var_i at test points -> (M, Nt) each.
 
     `stream_mean=True` routes the mean term through the fused Gram-matvec
     (the serving hot path); the variance term still needs the triangular
@@ -131,8 +133,8 @@ def npae_terms_cached(log_theta, Xp, L, alpha, Xs, Kcross=None):
 
 
 def local_moments(log_theta, Xp, yp, Xs, jitter=1e-8):
-    """Per-call wrapper (factorize-then-predict). Xp (M,Ni,D), Xs (Nt,D)
-    -> (mu, var), each (M, Nt)."""
+    """Per-call wrapper (factorize-then-predict) for eq. 10-11.
+    Xp (M,Ni,D), Xs (Nt,D) -> (mu, var), each (M, Nt)."""
     L, alpha = chol_factors(log_theta, Xp, yp, jitter)
     return local_moments_cached(log_theta, Xp, L, alpha, Xs)
 

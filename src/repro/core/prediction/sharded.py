@@ -1,0 +1,439 @@
+"""Agent-sharded serving: the fleet distributed over a device mesh, with
+CBNN query routing (paper §5.2, eq. 39) as a serving-time throughput lever.
+
+`PredictionEngine` runs every agent replicated on one device. This module
+shards `FittedExperts` over the agent axis of a 1-D device mesh and runs the
+whole DAC family (Algs. 5-9 and their CBNN nn_* variants, Algs. 13-17)
+inside `shard_map`:
+
+  per-agent moments  — each device computes `local_moments_cached` /
+                       `cbnn_scores_cached` for its OWN block of M/ndev
+                       agents only (the `*_cached` engine layer, eq. 10-11 /
+                       eq. 39), so per-query FLOPs parallelize over devices.
+  cross-agent sums   — the three PoE/BCM consensus payloads (eq. 12-17) are
+                       reduced over the device ring with the SAME neighbor-
+                       only message pattern as training's
+                       `dec_apx_gp_sharded_step`: either `dac_sharded`
+                       (paper eq. 35 on the device ring; default) or the
+                       exact finite `ring_allsum` protocol
+                       (`consensus="exact"`).
+  CBNN masks         — scores are computed shard-locally; the >= 1-agent
+                       guarantee needs one global number per query (the max
+                       score), closed with an exact `ring_allmax`. Masks are
+                       multiplicative (shapes stay static): excluded agents
+                       contribute zero to every payload, exactly like the
+                       simulated-network semantics in prediction.decentralized.
+
+Two serving modes:
+
+  `ShardedEngine.predict(method, Xs)` — full-fleet consensus. Equivalent to
+  the replicated `PredictionEngine` output to <= 1e-6 once both consensus
+  protocols are run to convergence (tests/test_sharded_serving.py).
+
+  `ShardedEngine.predict_routed(method, Xs)` — CBNN query ROUTING (nn_*
+  methods): each query is dispatched (host-side, by nearest agent centroid)
+  to the single shard holding its most-correlated experts and served from
+  that block alone — local scores, local mask, local masked aggregation, NO
+  cross-device collectives, and only Nt/ndev queries of work per device.
+  This realizes the paper's "subset of agents perform predictions" as a
+  throughput win; it equals the full nn_* aggregate exactly whenever the
+  thresholded participant set lives inside the routed shard (tight eta_nn),
+  and is a documented approximation otherwise (info carries per-query
+  participant counts so callers can audit).
+
+The NPAE family (Algs. 10-12, 18) needs per-query (M, M) solves over
+cross-agent Gram terms — strongly-complete exchange — and stays on the
+replicated engine; `ShardedEngine` rejects it explicitly.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..consensus.dac import (dac_sharded, dac_sharded_residual, ring_allmax,
+                             ring_allsum)
+from .cbnn import _mask_from_scores, cbnn_scores_cached
+from .decentralized import (_grbcm_beta, _grbcm_posterior, _poe_beta,
+                            _poe_posterior, _poe_summands)
+from .engine import FittedExperts, map_query_tiles
+from .local import local_moments_cached
+
+_BETA_MODE = {"poe": "one", "gpoe": "avg", "bcm": "one", "rbcm": "entropy"}
+_BCM_CORRECTION = {"poe": False, "gpoe": False, "bcm": True, "rbcm": True}
+
+
+def expert_specs(fitted: FittedExperts, axis_name: str) -> FittedExperts:
+    """PartitionSpecs sharding the agent axis of every per-agent leaf.
+
+    log_theta is replicated (it is fleet-shared after consensus training).
+    The NPAE cross-Gram cache is never sharded — the NPAE family is not
+    servable on the agent-sharded path (see module docstring) — so Kcross
+    must be None.
+    """
+    if fitted.Kcross is not None:
+        raise ValueError(
+            "expert_specs: Kcross (the NPAE cross-Gram cache) has no "
+            "agent-sharded layout; refit with cache_cross=False")
+    a = P(axis_name)
+    return FittedExperts(log_theta=P(), Xp=a, yp=a, L=a, alpha=a, Kcross=None)
+
+
+def replicated_specs(fitted: FittedExperts) -> FittedExperts:
+    """All-replicated specs (the 1-agent grBCM communication expert)."""
+    return jax.tree.map(lambda _: P(), fitted)
+
+
+def shard_experts(fitted: FittedExperts, mesh, axis_name: str = "agents",
+                  *, replicate: bool = False) -> FittedExperts:
+    """Place a fitted fleet on `mesh`: agent axis sharded over `axis_name`
+    (or fully replicated for the communication expert)."""
+    specs = replicated_specs(fitted) if replicate \
+        else expert_specs(fitted, axis_name)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), fitted, specs)
+
+
+class ShardedEngine:
+    """Serving front-end with the fleet sharded over the agent axis.
+
+    Mirrors `PredictionEngine.predict` for the DAC family:
+    poe gpoe bcm rbcm grbcm and the CBNN variants nn_poe nn_gpoe nn_bcm
+    nn_rbcm nn_grbcm, plus `predict_routed` for CBNN query routing. The
+    number of devices on `mesh`'s `axis_name` must divide the agent count;
+    each device owns a contiguous block of M/ndev agents (the stripe layout
+    `gp.stripe_partition` produces, so blocks are spatially coherent and
+    routing is meaningful).
+
+    The communication graph of the sharded consensus is the DEVICE RING
+    (ppermute neighbors), not a user-supplied adjacency: its DAC fixed point
+    is the same network average, so converged outputs match the replicated
+    engine on any connected graph. `consensus="exact"` replaces the DAC
+    iteration with the finite ring_allsum protocol (exact sums in ndev - 1
+    hops; still neighbor-only messages).
+
+    Like `PredictionEngine`, one program is compiled per (method, batch
+    geometry) and the experts pytree is a traced argument, so
+    `swap_experts` hot-swaps factors with zero recompiles.
+    """
+
+    METHODS = ("poe", "gpoe", "bcm", "rbcm", "grbcm", "nn_poe", "nn_gpoe",
+               "nn_bcm", "nn_rbcm", "nn_grbcm")
+
+    def __init__(self, fitted: FittedExperts, mesh, *,
+                 axis_name: str = "agents", chunk: int = 256,
+                 dac_iters: int = 200, eta_nn: float = 0.1,
+                 consensus: str = "dac",
+                 fitted_aug: FittedExperts | None = None,
+                 fitted_comm: FittedExperts | None = None,
+                 stream_mean: bool = False):
+        if axis_name not in mesh.axis_names:
+            raise ValueError(f"mesh has no axis {axis_name!r}")
+        if consensus not in ("dac", "exact"):
+            raise ValueError(f"consensus must be 'dac' or 'exact', "
+                             f"got {consensus!r}")
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.ndev = int(mesh.shape[axis_name])
+        M = fitted.num_agents
+        if M % self.ndev:
+            raise ValueError(f"{M} agents do not shard over {self.ndev} "
+                             f"devices (need ndev | M)")
+        self.chunk = int(chunk)
+        self.dac_iters = int(dac_iters)
+        self.eta_nn = float(eta_nn)
+        self.consensus = consensus
+        self.stream_mean = bool(stream_mean)
+        # the NPAE cross-Gram cache has no sharded consumer; drop it rather
+        # than force callers to refit
+        self.fitted = shard_experts(fitted._replace(Kcross=None), mesh,
+                                    axis_name)
+        self.fitted_aug = None if fitted_aug is None else \
+            shard_experts(fitted_aug._replace(Kcross=None), mesh, axis_name)
+        self.fitted_comm = None if fitted_comm is None else \
+            shard_experts(fitted_comm, mesh, axis_name, replicate=True)
+        # per-agent centroids drive host-side query routing (nearest agent
+        # -> owning shard); tiny, so they live on the host
+        self._centroids = np.asarray(jnp.mean(fitted.Xp, axis=1))
+        self._rep = NamedSharding(mesh, P())
+        self._compiled: dict[tuple, object] = {}
+
+    # -- shard-local tile computation ---------------------------------------
+
+    def _local_mask(self, f: FittedExperts, Xq, *, ring: bool):
+        """CBNN mask for THIS device's agent block (Mb, chunk).
+
+        ring=True closes the >= 1-agent guarantee globally (exact ring max
+        of the per-device best scores — full-consensus mode); ring=False
+        keeps the guarantee within the local block (routed mode)."""
+        scores = cbnn_scores_cached(f.log_theta, f.Xp, f.L, Xq)
+        if not ring:
+            return _mask_from_scores(scores, self.eta_nn)
+        gmax = ring_allmax(jnp.max(scores, axis=0), self.axis_name)
+        return (scores >= self.eta_nn) | (scores >= gmax[None])
+
+    def _local_payloads(self, method: str, f, fa, fc, gidx, Xq, mask, *,
+                        ring: bool):
+        """Per-agent consensus payloads for the local block -> ((Mb, chunk,
+        3) summands, mu_c, var_c). The SAME `_poe_beta` / `_poe_summands`
+        formulas as the replicated cores, evaluated on the block.
+
+        ring=True is full-fleet mode (gpoe's M_eff is the network-wide
+        participant count, closed with an exact ring sum); ring=False is
+        routed mode, where every device serves DIFFERENT queries — a ring
+        sum would mix unrelated queries' counts — and the participant count
+        is the block-local mask sum by construction."""
+        base = method[3:] if method.startswith("nn_") else method
+        if base == "grbcm":
+            mu, var = local_moments_cached(fa.log_theta, fa.Xp, fa.L,
+                                           fa.alpha, Xq,
+                                           stream_mean=self.stream_mean)
+            mu_c, var_c = local_moments_cached(fc.log_theta, fc.Xp, fc.L,
+                                               fc.alpha, Xq)
+            mu_c, var_c = mu_c[0], var_c[0]
+            m = jnp.ones_like(mu) if mask is None else mask.astype(mu.dtype)
+            beta = _grbcm_beta(var, var_c, m, gidx)
+        else:
+            mu, var = local_moments_cached(f.log_theta, f.Xp, f.L, f.alpha,
+                                           Xq, stream_mean=self.stream_mean)
+            m = jnp.ones_like(mu) if mask is None else mask.astype(mu.dtype)
+            if base == "gpoe":
+                # eq. 12 'avg' weights need the participant count; mask
+                # counts are small integers, so the exact ring sum
+                # reproduces the replicated M_eff bit-for-bit
+                M_eff = jnp.sum(m, axis=0)
+                if ring:
+                    M_eff = ring_allsum(M_eff, self.axis_name)
+            else:
+                M_eff = None
+            beta = _poe_beta(var, f.prior_var, m, M_eff, _BETA_MODE[base])
+            mu_c = var_c = None
+        return _poe_summands(beta, mu, var), mu_c, var_c
+
+    def _posterior(self, method: str, sums, prior_var, mu_c, var_c):
+        base = method[3:] if method.startswith("nn_") else method
+        if base == "grbcm":
+            return _grbcm_posterior(sums[..., 0], sums[..., 1], sums[..., 2],
+                                    mu_c, var_c)
+        return _poe_posterior(sums[..., 0], sums[..., 1], sums[..., 2],
+                              prior_var, _BCM_CORRECTION[base])
+
+    def _full_tile(self, method, f, fa, fc, gidx, Xq):
+        """One query tile, full-fleet mode: local payloads + ring consensus."""
+        ax = self.axis_name
+        nn = method.startswith("nn_")
+        mask = self._local_mask(f, Xq, ring=True) if nn else None
+        w0, mu_c, var_c = self._local_payloads(method, f, fa, fc, gidx, Xq,
+                                               mask, ring=True)
+        part = jnp.sum(w0, axis=0)                      # (chunk, 3) partial
+        if self.consensus == "exact":
+            sums = ring_allsum(part, ax)
+            res = jnp.zeros((), Xq.dtype)
+        else:
+            w = dac_sharded(part, ax, self.dac_iters)   # ~ total / ndev
+            res = dac_sharded_residual(w, ax)
+            sums = self.ndev * w
+        # devices fold ring messages in different orders; pmean makes the
+        # result exactly replicated so it can exit through a P() out_spec
+        sums = jax.lax.pmean(sums, ax)
+        mean, v = self._posterior(method, sums, f.prior_var, mu_c, var_c)
+        perq = {"mean": mean, "var": v}
+        if nn:
+            perq["mask_t"] = mask.T                     # (chunk, Mb)
+        return perq, {"dac_residual": jax.lax.pmax(res, ax)}
+
+    def _routed_tile(self, method, f, fa, fc, gidx, Xq):
+        """One query tile, routed mode: this device's block ONLY — local
+        mask (>= 1 guarantee within the block) and local masked
+        aggregation; zero collectives. Network sums restricted to a mask
+        that lives inside this block coincide with the block-local sums, so
+        this equals the full nn_* aggregate whenever routing captured every
+        selected agent."""
+        mask = self._local_mask(f, Xq, ring=False)
+        w0, mu_c, var_c = self._local_payloads(method, f, fa, fc, gidx, Xq,
+                                               mask, ring=False)
+        sums = jnp.sum(w0, axis=0)
+        mean, v = self._posterior(method, sums, f.prior_var, mu_c, var_c)
+        return {"mean": mean, "var": v,
+                "n_selected": jnp.sum(mask, axis=0)}, {}
+
+    # -- compiled programs ---------------------------------------------------
+
+    def _specs(self, grb: bool):
+        fspec = expert_specs(self.fitted, self.axis_name)
+        if not grb:
+            return (fspec,)
+        return (fspec, expert_specs(self.fitted_aug, self.axis_name),
+                replicated_specs(self.fitted_comm))
+
+    def _make_full(self, method: str):
+        ax = self.axis_name
+        grb = "grbcm" in method
+        nn = method.startswith("nn_")
+        perq_specs = {"mean": P(), "var": P()}
+        if nn:
+            perq_specs["mask_t"] = P(None, ax)
+        out_specs = (perq_specs, {"dac_residual": P()})
+
+        def fn(*args):
+            f, *rest = args
+            fa, fc = (rest[0], rest[1]) if grb else (None, None)
+            Xs = rest[-1]
+            Mb = f.yp.shape[0]
+            gidx = jax.lax.axis_index(ax) * Mb + jnp.arange(Mb)
+            return map_query_tiles(
+                lambda Xq: self._full_tile(method, f, fa, fc, gidx, Xq),
+                Xs, self.chunk)
+
+        # ppermute chains inside lax.map defeat static replication checking;
+        # replication of the P() outputs is established by pmean/pmax above
+        prog = shard_map(fn, mesh=self.mesh,
+                         in_specs=self._specs(grb) + (P(),),
+                         out_specs=out_specs, check_rep=False)
+        return jax.jit(prog)
+
+    def _make_routed(self, method: str):
+        ax = self.axis_name
+        grb = "grbcm" in method
+
+        def fn(*args):
+            f, *rest = args
+            fa, fc = (rest[0], rest[1]) if grb else (None, None)
+            Xr = rest[-1]                                # local (1, B, D)
+            Mb = f.yp.shape[0]
+            gidx = jax.lax.axis_index(ax) * Mb + jnp.arange(Mb)
+            perq, _ = map_query_tiles(
+                lambda Xq: self._routed_tile(method, f, fa, fc, gidx, Xq),
+                Xr[0], self.chunk)
+            return perq                                  # leaves (B,)
+
+        out_specs = {"mean": P(ax), "var": P(ax), "n_selected": P(ax)}
+        prog = shard_map(fn, mesh=self.mesh,
+                         in_specs=self._specs(grb) + (P(ax),),
+                         out_specs=out_specs, check_rep=False)
+        return jax.jit(prog)
+
+    def _experts_args(self, method: str):
+        if "grbcm" in method:
+            if self.fitted_aug is None or self.fitted_comm is None:
+                raise ValueError(
+                    "grbcm methods need fitted_aug and fitted_comm")
+            return (self.fitted, self.fitted_aug, self.fitted_comm)
+        return (self.fitted,)
+
+    # -- serving entry points ------------------------------------------------
+
+    def predict(self, method: str, Xs):
+        """Full-fleet sharded serving -> (mean (Nt,), var (Nt,), info).
+
+        Matches the replicated `PredictionEngine` (same method, converged
+        consensus) to <= 1e-6 in f64. info carries the worst-tile ring-DAC
+        residual and, for nn_* methods, the (M, Nt) CBNN mask.
+        """
+        if method not in self.METHODS:
+            raise ValueError(
+                f"unknown sharded method {method!r}; one of {self.METHODS} "
+                f"(the NPAE family needs strongly-complete exchange and is "
+                f"served by the replicated PredictionEngine)")
+        run = self._compiled.get(("full", method))
+        if run is None:
+            run = self._make_full(method)
+            self._compiled[("full", method)] = run
+        Xs = jax.device_put(Xs, self._rep)
+        perq, red = run(*self._experts_args(method), Xs)
+        info = dict(red)
+        mask_t = perq.pop("mask_t", None)
+        if mask_t is not None:
+            info["mask"] = mask_t.T
+        return perq["mean"], perq["var"], info
+
+    def _route(self, Xs) -> np.ndarray:
+        """Host-side CBNN routing proxy: nearest agent centroid -> owning
+        shard. For stationary kernels the eq. 39 score decays with distance
+        to the agent's data, so the centroid-nearest agent is the max-score
+        agent away from stripe boundaries; the exact thresholding then
+        happens shard-locally on the routed device."""
+        Xs = np.asarray(Xs)
+        d2 = ((Xs[:, None, :] - self._centroids[None, :, :]) ** 2).sum(-1)
+        Mb = self._centroids.shape[0] // self.ndev
+        return d2.argmin(axis=1) // Mb
+
+    def predict_routed(self, method: str, Xs):
+        """CBNN-routed serving (nn_* methods) -> (mean, var, info).
+
+        Each query runs on ONE shard (nearest-centroid routing), against
+        that shard's agent block only — 1/ndev of the per-agent work and no
+        collectives. Exact vs `predict` when the eta_nn-selected agents all
+        live in the routed block; info["n_selected"] and info["shard"] let
+        callers audit the approximation.
+        """
+        if not method.startswith("nn_"):
+            raise ValueError("predict_routed serves the CBNN nn_* methods; "
+                             f"got {method!r}")
+        if method not in self.METHODS:
+            raise ValueError(f"unknown sharded method {method!r}")
+        Xs = np.asarray(Xs)
+        Nt, D = Xs.shape
+        shard = self._route(Xs)
+        counts = np.bincount(shard, minlength=self.ndev)
+        # batch-per-shard is quantized to chunk * 2^k: the compiled-program
+        # key depends on routing skew only through log-many geometries, so
+        # a serving loop over same-sized micro-batches stays recompile-free
+        # after the first few skews instead of recompiling per batch
+        n_chunks = -(-max(int(counts.max()), 1) // self.chunk)
+        B = self.chunk * (1 << (n_chunks - 1).bit_length())
+        Xr = np.empty((self.ndev, B, D), dtype=Xs.dtype)
+        slot = np.empty(Nt, dtype=np.int64)
+        for g in range(self.ndev):
+            qs = np.flatnonzero(shard == g)
+            Xr[g, :qs.size] = Xs[qs]
+            # pad with a point the block owns so padded rows stay in-region
+            filler = Xs[qs[-1]] if qs.size else self._centroids[g * (
+                self._centroids.shape[0] // self.ndev)]
+            Xr[g, qs.size:] = filler
+            slot[qs] = g * B + np.arange(qs.size)
+        run = self._compiled.get(("routed", method, B))
+        if run is None:
+            run = self._make_routed(method)
+            self._compiled[("routed", method, B)] = run
+        Xr = jax.device_put(jnp.asarray(Xr),
+                            NamedSharding(self.mesh, P(self.axis_name)))
+        perq = run(*self._experts_args(method), Xr)
+        info = {"shard": shard, "batch_per_shard": B,
+                "n_selected": perq["n_selected"][slot]}
+        return perq["mean"][slot], perq["var"][slot], info
+
+    def swap_experts(self, fitted: FittedExperts,
+                     fitted_aug: FittedExperts | None = None,
+                     fitted_comm: FittedExperts | None = None):
+        """Hot-swap served factors (same shapes) without recompiling — the
+        experts are traced arguments of every compiled program."""
+        def shapes(t):
+            return [(a.shape, a.dtype) for a in jax.tree.leaves(t)]
+
+        # __init__ strips the (un-shardable) NPAE cross-Gram cache from the
+        # served fleets; strip it from the candidates too so a refit carrying
+        # Kcross compares same-shaped
+        fitted = fitted._replace(Kcross=None)
+        if fitted_aug is not None:
+            fitted_aug = fitted_aug._replace(Kcross=None)
+        for name, new, old in (("fitted", fitted, self.fitted),
+                               ("fitted_aug", fitted_aug, self.fitted_aug),
+                               ("fitted_comm", fitted_comm,
+                                self.fitted_comm)):
+            if new is not None and old is not None \
+                    and shapes(new) != shapes(old):
+                raise ValueError(f"swap_experts: {name} shapes changed — "
+                                 f"rebuild the ShardedEngine")
+        self.fitted = shard_experts(fitted, self.mesh, self.axis_name)
+        self._centroids = np.asarray(jnp.mean(fitted.Xp, axis=1))
+        if fitted_aug is not None:
+            self.fitted_aug = shard_experts(fitted_aug, self.mesh,
+                                            self.axis_name)
+        if fitted_comm is not None:
+            self.fitted_comm = shard_experts(fitted_comm, self.mesh,
+                                             self.axis_name, replicate=True)

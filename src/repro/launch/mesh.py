@@ -22,3 +22,19 @@ def data_axes(mesh) -> tuple:
     """The batch/FSDP axes present in this mesh ('pod' first if it exists)."""
     names = mesh.axis_names
     return tuple(a for a in ("pod", "data") if a in names)
+
+
+def make_agent_mesh(num_agents: int, *, max_devices: int | None = None):
+    """1-D mesh over the 'agents' axis for GP fleet serving (ShardedEngine).
+
+    Uses the LARGEST local device count that divides `num_agents` (the
+    sharded engine requires ndev | M), optionally capped at `max_devices`.
+    Falls back to a single-device mesh when nothing larger divides — the
+    sharded program is still valid there (ring collectives degenerate to
+    identity), which is what keeps single-device CI runs meaningful.
+    """
+    avail = len(jax.devices())
+    if max_devices is not None:
+        avail = min(avail, max_devices)
+    ndev = max(d for d in range(1, avail + 1) if num_agents % d == 0)
+    return jax.make_mesh((ndev,), ("agents",))

@@ -1,14 +1,34 @@
-"""Batched GP serving launcher: fit the fleet once, cache factors, then
-micro-batch prediction requests through the jit-cached query-tiled engine.
+"""GP serving launcher: fit the fleet once, cache factors, then serve
+prediction requests through the jit-cached engines — replicated
+(`PredictionEngine`), agent-sharded across devices (`ShardedEngine`,
+`--sharded`), or CBNN-routed subsets of the sharded fleet (`--routed`).
 
   PYTHONPATH=src python -m repro.launch.serve_gp --agents 8 --per-agent 128 \
       --method rbcm --requests 64 --batch 256 --chunk 128
 
-Simulates a serving front door: requests of random size are queued,
-micro-batched to a FIXED batch shape (one compiled program — zero recompiles
-after warmup), pushed through PredictionEngine.predict, and de-batched back
-into per-request answers. Posterior means ride the streaming rbf_matvec
-Pallas kernel on TPU (`stream_mean`); CPU falls back to the jnp reference.
+Serving front door (the engine layer each path uses is in parentheses):
+
+  default         ragged requests are coalesced host-side, micro-batched to
+                  a FIXED batch shape (one compiled program — zero
+                  recompiles after warmup), pushed through
+                  `PredictionEngine.predict` (the `*_cached` /
+                  `*_from_moments` serving stack), and de-batched back into
+                  per-request answers.
+  --sharded       same front door, but the fleet is sharded over the agent
+                  axis of a local device mesh (`launch.mesh.make_agent_mesh`
+                  + `core.prediction.ShardedEngine`): per-agent moments run
+                  shard-locally, cross-agent sums ride the device-ring
+                  collectives (paper eq. 35 on the ICI ring).
+  --routed        CBNN query routing on the sharded fleet (nn_* methods,
+                  paper §5.2 eq. 39): each micro-batch is routed so every
+                  query is served by the single shard holding its
+                  most-correlated experts — the "subset of agents perform
+                  predictions" serving mode.
+  --async-door    replaces the synchronous loop with the
+                  `launch.frontdoor.FrontDoor` collector thread: requests
+                  are SUBMITTED as they arrive and resolved through
+                  futures, with micro-batches cut by size or by the
+                  --max-wait-ms latency bound.
 
 `--compare-uncached` also times the per-call path (re-factorizing every
 agent's kernel matrix per request — the pre-engine behaviour) on the same
@@ -25,6 +45,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -33,10 +54,12 @@ import numpy as np
 from ..core.consensus import path_graph
 from ..core.gp import augment, communication_dataset, pack, stripe_partition
 from ..core.online import from_batch, observe_fleet
-from ..core.prediction import (PredictionEngine, fit_experts, dec_poe,
-                               dec_gpoe, dec_bcm, dec_rbcm)
+from ..core.prediction import (PredictionEngine, ShardedEngine, fit_experts,
+                               dec_poe, dec_gpoe, dec_bcm, dec_rbcm)
 from ..core.training import train_dec_apx_gp
 from ..data import random_inputs, gp_sample_field
+from .frontdoor import FrontDoor
+from .mesh import make_agent_mesh
 
 _LEGACY = {"poe": dec_poe, "gpoe": dec_gpoe, "bcm": dec_bcm, "rbcm": dec_rbcm}
 
@@ -126,6 +149,30 @@ def serve_online(args, lt, Xp, yp, eng, batches, total):
           f"0 recompiles after warmup)")
 
 
+def serve_async(args, predict, requests):
+    """Serve the request stream through the FrontDoor collector thread.
+
+    Requests are submitted as fast as clients produce them and resolved via
+    futures; the collector cuts fixed-shape micro-batches by size or by the
+    --max-wait-ms latency bound, so the engine's jit cache still sees one
+    compiled program. Warmup happens on the first dispatched batch.
+    """
+    t0 = time.time()
+    with FrontDoor(predict, args.batch,
+                   max_wait_ms=args.max_wait_ms) as door:
+        futures = [door.submit(r) for r in requests]
+        answers = [f.result() for f in futures]
+    dt = time.time() - t0
+    st = door.stats
+    assert all(a[0].shape[0] == r.shape[0]
+               for a, r in zip(answers, requests))
+    print(f"async {args.method}: {st.requests} requests / {st.queries} "
+          f"queries in {dt*1e3:.1f} ms ({st.queries/dt:.0f} q/s end-to-end, "
+          f"{st.batches} micro-batches of {args.batch}, "
+          f"padding {100*st.padding_fraction:.1f}%, "
+          f"engine busy {st.engine_seconds*1e3:.1f} ms)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--agents", type=int, default=8)
@@ -144,6 +191,23 @@ def main(argv=None):
                     help="DEC-apx-GP rounds (0 = use true hyperparameters)")
     ap.add_argument("--no-stream", action="store_true",
                     help="disable the streaming rbf_matvec mean path")
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard the fleet over the agent axis of a local "
+                         "device mesh (ShardedEngine; DAC-family methods)")
+    ap.add_argument("--routed", action="store_true",
+                    help="CBNN query routing on the sharded fleet: serve "
+                         "each query from the shard holding its most-"
+                         "correlated experts (nn_* methods; implies "
+                         "--sharded)")
+    ap.add_argument("--eta-nn", type=float, default=0.1,
+                    help="CBNN participation threshold (paper eq. 39)")
+    ap.add_argument("--async-door", action="store_true",
+                    help="serve through the FrontDoor collector thread "
+                         "(submit/Future API) instead of the synchronous "
+                         "loop")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="async front door latency bound: max time a "
+                         "request waits for its micro-batch to fill")
     ap.add_argument("--compare-uncached", action="store_true")
     ap.add_argument("--online", action="store_true",
                     help="interleave observe and predict streams: sliding-"
@@ -156,6 +220,13 @@ def main(argv=None):
     if args.online and "grbcm" in args.method:
         ap.error("--online maintains base experts only; grbcm variants "
                  "need separately refit augmented/communication experts")
+    if args.routed:
+        args.sharded = True
+        if not args.method.startswith("nn_"):
+            ap.error("--routed serves the CBNN nn_* methods")
+    if args.sharded and args.method not in ShardedEngine.METHODS:
+        ap.error(f"--sharded serves the DAC family {ShardedEngine.METHODS}; "
+                 "NPAE-family methods stay on the replicated engine")
 
     M = args.agents
     key = jax.random.PRNGKey(0)
@@ -173,14 +244,25 @@ def main(argv=None):
         fitted_comm = jax.jit(fit_experts)(lt, Xc[None], yc[None])
     jax.block_until_ready(fitted.L)
     t_fit = time.time() - t0
-    eng = PredictionEngine(fitted, A, chunk=args.chunk,
-                           dac_iters=args.dac_iters,
-                           fitted_aug=fitted_aug, fitted_comm=fitted_comm,
-                           stream_mean=not args.no_stream)
+    if args.sharded:
+        mesh = make_agent_mesh(M)
+        eng = ShardedEngine(fitted, mesh, chunk=args.chunk,
+                            dac_iters=args.dac_iters, eta_nn=args.eta_nn,
+                            fitted_aug=fitted_aug, fitted_comm=fitted_comm,
+                            stream_mean=not args.no_stream)
+        mode = (f"sharded over {eng.ndev} device(s)"
+                + (", CBNN-routed" if args.routed else ""))
+    else:
+        eng = PredictionEngine(fitted, A, chunk=args.chunk,
+                               dac_iters=args.dac_iters, eta_nn=args.eta_nn,
+                               fitted_aug=fitted_aug,
+                               fitted_comm=fitted_comm,
+                               stream_mean=not args.no_stream)
+        mode = "replicated"
 
     requests = request_stream(key, args.requests, args.batch)
     batches, total, slices = micro_batches(requests, args.batch)
-    print(f"fleet: M={M} agents x Ni={args.per_agent} points; "
+    print(f"fleet: M={M} agents x Ni={args.per_agent} points ({mode}); "
           f"factors cached in {t_fit*1e3:.1f} ms")
     print(f"queue: {args.requests} requests, {total} queries "
           f"-> {batches.shape[0]} micro-batches of {args.batch}")
@@ -189,12 +271,18 @@ def main(argv=None):
         serve_online(args, lt, Xp, yp, eng, batches, total)
         return
 
+    predict = (partial(eng.predict_routed, args.method) if args.routed
+               else partial(eng.predict, args.method))
+    if args.async_door:
+        serve_async(args, predict, requests)
+        return
+
     # warmup compiles the one program all micro-batches reuse
-    jax.block_until_ready(eng.predict(args.method, batches[0])[0])
+    jax.block_until_ready(predict(batches[0])[0])
     t0 = time.time()
     means = []
     for b in batches:
-        m, v, _ = eng.predict(args.method, b)
+        m, v, _ = predict(b)
         means.append(m)
     jax.block_until_ready(means[-1])
     dt = time.time() - t0

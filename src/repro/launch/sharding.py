@@ -1,5 +1,9 @@
 """Sharding policy: logical parameter/state axes -> PartitionSpec.
 
+Two clients: the legacy LM scaffolding (MaxText-style logical axis rules
+below) and the GP serving fleet (`gp_fleet_specs` / `shard_gp_fleet` — the
+agent-axis layout consumed by core/prediction/sharded.ShardedEngine).
+
 MaxText-style logical axis rules with divisibility fallbacks (DESIGN.md §6):
 
   vocab                      -> model   (replicate if V % 16 != 0)
@@ -117,6 +121,30 @@ def with_sharding(mesh, shape_tree, spec_tree):
 
 def adam_state_specs(param_specs):
     return {"step": P(), "m": param_specs, "v": param_specs}
+
+
+# ---------------------------------------------------------------------------
+# GP fleet serving (agent-axis sharding; see core/prediction/sharded.py and
+# docs/serving_sharded.md)
+# ---------------------------------------------------------------------------
+
+def gp_fleet_specs(fitted, axis_name: str = "agents"):
+    """PartitionSpec pytree for a `FittedExperts` fleet: per-agent leaves
+    sharded over `axis_name`, hyperparameters replicated. Thin re-export of
+    the policy that lives next to the engine (core.prediction.expert_specs)
+    so launchers resolve every sharding decision through this module."""
+    from ..core.prediction import expert_specs
+    return expert_specs(fitted, axis_name)
+
+
+def shard_gp_fleet(mesh, fitted, axis_name: str = "agents",
+                   replicate: bool = False):
+    """Place a fitted GP fleet on `mesh` (NamedSharding device_put).
+
+    `replicate=True` is for the 1-agent grBCM communication expert, which
+    every device needs in full."""
+    from ..core.prediction import shard_experts
+    return shard_experts(fitted, mesh, axis_name, replicate=replicate)
 
 
 def adafactor_state_specs(param_specs, param_shapes, min_dim_factored=128):

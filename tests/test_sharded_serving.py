@@ -1,0 +1,360 @@
+"""Agent-sharded serving == replicated serving, CBNN mask/routing coverage,
+and the async micro-batching front door.
+
+Acceptance gate for the sharded engine: for every PoE/BCM-family method
+(poe gpoe bcm rbcm grbcm + nn_* variants), running the fleet sharded over
+the agent axis of a device mesh — per-agent moments shard-local, cross-agent
+sums on the device ring — matches the replicated `PredictionEngine` to
+<= 1e-6 in f64, with bit-identical CBNN masks. Runs on however many local
+devices exist (a 1-device mesh degenerates the ring collectives to identity,
+so the code path is exercised everywhere); CI re-runs this file under
+--xla_force_host_platform_device_count=8.
+"""
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.consensus import (path_graph, ring_allmax, ring_allsum)
+from repro.core.gp import (augment, communication_dataset, pack,
+                           stripe_partition)
+from repro.core.prediction import (PredictionEngine, ShardedEngine,
+                                   dec_bcm_from_moments,
+                                   dec_grbcm_from_moments,
+                                   dec_gpoe_from_moments,
+                                   dec_poe_from_moments,
+                                   dec_rbcm_from_moments, expert_specs,
+                                   fit_experts, local_moments)
+from repro.core.prediction.cbnn import _mask_from_scores
+from repro.core.prediction import aggregation as agg
+from repro.data import gp_sample_field, random_inputs
+from repro.launch.frontdoor import FrontDoor
+from repro.launch.mesh import make_agent_mesh
+
+TRUE_LT = pack([1.2, 0.3], 1.3, 0.1)
+M = 8
+NT = 23          # deliberately not a multiple of the engine chunk (8)
+CHUNK = 8
+ITERS = 800      # enough for BOTH consensus protocols (path graph over M
+#                  agents, device ring over ndev) to converge well past 1e-7
+ETA = 0.1
+
+
+@pytest.fixture(scope="module")
+def setup():
+    X = random_inputs(jax.random.PRNGKey(0), 480)
+    _, y = gp_sample_field(jax.random.PRNGKey(1), X, TRUE_LT)
+    Xp, yp = stripe_partition(X, y, M)
+    Xs = random_inputs(jax.random.PRNGKey(2), NT)
+    Xc, yc = communication_dataset(jax.random.PRNGKey(3), Xp, yp)
+    Xa, ya = augment(Xp, yp, Xc, yc)
+    return Xp, yp, Xs, Xc, yc, Xa, ya
+
+
+@pytest.fixture(scope="module")
+def fitted(setup):
+    Xp, yp, Xs, Xc, yc, Xa, ya = setup
+    return (fit_experts(TRUE_LT, Xp, yp), fit_experts(TRUE_LT, Xa, ya),
+            fit_experts(TRUE_LT, Xc[None], yc[None]))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_agent_mesh(M)
+
+
+@pytest.fixture(scope="module")
+def engines(fitted, mesh):
+    f, fa, fc = fitted
+    rep = PredictionEngine(f, path_graph(M), chunk=CHUNK, dac_iters=ITERS,
+                           eta_nn=ETA, fitted_aug=fa, fitted_comm=fc)
+    sh = ShardedEngine(f, mesh, chunk=CHUNK, dac_iters=ITERS, eta_nn=ETA,
+                       fitted_aug=fa, fitted_comm=fc)
+    return rep, sh
+
+
+def assert_close(a, b, tol=1e-6):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# sharded == replicated, every PoE/BCM-family method
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ShardedEngine.METHODS)
+def test_sharded_matches_replicated(engines, setup, method):
+    """Full-fleet sharded serving == replicated engine to <= 1e-6 (f64)."""
+    _, _, Xs, *_ = setup
+    rep, sh = engines
+    mr, vr, ir = rep.predict(method, Xs)
+    ms, vs, is_ = sh.predict(method, Xs)
+    assert_close(ms, mr)
+    assert_close(vs, vr)
+    if method.startswith("nn_"):
+        # sharded routing (shard-local scores + ring max) == replicated mask
+        np.testing.assert_array_equal(np.asarray(is_["mask"]),
+                                      np.asarray(ir["mask"]))
+
+
+@pytest.mark.parametrize("method", ("rbcm", "nn_gpoe"))
+def test_exact_consensus_mode(fitted, mesh, setup, engines, method):
+    """consensus='exact' (finite ring_allsum protocol) matches too."""
+    f, fa, fc = fitted
+    _, _, Xs, *_ = setup
+    rep, _ = engines
+    sh = ShardedEngine(f, mesh, chunk=CHUNK, eta_nn=ETA, consensus="exact",
+                       fitted_aug=fa, fitted_comm=fc)
+    mr, vr, _ = rep.predict(method, Xs)
+    ms, vs, info = sh.predict(method, Xs)
+    assert_close(ms, mr)
+    assert_close(vs, vr)
+    assert float(info["dac_residual"]) == 0.0
+
+
+def test_sharded_rejects_npae_family(engines, setup):
+    _, _, Xs, *_ = setup
+    _, sh = engines
+    with pytest.raises(ValueError, match="NPAE"):
+        sh.predict("npae", Xs)
+    with pytest.raises(ValueError):
+        sh.predict_routed("rbcm", Xs)        # routing is CBNN-only
+
+
+def test_sharded_rejects_bad_geometry(fitted, mesh):
+    if mesh.shape["agents"] < 2:
+        pytest.skip("a 1-device mesh divides any agent count")
+    f, _, _ = fitted
+    odd = f._replace(Xp=f.Xp[:5], yp=f.yp[:5], L=f.L[:5], alpha=f.alpha[:5])
+    with pytest.raises(ValueError, match="shard"):
+        ShardedEngine(odd, mesh)
+
+
+def test_expert_specs_refuse_cross_cache(fitted):
+    f, _, _ = fitted
+    with pytest.raises(ValueError, match="Kcross"):
+        expert_specs(f._replace(Kcross=jnp.zeros((M, M, 2, 2))), "agents")
+
+
+def test_sharded_swap_experts_no_recompile(fitted, mesh, setup):
+    """Factor hot-swap reuses every compiled sharded program."""
+    f, _, _ = fitted
+    _, _, Xs, *_ = setup
+    sh = ShardedEngine(f, mesh, chunk=CHUNK, dac_iters=50)
+    m1, _, _ = sh.predict("poe", Xs)
+    compiled = dict(sh._compiled)
+    sh.swap_experts(f._replace(yp=2.0 * f.yp, alpha=2.0 * f.alpha))
+    m2, _, _ = sh.predict("poe", Xs)
+    assert all(sh._compiled[k] is compiled[k] for k in compiled)
+    assert_close(m2, 2.0 * np.asarray(m1), tol=1e-8)   # PoE mean is linear
+    # a refit carrying the (un-shardable) NPAE cross-Gram cache is accepted:
+    # the cache is stripped before the same-shape comparison
+    Ni = f.Xp.shape[1]
+    sh.swap_experts(f._replace(Kcross=jnp.zeros((M, M, Ni, Ni))))
+    assert all(sh._compiled[k] is compiled[k] for k in compiled)
+
+
+# ---------------------------------------------------------------------------
+# CBNN routing
+# ---------------------------------------------------------------------------
+
+def test_routed_equals_full_when_participants_are_shard_local():
+    """Shard-interior queries at tight eta_nn: the thresholded participant
+    set lives inside the routed block, so CBNN-routed serving equals the
+    full nn_* aggregate (the paper's subset-of-agents prediction with zero
+    approximation)."""
+    lt = pack([0.08, 0.08], 1.3, 0.1)      # short lengthscales: localized
+    X = random_inputs(jax.random.PRNGKey(0), 640)
+    _, y = gp_sample_field(jax.random.PRNGKey(1), X, lt)
+    Xp, yp = stripe_partition(X, y, M)
+    f = fit_experts(lt, Xp, yp)
+    cents = jnp.mean(Xp, axis=1)
+    noise = 0.01 * jax.random.normal(jax.random.PRNGKey(5), (3,) + cents.shape)
+    Xs = jnp.concatenate([cents + n for n in noise])   # interior queries
+    mesh = make_agent_mesh(M)
+    rep = PredictionEngine(f, path_graph(M), chunk=CHUNK, dac_iters=1500,
+                           eta_nn=0.8)
+    sh = ShardedEngine(f, mesh, chunk=CHUNK, dac_iters=1500, eta_nn=0.8)
+    # nn_gpoe included deliberately: its beta = m / M_eff weights need the
+    # PER-QUERY participant count, which routed mode must take from the
+    # local block (a ring sum would mix other shards' unrelated queries)
+    for method in ("nn_rbcm", "nn_gpoe", "nn_poe"):
+        mr, vr, _ = rep.predict(method, Xs)
+        mt, vt, info = sh.predict_routed(method, Xs)
+        assert_close(mt, mr)
+        assert_close(vt, vr)
+        assert info["n_selected"].shape == (Xs.shape[0],)
+        assert int(jnp.min(info["n_selected"])) >= 1
+
+
+def test_routed_batch_shapes_and_debatching(engines, setup):
+    """Routed serving returns answers in request order with static per-shard
+    batches (quantized to the chunk)."""
+    _, _, Xs, *_ = setup
+    _, sh = engines
+    mean, var, info = sh.predict_routed("nn_rbcm", Xs)
+    assert mean.shape == (NT,) and var.shape == (NT,)
+    assert info["batch_per_shard"] % CHUNK == 0
+    assert info["shard"].shape == (NT,)
+    assert np.all(np.asarray(info["n_selected"]) >= 1)
+    # permutation-invariance: shuffling requests shuffles answers with them
+    perm = np.random.default_rng(0).permutation(NT)
+    mean_p, _, _ = sh.predict_routed("nn_rbcm", np.asarray(Xs)[perm])
+    assert_close(mean_p, np.asarray(mean)[perm], tol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# CBNN mask semantics (satellite coverage)
+# ---------------------------------------------------------------------------
+
+def test_mask_keeps_best_agent_at_extreme_eta():
+    """>= 1 agent survives per query even when eta_nn excludes everyone."""
+    scores = jnp.asarray(np.random.default_rng(0).uniform(0, 1, (5, 11)))
+    mask = _mask_from_scores(scores, eta_nn=1e9)
+    per_query = np.asarray(mask).sum(axis=0)
+    assert np.all(per_query >= 1)
+    np.testing.assert_array_equal(np.asarray(mask).argmax(axis=0),
+                                  np.asarray(scores).argmax(axis=0))
+
+
+def test_mask_all_pass_at_zero_eta():
+    scores = jnp.asarray(np.random.default_rng(1).uniform(0.1, 1, (4, 7)))
+    assert bool(jnp.all(_mask_from_scores(scores, eta_nn=0.0)))
+
+
+def test_masked_aggregation_equals_dense_when_all_true(setup):
+    """All-true mask == no mask, for the centralized closed forms AND the
+    consensus cores."""
+    Xp, yp, Xs, *_ = setup
+    mu, var = local_moments(TRUE_LT, Xp, yp, Xs)
+    pv = float(jnp.exp(TRUE_LT)[-2]) ** 2
+    ones = jnp.ones_like(mu, dtype=bool)
+    for fn in (agg.poe, agg.gpoe):
+        assert_close(fn(mu, var, mask=ones)[0], fn(mu, var)[0], tol=1e-12)
+    for fn in (agg.bcm, agg.rbcm):
+        assert_close(fn(mu, var, pv, mask=ones)[0], fn(mu, var, pv)[0],
+                     tol=1e-12)
+    A = path_graph(M)
+    for core in (dec_poe_from_moments, dec_gpoe_from_moments,
+                 dec_bcm_from_moments, dec_rbcm_from_moments):
+        masked = core(mu, var, pv, A, iters=60, mask=ones)
+        dense = core(mu, var, pv, A, iters=60)
+        assert_close(masked[0], dense[0], tol=1e-12)
+        assert_close(masked[1], dense[1], tol=1e-12)
+
+
+def test_masked_grbcm_core_all_true(setup):
+    Xp, yp, Xs, Xc, yc, Xa, ya = setup
+    mu_a, var_a = local_moments(TRUE_LT, Xa, ya, Xs)
+    mu_c, var_c = local_moments(TRUE_LT, Xc[None], yc[None], Xs)
+    A = path_graph(M)
+    ones = jnp.ones_like(mu_a, dtype=bool)
+    masked = dec_grbcm_from_moments(mu_a, var_a, mu_c[0], var_c[0], A,
+                                    iters=60, mask=ones)
+    dense = dec_grbcm_from_moments(mu_a, var_a, mu_c[0], var_c[0], A,
+                                   iters=60)
+    assert_close(masked[0], dense[0], tol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# ring collectives
+# ---------------------------------------------------------------------------
+
+def test_ring_allreduce_exact(mesh):
+    """ring_allsum / ring_allmax produce exact network reductions on every
+    device of the mesh."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    n = mesh.shape["agents"]
+    w = 1.0 + jnp.arange(3.0 * n).reshape(n, 3)
+
+    @partial(shard_map, mesh=mesh, in_specs=P("agents"),
+             out_specs=(P("agents"), P("agents")), check_rep=False)
+    def run(wl):
+        return (ring_allsum(wl, "agents"), ring_allmax(wl, "agents"))
+
+    s, m = run(w)
+    np.testing.assert_allclose(np.asarray(s),
+                               np.broadcast_to(w.sum(0, keepdims=True),
+                                               w.shape), atol=1e-12)
+    np.testing.assert_allclose(np.asarray(m),
+                               np.broadcast_to(w.max(0, keepdims=True),
+                                               w.shape), atol=0)
+
+
+def test_make_agent_mesh_divisor():
+    mesh = make_agent_mesh(M)
+    assert M % mesh.shape["agents"] == 0
+    assert make_agent_mesh(7, max_devices=4).shape["agents"] in (1, 7)
+
+
+# ---------------------------------------------------------------------------
+# async front door
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_engine(fitted):
+    f, _, _ = fitted
+    return PredictionEngine(f, path_graph(M), chunk=CHUNK, dac_iters=60)
+
+
+def test_frontdoor_matches_direct(small_engine):
+    """Ragged submits through the front door == direct engine answers."""
+    rng = np.random.default_rng(3)
+    requests = [random_inputs(jax.random.PRNGKey(50 + i), int(n))
+                for i, n in enumerate(rng.integers(1, 9, size=7))]
+    predict = partial(small_engine.predict, "rbcm")
+    with FrontDoor(predict, batch=16, max_wait_ms=5.0) as door:
+        futures = [door.submit(r) for r in requests]
+        results = [f.result(timeout=120) for f in futures]
+    for r, (mean, var) in zip(requests, results):
+        ref_m, ref_v, _ = small_engine.predict("rbcm", r)
+        assert mean.shape == (r.shape[0],)
+        assert_close(mean, ref_m, tol=1e-8)
+        assert_close(var, ref_v, tol=1e-8)
+    st = door.stats
+    assert st.requests == 7
+    assert st.queries == sum(r.shape[0] for r in requests)
+    assert st.batches >= 1
+
+
+def test_frontdoor_fixed_shapes_reuse_compiled(small_engine):
+    """Every dispatch hits the same compiled program (fixed batch shape)."""
+    predict = partial(small_engine.predict, "poe")
+    with FrontDoor(predict, batch=16, max_wait_ms=1.0) as door:
+        door.submit(random_inputs(jax.random.PRNGKey(0), 5)).result(120)
+        compiled = small_engine._compiled["poe"]
+        door.submit(random_inputs(jax.random.PRNGKey(1), 3)).result(120)
+        door.submit(random_inputs(jax.random.PRNGKey(2), 40)).result(120)
+    assert small_engine._compiled["poe"] is compiled
+
+
+def test_frontdoor_propagates_errors():
+    def boom(_):
+        raise RuntimeError("engine exploded")
+
+    with FrontDoor(boom, batch=4, max_wait_ms=1.0) as door:
+        fut = door.submit(np.zeros((2, 2)))
+        with pytest.raises(RuntimeError, match="exploded"):
+            fut.result(timeout=60)
+
+
+def test_frontdoor_rejects_after_close(small_engine):
+    door = FrontDoor(partial(small_engine.predict, "poe"), batch=8)
+    door.close()
+    with pytest.raises(RuntimeError):
+        door.submit(np.zeros((1, 2)))
+
+
+def test_frontdoor_latency_bound(small_engine):
+    """A lone sub-batch request is dispatched once max_wait_ms expires
+    rather than waiting for a full batch."""
+    predict = partial(small_engine.predict, "poe")
+    with FrontDoor(predict, batch=256, max_wait_ms=10.0) as door:
+        t0 = time.monotonic()
+        fut = door.submit(random_inputs(jax.random.PRNGKey(0), 2))
+        mean, _ = fut.result(timeout=120)
+    assert mean.shape == (2,)
+    assert time.monotonic() - t0 < 60.0    # not stuck waiting for 254 more

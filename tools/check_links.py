@@ -1,0 +1,60 @@
+"""Fail on broken RELATIVE links in the repo's markdown docs.
+
+    python tools/check_links.py [files...]      # default: README.md docs/*.md
+
+Checks every `[text](target)` and bare `<target>` markdown link whose target
+is a relative path (no URL scheme, not a pure #anchor): the referenced file
+or directory must exist relative to the markdown file. External http(s)
+links are NOT fetched — CI must not depend on the network — and anchors
+within existing files are not resolved. Exits 1 with a list of offenders.
+
+Stdlib only (CI runs it before any project dependency is importable).
+"""
+from __future__ import annotations
+
+import glob
+import re
+import sys
+from pathlib import Path
+
+# [text](target "title") — target stops at whitespace or closing paren
+_MD_LINK = re.compile(r"\[[^\]]*\]\(\s*([^)\s]+)(?:\s+\"[^\"]*\")?\s*\)")
+_SCHEME = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")          # http:, mailto:
+
+
+def relative_targets(text: str):
+    for m in _MD_LINK.finditer(text):
+        target = m.group(1)
+        if _SCHEME.match(target) or target.startswith("#"):
+            continue
+        yield target.split("#", 1)[0]                        # strip anchor
+
+
+def check_file(md: Path) -> list[str]:
+    broken = []
+    for target in relative_targets(md.read_text(encoding="utf-8")):
+        if not target:                                       # "#anchor" only
+            continue
+        if not (md.parent / target).exists():
+            broken.append(f"{md}: broken relative link -> {target}")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a) for a in argv] if argv else \
+        [Path("README.md"), *map(Path, sorted(glob.glob("docs/*.md")))]
+    broken = []
+    for md in files:
+        if not md.exists():
+            broken.append(f"{md}: file listed for checking does not exist")
+            continue
+        broken.extend(check_file(md))
+    for line in broken:
+        print(line, file=sys.stderr)
+    print(f"checked {len(files)} markdown file(s): "
+          f"{'FAIL' if broken else 'ok'}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
