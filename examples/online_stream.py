@@ -1,5 +1,5 @@
-"""Streaming fleet in ~50 lines: observe online, predict online, and change
-fleet membership on the fly.
+"""Streaming fleet in ~40 lines: observe online, predict online, and change
+fleet membership on the fly — all through the `GPFleet` facade.
 
     PYTHONPATH=src python examples/online_stream.py
 
@@ -14,11 +14,9 @@ import jax
 jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 
-from repro.core.consensus import path_graph
 from repro.core.gp import pack, stripe_partition
-from repro.core.online import from_batch, join, leave, observe_fleet
-from repro.core.prediction import PredictionEngine
 from repro.data import gp_sample_field, random_inputs
+from repro.fleet import FleetConfig, GPFleet
 
 M, W = 4, 48
 key = jax.random.PRNGKey(0)
@@ -28,32 +26,32 @@ true_theta = pack([1.2, 0.3], 1.3, 0.1)
 X = random_inputs(key, M * W)
 _, y = gp_sample_field(jax.random.PRNGKey(1), X, true_theta)
 Xp, yp = stripe_partition(X, y, M)
-state = from_batch(true_theta, Xp, yp)
-A = path_graph(M)
-eng = PredictionEngine(state.to_fitted(), A, chunk=16, dac_iters=120)
+cfg = FleetConfig(num_agents=M, method="rbcm", online=True,
+                  chunk=16, dac_iters=120)
+# serve from the true hyperparameters (train=False) — the streaming story
+fleet = GPFleet(cfg).fit(Xp, yp, log_theta0=true_theta, train=False)
 Xs = random_inputs(jax.random.PRNGKey(2), 32)
 
 # --- live loop: every round each agent observes, then the fleet serves ----
-ingest = jax.jit(observe_fleet)
 for t in range(12):
     k = jax.random.fold_in(key, 100 + t)
     xs = random_inputs(k, M)
     _, ys = gp_sample_field(jax.random.fold_in(k, 1), xs, true_theta)
-    state = ingest(state, xs, ys)            # O(W^2) per agent, no refit
-    eng.swap_experts(state.to_fitted())      # reuses the compiled predict
-    mean, var, _ = eng.predict("rbcm", Xs)
-print(f"after 12 rounds: windows full at {int(state.count[0])}/{W}, "
+    fleet.observe(xs, ys)                    # O(W^2)/agent + factor hot-swap
+    mean, var, _ = fleet.predict(Xs)         # reuses the compiled predict
+print(f"after 12 rounds: windows full at "
+      f"{int(fleet.window_counts[0])}/{W}, "
       f"avg predictive std {float(jnp.sqrt(var).mean()):.3f}")
 
 # --- membership: one agent joins with data, another leaves ----------------
 Xj = random_inputs(jax.random.PRNGKey(7), 20)
 _, yj = gp_sample_field(jax.random.PRNGKey(8), Xj, true_theta)
-state, A = join(state, A, Xj, yj)            # attaches to the path tail
-eng.rewire(A, fitted=state.to_fitted())      # new M -> fresh traces
-mean, _, _ = eng.predict("rbcm", Xs)
-print(f"agent joined: fleet M={state.num_agents}, mean[0]={float(mean[0]):+.3f}")
+fleet.join(Xj, yj)                           # attaches to the path tail
+mean, _, _ = fleet.predict(Xs)
+print(f"agent joined: fleet M={fleet.num_agents}, "
+      f"mean[0]={float(mean[0]):+.3f}")
 
-state, A = leave(state, A, 1)                # interior node; graph re-chained
-eng.rewire(A, fitted=state.to_fitted())
-mean, _, _ = eng.predict("rbcm", Xs)
-print(f"agent left:   fleet M={state.num_agents}, mean[0]={float(mean[0]):+.3f}")
+fleet.leave(1)                               # interior node; graph re-chained
+mean, _, _ = fleet.predict(Xs)
+print(f"agent left:   fleet M={fleet.num_agents}, "
+      f"mean[0]={float(mean[0]):+.3f}")

@@ -1,22 +1,20 @@
-"""Quickstart: decentralized GP training + prediction in ~40 lines.
+"""Quickstart: the whole decentralized GP lifecycle in ~30 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-A fleet of M=6 agents on a path graph observes a spatial field. They train
-GP hyperparameters with DEC-gapx-GP (closed-form decentralized ADMM on
-augmented datasets, paper Alg. 4) and predict with DEC-grBCM + CBNN
-(consistent aggregation, nearest-neighbor selection) — no raw-data pooling,
-neighbor-wise messages only.
+A fleet of M=6 agents on a path graph observes a spatial field. One
+`FleetConfig` declares the lifecycle — DEC-gapx-GP training (closed-form
+decentralized ADMM on augmented datasets, paper Alg. 4) and DEC-NN-grBCM
+prediction (consistent aggregation + CBNN nearest-neighbor selection) —
+and `GPFleet` runs it: no raw-data pooling, neighbor-wise messages only.
 """
 import jax
 jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 
-from repro.core.gp import pack, stripe_partition, communication_dataset, augment
-from repro.core.consensus import path_graph
-from repro.core.training import train_dec_gapx_gp
-from repro.core.prediction import dec_nn_grbcm
+from repro.core.gp import pack, predict_full, stripe_partition
 from repro.data import random_inputs, gp_sample_field
+from repro.fleet import FleetConfig, GPFleet
 
 M = 6
 key = jax.random.PRNGKey(0)
@@ -28,26 +26,22 @@ f, y = gp_sample_field(jax.random.PRNGKey(1), X, true_theta)
 
 # --- each agent keeps a private stripe of observations --------------------
 Xp, yp = stripe_partition(X, y, M)
-A = path_graph(M)                       # strongly connected, not complete
 
-# --- grBCM-style communication dataset (sample -> flood -> augment) -------
-Xc, yc = communication_dataset(jax.random.PRNGKey(2), Xp, yp)
-Xa, ya = augment(Xp, yp, Xc, yc)
+# --- the lifecycle, declared once -----------------------------------------
+cfg = FleetConfig(num_agents=M, graph="path",       # strongly connected
+                  trainer="dec-gapx", admm_iters=120,
+                  method="nn_grbcm", dac_iters=200, eta_nn=0.1)
+fleet = GPFleet(cfg).fit(Xp, yp, key=jax.random.PRNGKey(2))
 
-# --- decentralized training: DEC-gapx-GP (Theorem 1 closed form) ----------
-theta0 = pack([2.0, 0.5], 1.0, 1.0)
-thetas, info = train_dec_gapx_gp(theta0, Xa, ya, A, iters=120)
-theta_hat = jnp.mean(thetas, axis=0)
+theta_hat = fleet.log_theta
 print("true  theta:", [round(float(v), 3) for v in jnp.exp(true_theta)])
 print("DEC-gapx-GP:", [round(float(v), 3) for v in jnp.exp(theta_hat)],
-      f"(consensus residual {float(info['residuals'][-1]):.1e})")
+      f"(consensus residual "
+      f"{float(fleet.train_info['residuals'][-1]):.1e})")
 
 # --- decentralized prediction: DEC-NN-grBCM --------------------------------
-from repro.core.gp import predict_full
-
 Xs = random_inputs(jax.random.PRNGKey(3), 50)
-mean, var, pinfo = dec_nn_grbcm(theta_hat, Xa, ya, Xc, yc, Xs, A,
-                                eta_nn=0.1, Xp=Xp)
+mean, var, pinfo = fleet.predict(Xs)
 m_full, _ = predict_full(theta_hat, Xp.reshape(-1, 2), yp.reshape(-1), Xs)
 rmse = float(jnp.sqrt(jnp.mean((mean - m_full) ** 2)))
 print(f"predicted {Xs.shape[0]} sites | RMSE vs FULL-GP {rmse:.4f} | "

@@ -1,25 +1,55 @@
-"""Scenario: batched serving with prefill + KV-cache decode.
+"""Batched GP serving through the async front door, fleet persistence
+included — the production serving loop in ~40 lines.
 
-    PYTHONPATH=src python examples/serve_batched.py --arch chatglm3-6b
+    PYTHONPATH=src python examples/serve_batched.py
 
-Runs the reduced variant of any assigned architecture through the serving
-path (prefill a batch of prompts, decode autoregressively) — exactly the
-computation the decode_32k / long_500k dry-run shapes lower at scale.
+Fit a fleet once, `save()` it, `load()` it back the way a serving process
+would (no refit — bit-identical factors), then serve a ragged request
+stream through `to_server()`: the FrontDoor collector coalesces requests
+into fixed-shape micro-batches (one compiled program, zero recompiles
+after warmup) and resolves each request through a Future.
+
+(The LM prefill/decode scenario this example used to run lives on in
+`repro.launch.serve --arch ... --reduced`; see the README legacy note.)
 """
-import argparse
+import tempfile
 
-from repro.launch import serve
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np
 
+from repro.core.gp import pack, stripe_partition
+from repro.data import gp_sample_field, random_inputs
+from repro.fleet import FleetConfig, GPFleet
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="chatglm3-6b")
-    args = ap.parse_args()
-    import sys
-    sys.argv = ["serve", "--arch", args.arch, "--reduced", "--batch", "4",
-                "--prompt-len", "32", "--gen", "16"]
-    serve.main()
+M = 8
+key = jax.random.PRNGKey(0)
+true_theta = pack([1.2, 0.3], 1.3, 0.1)
 
+# --- fit once, persist, reload (what a serving process does at boot) ------
+X = random_inputs(key, M * 128)
+_, y = gp_sample_field(jax.random.PRNGKey(1), X, true_theta)
+Xp, yp = stripe_partition(X, y, M)
+cfg = FleetConfig(num_agents=M, trainer="dec-apx", admm_iters=40,
+                  method="rbcm", chunk=64, dac_iters=120)
+ckpt = tempfile.mkdtemp(prefix="gp_fleet_")
+GPFleet(cfg).fit(Xp, yp).save(ckpt)
+fleet = GPFleet.load(ckpt)                   # fresh engine, no refit
+print(f"fleet: M={M}, trainer={cfg.trainer}, method={cfg.method}, "
+      f"reloaded from {ckpt}")
 
-if __name__ == "__main__":
-    main()
+# --- a ragged request stream through the async micro-batching door --------
+rng = np.random.default_rng(0)
+requests = [random_inputs(jax.random.fold_in(key, 100 + i),
+                          int(rng.integers(1, 65)))
+            for i in range(24)]
+with fleet.to_server(batch=64, max_wait_ms=2.0) as door:
+    futures = [door.submit(r) for r in requests]
+    answers = [f.result() for f in futures]
+
+st = door.stats
+assert all(a[0].shape[0] == r.shape[0] for a, r in zip(answers, requests))
+print(f"served {st.requests} requests / {st.queries} queries in "
+      f"{st.batches} micro-batches of 64 "
+      f"(padding {100 * st.padding_fraction:.1f}%, "
+      f"engine busy {st.engine_seconds * 1e3:.1f} ms)")

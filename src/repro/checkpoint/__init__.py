@@ -1,3 +1,3 @@
-from .io import save_checkpoint, load_checkpoint, latest_step
+from .io import save_checkpoint, load_checkpoint, latest_step, restore
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step", "restore"]

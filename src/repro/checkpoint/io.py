@@ -26,7 +26,10 @@ def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
     np.savez(path, **leaves)
     treedef = jax.tree.structure(tree)
     with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
-        json.dump({"treedef": str(treedef), "step": step}, f)
+        json.dump({"treedef": str(treedef), "step": step,
+                   "leaves": {k: {"shape": list(v.shape),
+                                  "dtype": str(v.dtype)}
+                              for k, v in leaves.items()}}, f)
     return path
 
 
@@ -39,10 +42,67 @@ def latest_step(ckpt_dir: str) -> int | None:
 
 
 def load_checkpoint(ckpt_dir: str, step: int, like_tree):
-    """Restore into the structure of `like_tree` (shape/dtype template)."""
+    """Restore into the structure of `like_tree` (shape/dtype template).
+
+    Unvalidated fast path — a missing leaf surfaces as a bare KeyError and
+    shape/dtype drift is NOT detected (a reshaped template silently receives
+    the stored array). Prefer `restore`, which checks the stored leaf set
+    against the template and fails with a full report.
+    """
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     data = np.load(path)
     paths = jax.tree_util.tree_flatten_with_path(like_tree)[0]
     leaves = [data[jax.tree_util.keystr(kp)] for kp, _ in paths]
     treedef = jax.tree.structure(like_tree)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def restore(ckpt_dir: str, template, step: int | None = None):
+    """Validated restore: load `step` (default: latest) into the structure
+    of `template` and CHECK every leaf against it.
+
+    The manifest's `str(treedef)` cannot reconstruct a pytree — the caller
+    must know the structure — so the contract is: the caller supplies a
+    template (arrays or jax.ShapeDtypeStruct leaves) and this function
+    guarantees the checkpoint actually matches it. Mismatches fail loudly
+    with a full report instead of a bare KeyError / silent shape drift:
+
+      * a template leaf missing from the checkpoint,
+      * a stored leaf the template does not expect (structure drift),
+      * shape or dtype disagreement on any leaf.
+
+    Returns the template structure with leaves replaced by the stored
+    arrays.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint steps in {ckpt_dir!r}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"checkpoint {path!r} does not exist")
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    want = {jax.tree_util.keystr(kp): v for kp, v in paths}
+    errors = []
+    missing = sorted(set(want) - set(data.files))
+    extra = sorted(set(data.files) - set(want))
+    if missing:
+        errors.append(f"leaves missing from checkpoint: {missing}")
+    if extra:
+        errors.append(f"stored leaves the template does not expect: {extra}")
+    for key in sorted(set(want) & set(data.files)):
+        tmpl, stored = want[key], data[key]
+        t_shape, t_dtype = tuple(tmpl.shape), np.dtype(tmpl.dtype)
+        if t_shape != stored.shape:
+            errors.append(f"{key}: template shape {t_shape} != stored "
+                          f"{stored.shape}")
+        elif t_dtype != stored.dtype:
+            errors.append(f"{key}: template dtype {t_dtype} != stored "
+                          f"{stored.dtype}")
+    if errors:
+        raise ValueError(
+            f"checkpoint {path!r} does not match the template:\n  "
+            + "\n  ".join(errors))
+    leaves = [data[jax.tree_util.keystr(kp)] for kp, _ in paths]
     return jax.tree.unflatten(treedef, leaves)

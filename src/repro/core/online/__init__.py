@@ -2,7 +2,10 @@
 rank-1 Cholesky factor maintenance, and dynamic fleet membership.
 
 See docs/online_gp.md for the update/downdate math, window semantics, the
-join/leave protocol, and serving integration."""
+join/leave protocol, and serving integration. The lifecycle facade
+(`repro.fleet.GPFleet` with FleetConfig(online=True)) drives this module
+through `observe` / `join` / `leave` and persists the window state in
+`save()`/`load()`."""
 from .experts import (OnlineExperts, evict_oldest, from_batch, init_online,
                       observe, observe_fleet, refit)
 from .membership import join, leave

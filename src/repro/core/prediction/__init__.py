@@ -10,6 +10,13 @@
 Serving front-ends: PredictionEngine (replicated fleet, all 13 methods +
 centralized references) and ShardedEngine (fleet sharded over the agent
 axis of a device mesh, DAC family + CBNN query routing).
+
+The agent-facing lifecycle API over all of this is `repro.fleet`
+(FleetConfig + GPFleet): method names and per-method capability flags
+(shardable / routable / online-safe / needs-augmented-data) live in its
+`METHODS` registry, which tests assert stays in lockstep with the engine
+METHODS tuples here. This module's surface is frozen by
+tools/check_api.py.
 """
 from .local import (local_moments, npae_terms, chol_factors, cross_gram,
                     local_moments_cached, npae_terms_cached, stream_means)

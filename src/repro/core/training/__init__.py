@@ -1,3 +1,13 @@
+"""GP hyperparameter training (paper §4): the ADMM family + FACT-GP.
+
+The config-driven entry point is `repro.fleet.GPFleet.fit`, which
+dispatches to these loops through the `repro.fleet.TRAINERS` registry
+(names: fact | c | apx | gapx | dec-c | dec-apx | dec-gapx |
+dec-apx-sharded) and forwards the FleetConfig's ADMM parameters unchanged
+— facade-trained thetas are bitwise the legacy thetas
+(tests/test_fleet.py). The loops below remain the public reference
+surface.
+"""
 from .factorized import local_nlls, factorized_nll, train_fact_gp
 from .admm_centralized import train_c_gp, train_apx_gp, train_gapx_gp
 from .admm_decentralized import (train_dec_c_gp, train_dec_apx_gp,

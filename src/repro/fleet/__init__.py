@@ -1,0 +1,29 @@
+"""repro.fleet — the single public API for the GP fleet lifecycle.
+
+    FleetConfig   declarative config (kernel theta, partition, graph,
+                  trainer + ADMM params, method + consensus params,
+                  sharding/routing/online switches); defaults reproduce
+                  the paper's §6 configuration (configs/paper_gp.py)
+    GPFleet       the facade: fit / predict / observe / join / leave /
+                  shard / save / load / to_server
+    registries    TRAINERS (the §4 ADMM family) and METHODS (the 13 §5
+                  prediction methods) with per-entry capability flags —
+                  dispatch, CLI choices, and test parametrization all
+                  derive from these tables
+
+See docs/fleet_api.md for the lifecycle walkthrough and the migration
+table from the legacy free-function surface (which remains public and
+unchanged underneath).
+"""
+from .config import FleetConfig
+from .fleet import GPFleet
+from .registry import (METHODS, TRAINERS, MethodSpec, TrainerSpec,
+                       get_method, get_trainer, method_names, trainer_names,
+                       validate_config)
+
+__all__ = [
+    "FleetConfig", "GPFleet",
+    "METHODS", "TRAINERS", "MethodSpec", "TrainerSpec",
+    "get_method", "get_trainer", "method_names", "trainer_names",
+    "validate_config",
+]

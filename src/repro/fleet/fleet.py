@@ -1,0 +1,472 @@
+"""GPFleet: the single agent-facing facade for the whole fleet lifecycle.
+
+    cfg = FleetConfig(num_agents=8, trainer="dec-apx", method="rbcm")
+    fleet = GPFleet(cfg).fit(Xp, yp)        # ADMM training + factor caching
+    mean, var, info = fleet.predict(Xs)     # jit-cached, query-tiled serving
+    fleet.save("ckpt/")                     # fitted factors + config + graph
+    ...
+    fleet = GPFleet.load("ckpt/")           # fresh process: serve WITHOUT
+    mean2, var2, _ = fleet.predict(Xs)      # refitting, bit-identical
+
+Lifecycle verbs and the subsystems they drive (all pre-existing — the
+facade adds dispatch and state management, never new numerics):
+
+  fit()        trainer registry -> the §4 ADMM loops -> `fit_experts`
+               (grBCM communication/augmented datasets built when the
+               trainer or method needs them)
+  predict()    method registry -> `PredictionEngine` (replicated) /
+               `ShardedEngine` (agent-sharded mesh; `predict_routed` when
+               config.routed) — compiled programs cached per method
+  observe()    `core.online` sliding-window experts: O(W^2) rank-1 factor
+               updates hot-swapped into the engine, zero recompiles
+  join()/leave()  dynamic membership: window state + consensus graph +
+               engine rewire in one step
+  shard()      move a fitted fleet onto the agent-sharded engine in place
+  save()/load()   `checkpoint.io` round trip of FittedExperts + FleetConfig
+               + consensus graph (+ online window state)
+  to_server()  the async micro-batching `FrontDoor` over this fleet
+
+Capability validation happens at CONSTRUCTION (fleet/registry.py
+`validate_config`): a sharded NPAE-family fleet or a routed non-nn_* fleet
+is rejected with a clear error before any array work.
+"""
+from __future__ import annotations
+
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint.io import restore, save_checkpoint
+from ..core.consensus import (complete_graph, cycle_graph, path_graph,
+                              random_connected_graph)
+from ..core.gp import augment, communication_dataset, pack
+from ..core.online import OnlineExperts, from_batch, join, leave, observe_fleet
+from ..core.prediction import (FittedExperts, PredictionEngine, ShardedEngine,
+                               fit_experts)
+from ..launch.frontdoor import FrontDoor
+from .config import FleetConfig
+from .registry import get_method, get_trainer, validate_config
+
+_FLEET_MANIFEST = "fleet.json"
+_FORMAT_VERSION = 1
+
+
+def _build_graph(cfg: FleetConfig):
+    if cfg.graph == "path":
+        return path_graph(cfg.num_agents)
+    if cfg.graph == "cycle":
+        return cycle_graph(cfg.num_agents)
+    if cfg.graph == "complete":
+        return complete_graph(cfg.num_agents)
+    return random_connected_graph(cfg.num_agents, cfg.graph_p,
+                                  seed=cfg.graph_seed)
+
+
+class GPFleet:
+    """Config-driven facade over training, serving, streaming, persistence.
+
+    Construction validates the config against the registries and builds the
+    consensus graph; `fit` (or `load`) populates the fitted state; every
+    serving verb dispatches through the lazily built engine. The underlying
+    engines/free functions remain public — the facade is sugar plus
+    lifecycle glue, not a wall.
+    """
+
+    def __init__(self, config: FleetConfig | None = None, *, A=None,
+                 mesh=None):
+        cfg = config if config is not None else FleetConfig()
+        validate_config(cfg)
+        self.config = cfg
+        self.A = A if A is not None else _build_graph(cfg)
+        if self.A.shape[0] != cfg.num_agents:
+            raise ValueError(f"adjacency for {self.A.shape[0]} agents vs "
+                             f"config.num_agents={cfg.num_agents}")
+        self.mesh = mesh
+        # fitted state (populated by fit / load)
+        self.log_theta = None          # consensus hyperparameters (K,)
+        self.thetas = None             # per-agent trained thetas (M, K)
+        self.train_info = None
+        self.fitted: FittedExperts | None = None
+        self.fitted_aug: FittedExperts | None = None
+        self.fitted_comm: FittedExperts | None = None
+        self._online_state: OnlineExperts | None = None
+        self._comm_data = None         # (Xc, yc, Xa, ya) when built
+        self._engine = None
+        self._ingest = None
+
+    # -- properties ----------------------------------------------------------
+
+    @property
+    def num_agents(self) -> int:
+        return self.config.num_agents
+
+    @property
+    def is_fitted(self) -> bool:
+        return self.fitted is not None
+
+    @property
+    def window_counts(self):
+        """(M,) real observations per agent's sliding window, or None for
+        batch (non-online) fleets."""
+        return None if self._online_state is None \
+            else self._online_state.count
+
+    @property
+    def engine(self):
+        """The serving engine (built on first use, cached until the fleet
+        changes shape: refit, shard, rewire)."""
+        if self._engine is None:
+            self._engine = self._build_engine()
+        return self._engine
+
+    def _require_fitted(self, verb: str):
+        if self.fitted is None:
+            raise RuntimeError(f"{verb} needs a fitted fleet — call fit() "
+                               f"or load() first")
+
+    # -- fit -----------------------------------------------------------------
+
+    def _needs_comm_data(self, train: bool) -> bool:
+        """Communication/augmented datasets are built only when consumed:
+        by an augmented-data trainer that will actually run, or by a
+        grbcm-family serving method."""
+        return ((train and get_trainer(self.config.trainer)
+                 .needs_augmented_data)
+                or get_method(self.config.method).needs_augmented_data)
+
+    def _build_comm_data(self, Xp, yp, key):
+        Xc, yc = communication_dataset(key, Xp, yp)
+        Xa, ya = augment(Xp, yp, Xc, yc)
+        self._comm_data = (Xc, yc, Xa, ya)
+        return self._comm_data
+
+    def fit(self, Xp, yp, *, key=None, log_theta0=None, grad_fn=None,
+            train: bool = True) -> "GPFleet":
+        """Train hyperparameters (trainer registry) and cache the serving
+        factors. Returns self (chainable).
+
+        Xp (M, Ni, D), yp (M, Ni) — M must equal config.num_agents.
+        `key` seeds the grBCM communication dataset when the trainer or
+        method needs one (default PRNGKey(0): deterministic).
+        `train=False` skips training and serves from `log_theta0` (default:
+        config.theta0) — the "true hyperparameters known" scenario.
+        """
+        cfg = self.config
+        Xp, yp = jnp.asarray(Xp), jnp.asarray(yp)
+        if Xp.shape[0] != cfg.num_agents:
+            raise ValueError(
+                f"data for {Xp.shape[0]} agents vs config.num_agents="
+                f"{cfg.num_agents}; set FleetConfig(num_agents=...) to the "
+                f"fleet you partitioned")
+        if Xp.shape[-1] != cfg.input_dim:
+            raise ValueError(f"data input_dim {Xp.shape[-1]} vs config."
+                             f"input_dim={cfg.input_dim}")
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        lt0 = jnp.asarray(log_theta0) if log_theta0 is not None else pack(
+            list(cfg.theta0[:-2]), cfg.theta0[-2],
+            cfg.theta0[-1]).astype(Xp.dtype)
+
+        spec = get_trainer(cfg.trainer)
+        Xc = yc = Xa = ya = None
+        if self._needs_comm_data(train):
+            Xc, yc, Xa, ya = self._build_comm_data(Xp, yp, key)
+        if not train:
+            self.log_theta = lt0
+            self.thetas = jnp.broadcast_to(
+                lt0, (cfg.num_agents, lt0.shape[0]))
+            self.train_info = {}
+        else:
+            Xt, yt = (Xa, ya) if spec.needs_augmented_data else (Xp, yp)
+            self.log_theta, self.thetas, self.train_info = spec.run(
+                cfg, lt0, Xt, yt, self.A, mesh=self.mesh, grad_fn=grad_fn)
+        self._cache_factors(Xp, yp)
+        return self
+
+    def _cache_factors(self, Xp, yp):
+        """Factorize the trained fleet once (fit_experts / online windows)
+        and invalidate the engine."""
+        cfg, lt = self.config, self.log_theta
+        if cfg.online:
+            self._online_state = from_batch(lt, Xp, yp, window=cfg.window,
+                                            jitter=cfg.jitter)
+            self.fitted = self._online_state.to_fitted()
+        else:
+            self.fitted = jax.jit(partial(
+                fit_experts, jitter=cfg.jitter,
+                cache_cross=cfg.cache_cross))(lt, Xp, yp)
+        if get_method(cfg.method).needs_augmented_data:
+            Xc, yc, Xa, ya = self._comm_data
+            self.fitted_aug = jax.jit(fit_experts)(lt, Xa, ya)
+            self.fitted_comm = jax.jit(fit_experts)(lt, Xc[None], yc[None])
+        self._engine = None
+
+    # -- serving -------------------------------------------------------------
+
+    def _build_engine(self):
+        self._require_fitted("serving")
+        cfg = self.config
+        if cfg.sharded:
+            if self.mesh is None:
+                from ..launch.mesh import make_agent_mesh
+                self.mesh = make_agent_mesh(cfg.num_agents,
+                                            max_devices=cfg.max_shard_devices)
+            return ShardedEngine(self.fitted, self.mesh, chunk=cfg.chunk,
+                                 dac_iters=cfg.dac_iters, eta_nn=cfg.eta_nn,
+                                 consensus=cfg.consensus,
+                                 fitted_aug=self.fitted_aug,
+                                 fitted_comm=self.fitted_comm,
+                                 stream_mean=cfg.stream_mean)
+        return PredictionEngine(self.fitted, self.A, chunk=cfg.chunk,
+                                dac_iters=cfg.dac_iters,
+                                jor_iters=cfg.jor_iters,
+                                dale_iters=cfg.dale_iters,
+                                pm_iters=cfg.pm_iters, eta_nn=cfg.eta_nn,
+                                npae_jitter=cfg.npae_jitter,
+                                fitted_aug=self.fitted_aug,
+                                fitted_comm=self.fitted_comm,
+                                stream_mean=cfg.stream_mean)
+
+    def predict(self, Xs, method: str | None = None):
+        """Serve one query batch -> (mean (Nt,), var (Nt,), info).
+
+        `method` overrides config.method for this call (must satisfy the
+        same capability constraints); `cen_*` centralized references pass
+        through to the replicated engine.
+        """
+        self._require_fitted("predict")
+        cfg = self.config
+        method = method if method is not None else cfg.method
+        if not method.startswith("cen_"):
+            spec = get_method(method)
+            if cfg.sharded and not spec.shardable:
+                validate_config(cfg.replace(method=method))  # clear error
+            if spec.needs_augmented_data and self.fitted_aug is None:
+                raise ValueError(
+                    f"method {method!r} needs the grBCM augmented/"
+                    f"communication experts; fit with "
+                    f"FleetConfig(method={method!r}) so they are built")
+        else:
+            if cfg.sharded:
+                raise ValueError("centralized cen_* references serve on "
+                                 "the replicated engine only")
+            if "grbcm" in method and self.fitted_aug is None:
+                raise ValueError(
+                    f"method {method!r} needs the grBCM augmented/"
+                    f"communication experts; fit with a grbcm method "
+                    f"configured so they are built")
+        if cfg.routed and method.startswith("nn_"):
+            return self.engine.predict_routed(method, Xs)
+        return self.engine.predict(method, Xs)
+
+    def shard(self, mesh=None, *, routed: bool | None = None) -> "GPFleet":
+        """Move serving onto the agent-sharded engine (in place).
+
+        Validates method capability first; `routed` switches CBNN query
+        routing on/off at the same time. Returns self.
+        """
+        cfg = self.config.replace(
+            sharded=True,
+            routed=self.config.routed if routed is None else routed)
+        validate_config(cfg)
+        self.config = cfg
+        if mesh is not None:
+            self.mesh = mesh
+        self._engine = None
+        return self
+
+    def to_server(self, batch: int = 256, *, max_wait_ms: float = 2.0,
+                  method: str | None = None, queue_depth: int = 1024
+                  ) -> FrontDoor:
+        """The async micro-batching front door over this fleet: returns a
+        started `FrontDoor`; submit (Nq, D) requests, get Futures of
+        (mean, var). Use as a context manager to drain on exit."""
+        self._require_fitted("to_server")
+        return FrontDoor(lambda Xs: self.predict(Xs, method=method), batch,
+                         max_wait_ms=max_wait_ms, queue_depth=queue_depth)
+
+    # -- streaming / membership ----------------------------------------------
+
+    def _require_online(self, verb: str) -> OnlineExperts:
+        self._require_fitted(verb)
+        if self._online_state is None:
+            raise RuntimeError(
+                f"{verb} needs a streaming fleet — construct with "
+                f"FleetConfig(online=True) before fit()")
+        return self._online_state
+
+    def observe(self, xs, ys) -> "GPFleet":
+        """Ingest one observation per agent (xs (M, D), ys (M,)) through the
+        O(W^2) rank-1 factor updates and hot-swap the engine's served
+        factors — zero recompiles. Returns self."""
+        state = self._require_online("observe")
+        if self._ingest is None:
+            self._ingest = jax.jit(observe_fleet)
+        self._online_state = self._ingest(state, xs, ys)
+        self.fitted = self._online_state.to_fitted()
+        if self._engine is not None:
+            self._engine.swap_experts(self.fitted)
+        return self
+
+    def join(self, X_new=None, y_new=None, neighbors=None) -> "GPFleet":
+        """One agent joins the streaming fleet (window seeded from X_new /
+        y_new); consensus graph attached, engine re-traced on the new M."""
+        state = self._require_online("join")
+        if self.config.sharded:
+            raise ValueError("membership changes serve on the replicated "
+                             "engine (ShardedEngine shards are fixed at "
+                             "construction)")
+        self._online_state, self.A = join(state, self.A, X_new, y_new,
+                                          neighbors=neighbors)
+        self._after_membership_change()
+        return self
+
+    def leave(self, agent: int) -> "GPFleet":
+        """Agent `agent` leaves; former neighbors are re-chained so the
+        consensus graph stays connected."""
+        state = self._require_online("leave")
+        if self.config.sharded:
+            raise ValueError("membership changes serve on the replicated "
+                             "engine (ShardedEngine shards are fixed at "
+                             "construction)")
+        self._online_state, self.A = leave(state, self.A, agent)
+        self._after_membership_change()
+        return self
+
+    def _after_membership_change(self):
+        self.fitted = self._online_state.to_fitted()
+        self.config = self.config.replace(
+            num_agents=self._online_state.num_agents)
+        if self._engine is not None:
+            self._engine.rewire(self.A, fitted=self.fitted)
+
+    # -- persistence ---------------------------------------------------------
+
+    def _state_tree(self):
+        tree = {"A": self.A, "log_theta": self.log_theta,
+                "thetas": self.thetas, "fitted": self.fitted}
+        if self.fitted_aug is not None:
+            tree["fitted_aug"] = self.fitted_aug
+        if self.fitted_comm is not None:
+            tree["fitted_comm"] = self.fitted_comm
+        if self._online_state is not None:
+            tree["count"] = self._online_state.count
+            tree["jitter"] = self._online_state.jitter
+        return tree
+
+    def save(self, ckpt_dir: str, step: int = 0) -> str:
+        """Persist the fitted fleet: factors + config + consensus graph (+
+        online window state). A fresh process `GPFleet.load`s it and serves
+        bit-identical predictions WITHOUT refitting."""
+        self._require_fitted("save")
+        tree = self._state_tree()
+        path = save_checkpoint(ckpt_dir, step, tree)
+        # leaf shapes/dtypes live in checkpoint.io's manifest.json (written
+        # by save_checkpoint above); fleet.json adds only what io cannot
+        # know — the config and which optional components exist
+        manifest = {
+            "format": _FORMAT_VERSION,
+            "config": self.config.to_dict(),
+            "step": step,
+            "components": {
+                "fitted_aug": self.fitted_aug is not None,
+                "fitted_comm": self.fitted_comm is not None,
+                "fitted_kcross": self.fitted.Kcross is not None,
+                "aug_kcross": (self.fitted_aug is not None
+                               and self.fitted_aug.Kcross is not None),
+                "online": self._online_state is not None,
+            },
+        }
+        with open(os.path.join(ckpt_dir, _FLEET_MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True)
+        return path
+
+    @staticmethod
+    def _template(ckpt_dir: str, manifest) -> dict:
+        """ShapeDtypeStruct tree matching the saved state — what
+        checkpoint.io.restore validates the stored leaves against.
+
+        The tree STRUCTURE comes from fleet.json's component map; the leaf
+        shapes/dtypes come from checkpoint.io's manifest.json (the single
+        copy of the leaf specs, written by save_checkpoint)."""
+        comp = manifest["components"]
+        with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+            io_manifest = json.load(f)
+        if io_manifest.get("step") != manifest["step"]:
+            raise ValueError(
+                f"checkpoint manifests disagree: fleet.json is for step "
+                f"{manifest['step']} but manifest.json describes step "
+                f"{io_manifest.get('step')} (mixed checkpoint directory?)")
+
+        def fe(kcross):
+            return FittedExperts(0, 0, 0, 0, 0, Kcross=0 if kcross else None)
+
+        tree = {"A": 0, "log_theta": 0, "thetas": 0,
+                "fitted": fe(comp["fitted_kcross"])}
+        if comp["fitted_aug"]:
+            tree["fitted_aug"] = fe(comp["aug_kcross"])
+        if comp["fitted_comm"]:
+            tree["fitted_comm"] = fe(False)
+        if comp["online"]:
+            tree["count"] = 0
+            tree["jitter"] = 0
+        paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        specs = io_manifest["leaves"]
+        leaves = []
+        for kp, _ in paths:
+            key = jax.tree_util.keystr(kp)
+            if key not in specs:
+                raise ValueError(f"checkpoint manifest is missing leaf "
+                                 f"{key!r} (corrupted or truncated "
+                                 f"checkpoint?)")
+            leaves.append(jax.ShapeDtypeStruct(
+                tuple(specs[key]["shape"]), specs[key]["dtype"]))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    @classmethod
+    def load(cls, ckpt_dir: str, *, mesh=None, config: FleetConfig | None
+             = None) -> "GPFleet":
+        """Reconstruct a fitted fleet from `save()` output: no refitting,
+        served predictions are bit-identical to the saving process.
+
+        `config` overrides the persisted config (e.g. flip `sharded=True`
+        to serve a replicated-saved fleet on a mesh) — overrides are
+        validated against the registries like any other config.
+        """
+        mpath = os.path.join(ckpt_dir, _FLEET_MANIFEST)
+        if not os.path.exists(mpath):
+            raise FileNotFoundError(
+                f"{mpath!r} not found — not a GPFleet.save() checkpoint")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        if manifest.get("format", 0) > _FORMAT_VERSION:
+            raise ValueError(
+                f"fleet checkpoint format {manifest['format']} is newer "
+                f"than this code ({_FORMAT_VERSION})")
+        saved_cfg = FleetConfig.from_dict(manifest["config"])
+        cfg = config if config is not None else saved_cfg
+        tree = restore(ckpt_dir, cls._template(ckpt_dir, manifest),
+                       step=manifest["step"])
+        tree = jax.tree.map(jnp.asarray, tree)
+        fleet = cls(cfg, A=tree["A"], mesh=mesh)
+        fleet.log_theta = tree["log_theta"]
+        fleet.thetas = tree["thetas"]
+        fleet.train_info = {}
+        fleet.fitted = tree["fitted"]
+        fleet.fitted_aug = tree.get("fitted_aug")
+        fleet.fitted_comm = tree.get("fitted_comm")
+        if manifest["components"]["online"]:
+            f = fleet.fitted
+            fleet._online_state = OnlineExperts(
+                f.log_theta, f.Xp, f.yp, f.L, f.alpha, tree["count"],
+                tree["jitter"])
+        if (get_method(cfg.method).needs_augmented_data
+                and fleet.fitted_aug is None):
+            raise ValueError(
+                f"checkpoint has no augmented/communication experts but "
+                f"method {cfg.method!r} needs them; refit with the grbcm "
+                f"method configured")
+        return fleet

@@ -1,0 +1,303 @@
+"""String-keyed registries for the fleet lifecycle: trainers and methods.
+
+One table per axis of the paper:
+
+  TRAINERS — the 6 ADMM training loops of §4 (plus FACT-GP and the sharded
+  eq. 34 execution mode), each behind a UNIFORM adapter
+  `spec.run(cfg, log_theta0, Xp, yp, A, mesh=None, grad_fn=None)
+      -> (log_theta (K,), thetas (M, K), info)`
+  that forwards the FleetConfig's ADMM parameters to the legacy loop
+  unchanged (facade-trained theta is bitwise the legacy theta).
+
+  METHODS — the 13 decentralized prediction methods of §5 with per-entry
+  CAPABILITY flags:
+    shardable             servable by ShardedEngine (DAC family; the NPAE
+                          family needs strongly-complete exchange)
+    routable              servable by CBNN query routing (nn_* DAC methods)
+    online_safe           accepts `OnlineExperts.to_fitted()` hot-swaps
+                          (grbcm variants need separately refit augmented /
+                          communication experts the online path does not
+                          maintain)
+    needs_augmented_data  requires the grBCM communication dataset
+                          (fitted_aug + fitted_comm, paper eq. 16-17)
+  plus `spec.legacy(...)`, the original per-call free function, and
+  `spec.legacy_call(cfg, ...)`, a uniform adapter over its signature — so
+  engine dispatch, CLI choices, capability validation, and the equivalence
+  test suite all derive from THIS table instead of hard-coded lists.
+
+Registry completeness against the engines (`PredictionEngine.METHODS`,
+`ShardedEngine.METHODS`) is asserted by tests/test_fleet.py: a method added
+to an engine without a registry entry — or vice versa — fails the suite.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax.numpy as jnp
+
+from ..core.prediction import decentralized as dec
+from ..core.training import (train_apx_gp, train_c_gp, train_dec_apx_gp,
+                             train_dec_apx_gp_sharded, train_dec_c_gp,
+                             train_dec_gapx_gp, train_fact_gp, train_gapx_gp)
+
+# ---------------------------------------------------------------------------
+# Trainers
+# ---------------------------------------------------------------------------
+
+
+class TrainerSpec(NamedTuple):
+    """One registered training loop.
+
+    `run` is the uniform adapter (see module docstring); `needs_graph`
+    trainers consume the consensus adjacency, `needs_mesh` trainers run
+    under shard_map on a device mesh, `needs_augmented_data` trainers expect
+    (Xp, yp) to already be the augmented datasets D_{+i}.
+    """
+    name: str
+    run: Callable
+    paper: str
+    needs_graph: bool = False
+    needs_mesh: bool = False
+    needs_augmented_data: bool = False
+
+
+def _run_fact(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+    lt, vals = train_fact_gp(lt0, Xp, yp, steps=cfg.fact_steps,
+                             lr=cfg.fact_lr)
+    M = Xp.shape[0]
+    return lt, jnp.broadcast_to(lt, (M, lt.shape[0])), {"nll": vals}
+
+
+def _run_c(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+    z, thetas, hist = train_c_gp(lt0, Xp, yp, rho=cfg.rho,
+                                 iters=cfg.admm_iters,
+                                 nested_iters=cfg.nested_iters,
+                                 nested_lr=cfg.nested_lr, grad_fn=grad_fn)
+    return z, thetas, hist
+
+
+def _run_apx(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+    z, thetas, hist = train_apx_gp(lt0, Xp, yp, rho=cfg.rho,
+                                   L=cfg.lipschitz, iters=cfg.admm_iters,
+                                   grad_fn=grad_fn)
+    return z, thetas, hist
+
+
+def _run_gapx(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+    z, thetas, hist = train_gapx_gp(lt0, Xp, yp, rho=cfg.rho,
+                                    L=cfg.lipschitz, iters=cfg.admm_iters,
+                                    grad_fn=grad_fn)
+    return z, thetas, hist
+
+
+def _run_dec_c(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+    thetas, info = train_dec_c_gp(lt0, Xp, yp, A, rho=cfg.rho,
+                                  iters=cfg.admm_iters,
+                                  nested_iters=cfg.nested_iters,
+                                  nested_lr=cfg.nested_lr, grad_fn=grad_fn)
+    return jnp.mean(thetas, axis=0), thetas, info
+
+
+def _run_dec_apx(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+    thetas, info = train_dec_apx_gp(lt0, Xp, yp, A, rho=cfg.rho,
+                                    kappa=cfg.kappa, iters=cfg.admm_iters,
+                                    grad_fn=grad_fn)
+    return jnp.mean(thetas, axis=0), thetas, info
+
+
+def _run_dec_gapx(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+    thetas, info = train_dec_gapx_gp(lt0, Xp, yp, A, rho=cfg.rho,
+                                     kappa=cfg.kappa, iters=cfg.admm_iters,
+                                     grad_fn=grad_fn)
+    return jnp.mean(thetas, axis=0), thetas, info
+
+
+def _run_dec_apx_sharded(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+    M = Xp.shape[0]
+    if mesh is None:
+        from ..launch.mesh import make_agent_mesh
+        mesh = make_agent_mesh(M, max_devices=cfg.max_shard_devices)
+    ndev = int(mesh.shape["agents"])
+    if ndev != M:
+        raise ValueError(
+            f"trainer 'dec-apx-sharded' runs ONE agent per mesh member "
+            f"(cycle graph over the device ring) but the mesh has {ndev} "
+            f"device(s) for {M} agents; use trainer 'dec-apx' (simulated "
+            f"mode, any device count) or provide an {M}-device mesh")
+    thetas, p = train_dec_apx_gp_sharded(mesh, "agents", lt0, Xp, yp,
+                                         rho=cfg.rho, kappa=cfg.kappa,
+                                         iters=cfg.admm_iters,
+                                         grad_fn=grad_fn)
+    return jnp.mean(thetas, axis=0), thetas, {"p": p}
+
+
+TRAINERS: dict[str, TrainerSpec] = {s.name: s for s in (
+    TrainerSpec("fact", _run_fact, "§2.3.1 (FACT-GP baseline)"),
+    TrainerSpec("c", _run_c, "eq. 24"),
+    TrainerSpec("apx", _run_apx, "eq. 26"),
+    TrainerSpec("gapx", _run_gapx, "Alg. 1", needs_augmented_data=True),
+    TrainerSpec("dec-c", _run_dec_c, "eq. 30", needs_graph=True),
+    TrainerSpec("dec-apx", _run_dec_apx, "eq. 34 (Thm. 1)",
+                needs_graph=True),
+    TrainerSpec("dec-gapx", _run_dec_gapx, "Alg. 4", needs_graph=True,
+                needs_augmented_data=True),
+    TrainerSpec("dec-apx-sharded", _run_dec_apx_sharded,
+                "eq. 34 under shard_map (device-ring cycle graph)",
+                needs_mesh=True),
+)}
+
+
+def trainer_names() -> tuple[str, ...]:
+    return tuple(TRAINERS)
+
+
+def get_trainer(name: str) -> TrainerSpec:
+    spec = TRAINERS.get(name)
+    if spec is None:
+        raise KeyError(f"unknown trainer {name!r}; registered trainers: "
+                       f"{sorted(TRAINERS)}")
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Prediction methods
+# ---------------------------------------------------------------------------
+
+
+class MethodSpec(NamedTuple):
+    """One registered prediction method (see module docstring for flags).
+
+    `legacy` is the original per-call free function (reference semantics);
+    `legacy_call(cfg, log_theta, Xp, yp, Xs, A, Xc, yc, Xa, ya)` invokes it
+    with the FleetConfig's consensus parameters — the uniform signature the
+    equivalence tests and `--compare-uncached` use.
+    """
+    name: str
+    paper: str
+    family: str                       # "dac" | "npae"
+    legacy: Callable
+    legacy_call: Callable
+    shardable: bool = False
+    routable: bool = False
+    online_safe: bool = True
+    needs_augmented_data: bool = False
+
+
+def _call_dac(fn):
+    def call(cfg, lt, Xp, yp, Xs, A, Xc=None, yc=None, Xa=None, ya=None):
+        return fn(lt, Xp, yp, Xs, A, iters=cfg.dac_iters)
+    return call
+
+
+def _call_grbcm(cfg, lt, Xp, yp, Xs, A, Xc=None, yc=None, Xa=None, ya=None):
+    return dec.dec_grbcm(lt, Xa, ya, Xc, yc, Xs, A, iters=cfg.dac_iters)
+
+
+def _call_npae(cfg, lt, Xp, yp, Xs, A, Xc=None, yc=None, Xa=None, ya=None):
+    return dec.dec_npae(lt, Xp, yp, Xs, A, jor_iters=cfg.jor_iters,
+                        dac_iters=cfg.dac_iters, jitter=cfg.npae_jitter)
+
+
+def _call_npae_star(cfg, lt, Xp, yp, Xs, A, Xc=None, yc=None, Xa=None,
+                    ya=None):
+    return dec.dec_npae_star(lt, Xp, yp, Xs, A, jor_iters=cfg.jor_iters,
+                             dac_iters=cfg.dac_iters, pm_iters=cfg.pm_iters,
+                             jitter=cfg.npae_jitter)
+
+
+def _call_nn(fn):
+    def call(cfg, lt, Xp, yp, Xs, A, Xc=None, yc=None, Xa=None, ya=None):
+        return fn(lt, Xp, yp, Xs, A, cfg.eta_nn, iters=cfg.dac_iters)
+    return call
+
+
+def _call_nn_grbcm(cfg, lt, Xp, yp, Xs, A, Xc=None, yc=None, Xa=None,
+                   ya=None):
+    return dec.dec_nn_grbcm(lt, Xa, ya, Xc, yc, Xs, A, cfg.eta_nn,
+                            iters=cfg.dac_iters, Xp=Xp)
+
+
+def _call_nn_npae(cfg, lt, Xp, yp, Xs, A, Xc=None, yc=None, Xa=None,
+                  ya=None):
+    return dec.dec_nn_npae(lt, Xp, yp, Xs, A, cfg.eta_nn,
+                           dale_iters=cfg.dale_iters,
+                           jitter=cfg.npae_jitter)
+
+
+METHODS: dict[str, MethodSpec] = {s.name: s for s in (
+    MethodSpec("poe", "Alg. 5, eq. 12-13", "dac", dec.dec_poe,
+               _call_dac(dec.dec_poe), shardable=True),
+    MethodSpec("gpoe", "Alg. 6, eq. 12-13", "dac", dec.dec_gpoe,
+               _call_dac(dec.dec_gpoe), shardable=True),
+    MethodSpec("bcm", "Alg. 7, eq. 14-15", "dac", dec.dec_bcm,
+               _call_dac(dec.dec_bcm), shardable=True),
+    MethodSpec("rbcm", "Alg. 8, eq. 14-15", "dac", dec.dec_rbcm,
+               _call_dac(dec.dec_rbcm), shardable=True),
+    MethodSpec("grbcm", "Alg. 9, eq. 16-17", "dac", dec.dec_grbcm,
+               _call_grbcm, shardable=True, online_safe=False,
+               needs_augmented_data=True),
+    MethodSpec("npae", "Alg. 10, eq. 18-21", "npae", dec.dec_npae,
+               _call_npae),
+    MethodSpec("npae_star", "Alg. 11-12 (PM omega*)", "npae",
+               dec.dec_npae_star, _call_npae_star),
+    MethodSpec("nn_poe", "Alg. 13, eq. 39", "dac", dec.dec_nn_poe,
+               _call_nn(dec.dec_nn_poe), shardable=True, routable=True),
+    MethodSpec("nn_gpoe", "Alg. 14, eq. 39", "dac", dec.dec_nn_gpoe,
+               _call_nn(dec.dec_nn_gpoe), shardable=True, routable=True),
+    MethodSpec("nn_bcm", "Alg. 15, eq. 39", "dac", dec.dec_nn_bcm,
+               _call_nn(dec.dec_nn_bcm), shardable=True, routable=True),
+    MethodSpec("nn_rbcm", "Alg. 16, eq. 39", "dac", dec.dec_nn_rbcm,
+               _call_nn(dec.dec_nn_rbcm), shardable=True, routable=True),
+    MethodSpec("nn_grbcm", "Alg. 17, eq. 39", "dac", dec.dec_nn_grbcm,
+               _call_nn_grbcm, shardable=True, routable=True,
+               online_safe=False, needs_augmented_data=True),
+    MethodSpec("nn_npae", "Alg. 18, eq. 39", "npae", dec.dec_nn_npae,
+               _call_nn_npae),
+)}
+
+
+def method_names() -> tuple[str, ...]:
+    return tuple(METHODS)
+
+
+def get_method(name: str) -> MethodSpec:
+    spec = METHODS.get(name)
+    if spec is None:
+        raise KeyError(f"unknown prediction method {name!r}; registered "
+                       f"methods: {sorted(METHODS)}")
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Capability validation (GPFleet construction and the serve_gp CLI)
+# ---------------------------------------------------------------------------
+
+
+def validate_config(cfg) -> None:
+    """Reject capability-invalid FleetConfig combinations with a clear
+    error (instead of the shape crash / silent drift they used to cause)."""
+    get_trainer(cfg.trainer)
+    spec = get_method(cfg.method)
+    if cfg.routed and not cfg.sharded:
+        raise ValueError("routed serving runs on the sharded fleet; set "
+                         "sharded=True (or drop routed)")
+    if cfg.sharded and not spec.shardable:
+        shardable = sorted(n for n, s in METHODS.items() if s.shardable)
+        raise ValueError(
+            f"method {cfg.method!r} ({spec.family} family) is not servable "
+            f"on the agent-sharded engine — the NPAE family needs strongly-"
+            f"complete exchange and stays replicated. Shardable methods: "
+            f"{shardable}")
+    if cfg.routed and not spec.routable:
+        routable = sorted(n for n, s in METHODS.items() if s.routable)
+        raise ValueError(
+            f"method {cfg.method!r} is not servable by CBNN query routing; "
+            f"routable methods: {routable}")
+    if cfg.online and not spec.online_safe:
+        raise ValueError(
+            f"method {cfg.method!r} is not online-safe: the streaming path "
+            f"maintains base experts only, and grbcm variants need "
+            f"separately refit augmented/communication experts")
+    if cfg.sharded and cfg.cache_cross:
+        raise ValueError("the NPAE cross-Gram cache (cache_cross=True) has "
+                         "no agent-sharded layout; drop one of the two")

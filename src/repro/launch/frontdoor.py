@@ -25,7 +25,8 @@ routed CBNN path composes by passing `ShardedEngine.predict_routed` as
 
 This is an in-process front door (the paper's multi-robot deployments and
 our benchmarks drive it directly); an RPC server would own a FrontDoor and
-call submit per connection.
+call submit per connection. `GPFleet.to_server()` is the one-line way to
+put a fitted fleet behind one.
 """
 from __future__ import annotations
 

@@ -1,82 +1,79 @@
-"""GP serving launcher: fit the fleet once, cache factors, then serve
-prediction requests through the jit-cached engines — replicated
-(`PredictionEngine`), agent-sharded across devices (`ShardedEngine`,
-`--sharded`), or CBNN-routed subsets of the sharded fleet (`--routed`).
+"""GP serving launcher — a thin CLI overlay on `repro.fleet.GPFleet`.
+
+Flags fill in a `FleetConfig`; the facade owns the lifecycle (train ->
+factor-cache -> engine -> serve). `--method` / `--trainer` choices and the
+capability checks derive from the fleet registries, so the CLI cannot
+drift from what the engines actually support — an invalid combination
+(e.g. `--sharded` with an NPAE-family method) is rejected with the
+registry's explanation instead of a shape crash.
 
   PYTHONPATH=src python -m repro.launch.serve_gp --agents 8 --per-agent 128 \
       --method rbcm --requests 64 --batch 256 --chunk 128
 
-Serving front door (the engine layer each path uses is in parentheses):
+Serving modes (the engine layer each path uses is in parentheses):
 
   default         ragged requests are coalesced host-side, micro-batched to
                   a FIXED batch shape (one compiled program — zero
                   recompiles after warmup), pushed through
-                  `PredictionEngine.predict` (the `*_cached` /
-                  `*_from_moments` serving stack), and de-batched back into
-                  per-request answers.
-  --sharded       same front door, but the fleet is sharded over the agent
-                  axis of a local device mesh (`launch.mesh.make_agent_mesh`
-                  + `core.prediction.ShardedEngine`): per-agent moments run
-                  shard-locally, cross-agent sums ride the device-ring
+                  `GPFleet.predict` (PredictionEngine), and de-batched back
+                  into per-request answers.
+  --sharded       the fleet sharded over the agent axis of a local device
+                  mesh (ShardedEngine): per-agent moments run shard-
+                  locally, cross-agent sums ride the device-ring
                   collectives (paper eq. 35 on the ICI ring).
   --routed        CBNN query routing on the sharded fleet (nn_* methods,
-                  paper §5.2 eq. 39): each micro-batch is routed so every
-                  query is served by the single shard holding its
-                  most-correlated experts — the "subset of agents perform
-                  predictions" serving mode.
-  --async-door    replaces the synchronous loop with the
-                  `launch.frontdoor.FrontDoor` collector thread: requests
-                  are SUBMITTED as they arrive and resolved through
-                  futures, with micro-batches cut by size or by the
-                  --max-wait-ms latency bound.
+                  paper §5.2 eq. 39): each query served by the shard
+                  holding its most-correlated experts.
+  --async-door    serve through `GPFleet.to_server` (the FrontDoor
+                  collector thread): requests are SUBMITTED as they arrive
+                  and resolved through futures, micro-batches cut by size
+                  or the --max-wait-ms latency bound.
+  --online        the streaming front door: between prediction micro-
+                  batches every agent ingests --observe-every fresh
+                  observations through `GPFleet.observe` (incremental
+                  O(W^2) rank-1 factor updates, zero-recompile hot swaps).
 
-`--compare-uncached` also times the per-call path (re-factorizing every
-agent's kernel matrix per request — the pre-engine behaviour) on the same
-micro-batches and reports the speedup.
+Fitted-fleet persistence:
 
-`--online` switches to the streaming front door: the fleet keeps OBSERVING
-while it serves. Between prediction micro-batches every agent ingests
-`--observe-every` fresh observations through the incremental O(W^2)
-rank-1 factor updates (core.online), and the engine hot-swaps the new
-factors with `swap_experts` — the compiled prediction programs are reused
-across swaps (zero recompiles after warmup, asserted at exit).
+  --save-fleet DIR        after fitting, `GPFleet.save` the factors +
+                          config + consensus graph to DIR
+  --from-checkpoint DIR   skip building/fitting entirely: `GPFleet.load`
+                          DIR and serve it — a fresh process serves
+                          bit-identical predictions without refitting
+
+`--compare-uncached` also times the legacy per-call path (re-factorizing
+every agent's kernel matrix per request — the registry's `legacy_call`
+reference for the served method) on the same micro-batches and reports
+the engine speedup.
 """
 from __future__ import annotations
 
 import argparse
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.consensus import path_graph
-from ..core.gp import augment, communication_dataset, pack, stripe_partition
-from ..core.online import from_batch, observe_fleet
-from ..core.prediction import (PredictionEngine, ShardedEngine, fit_experts,
-                               dec_poe, dec_gpoe, dec_bcm, dec_rbcm)
-from ..core.training import train_dec_apx_gp
-from ..data import random_inputs, gp_sample_field
-from .frontdoor import FrontDoor
-from .mesh import make_agent_mesh
+from ..core.gp import pack, stripe_partition
+from ..core.prediction import PredictionEngine
+from ..data import gp_sample_field, random_inputs
+from ..fleet import (FleetConfig, GPFleet, get_method, method_names,
+                     trainer_names, validate_config)
 
-_LEGACY = {"poe": dec_poe, "gpoe": dec_gpoe, "bcm": dec_bcm, "rbcm": dec_rbcm}
+# centralized references (engine-only, not fleet methods) stay servable on
+# the replicated path; everything else comes from the registry
+_CEN_METHODS = tuple(m for m in PredictionEngine.METHODS
+                     if m.startswith("cen_"))
+_TRUE_THETA = ([1.2, 0.3], 1.3, 0.1)
 
 
-def build_fleet(key, M: int, per_agent: int, train_iters: int):
-    """Synthetic fleet: sample a GP field, stripe-partition, (optionally)
-    train hyperparameters with the paper's DEC-apx-GP."""
-    lt_true = pack([1.2, 0.3], 1.3, 0.1)
+def build_data(key, M: int, per_agent: int):
+    """Synthetic fleet data: sample a GP field, stripe-partition."""
+    lt_true = pack(*_TRUE_THETA)
     X = random_inputs(key, M * per_agent)
     _, y = gp_sample_field(jax.random.fold_in(key, 1), X, lt_true)
-    Xp, yp = stripe_partition(X, y, M)
-    lt = lt_true
-    if train_iters:
-        thetas, _ = train_dec_apx_gp(lt_true, Xp, yp, path_graph(M),
-                                     iters=train_iters)
-        lt = jnp.mean(thetas, axis=0)
-    return lt, Xp, yp
+    return stripe_partition(X, y, M)
 
 
 def request_stream(key, n_requests: int, max_size: int):
@@ -101,19 +98,15 @@ def micro_batches(requests, batch: int):
     return allq.reshape(-1, batch, allq.shape[1]), total, slices
 
 
-def serve_online(args, lt, Xp, yp, eng, batches, total):
+def serve_online(args, fleet: GPFleet, method, batches, total):
     """Interleaved observe/predict loop: the live-fleet serving front door.
 
-    Observation events ride the incremental O(W^2) rank-1 updates
-    (core.online.observe_fleet, one jit program); prediction micro-batches
-    ride the engine's per-method jit cache. `swap_experts` bridges the two
-    WITHOUT recompiling — the factors are a traced argument of the
-    compiled predict, so swapping state costs nothing but the dispatch.
-    """
-    M = Xp.shape[0]
-    state = from_batch(lt, Xp, yp)
-    eng.swap_experts(state.to_fitted())
-    ingest = jax.jit(observe_fleet)
+    Observation events ride `GPFleet.observe` (incremental O(W^2) rank-1
+    updates, one jit program); prediction micro-batches ride the engine's
+    per-method jit cache. The factor hot-swap between the two costs nothing
+    but the dispatch — compiled programs are reused across swaps (asserted
+    at exit)."""
+    M = fleet.num_agents
     stream_key = jax.random.PRNGKey(42)
 
     def fresh(k):
@@ -121,11 +114,15 @@ def serve_online(args, lt, Xp, yp, eng, batches, total):
         ys = jax.random.normal(jax.random.fold_in(k, 1), (M,), xs.dtype)
         return xs, ys
 
-    # warmup compiles the TWO programs the whole stream reuses
+    # warmup compiles the TWO programs the whole stream reuses; the ingest
+    # warmup is rolled back so serving starts from the fitted/restored
+    # windows exactly (the compiled program stays cached on the fleet)
     xs, ys = fresh(stream_key)
-    jax.block_until_ready(ingest(state, xs, ys).L)
-    jax.block_until_ready(eng.predict(args.method, batches[0])[0])
-    compiled = dict(eng._compiled)
+    state0, fitted0 = fleet._online_state, fleet.fitted
+    fleet.observe(xs, ys)
+    fleet._online_state, fleet.fitted = state0, fitted0
+    jax.block_until_ready(fleet.predict(batches[0], method=method)[0])
+    compiled = dict(fleet.engine._compiled)
 
     n_obs = 0
     t0 = time.time()
@@ -133,44 +130,99 @@ def serve_online(args, lt, Xp, yp, eng, batches, total):
     for i, b in enumerate(batches):
         for j in range(args.observe_every):
             stream_key = jax.random.fold_in(stream_key, i * 131 + j)
-            xs, ys = fresh(stream_key)
-            state = ingest(state, xs, ys)
+            fleet.observe(*fresh(stream_key))
             n_obs += M
-        eng.swap_experts(state.to_fitted())
-        m, v, _ = eng.predict(args.method, b)
+        m, v, _ = fleet.predict(b, method=method)
         means.append(m)
     jax.block_until_ready(means[-1])
     dt = time.time() - t0
-    assert all(eng._compiled[k] is compiled[k] for k in compiled), \
+    assert all(fleet.engine._compiled[k] is compiled[k] for k in compiled), \
         "hot swap recompiled a prediction program"
-    print(f"online {args.method}: served {total} queries + ingested "
+    W = fleet.fitted.Xp.shape[1]
+    print(f"online {method}: served {total} queries + ingested "
           f"{n_obs} observations in {dt*1e3:.1f} ms "
-          f"({total/dt:.0f} q/s, {n_obs/dt:.0f} obs/s, window={Xp.shape[1]}, "
+          f"({total/dt:.0f} q/s, {n_obs/dt:.0f} obs/s, window={W}, "
           f"0 recompiles after warmup)")
 
 
-def serve_async(args, predict, requests):
-    """Serve the request stream through the FrontDoor collector thread.
-
-    Requests are submitted as fast as clients produce them and resolved via
-    futures; the collector cuts fixed-shape micro-batches by size or by the
-    --max-wait-ms latency bound, so the engine's jit cache still sees one
-    compiled program. Warmup happens on the first dispatched batch.
-    """
+def serve_async(args, fleet: GPFleet, method, requests):
+    """Serve the request stream through `GPFleet.to_server` (the FrontDoor
+    collector thread): submitted as fast as clients produce them, resolved
+    via futures, micro-batches cut by size or the --max-wait-ms bound."""
     t0 = time.time()
-    with FrontDoor(predict, args.batch,
-                   max_wait_ms=args.max_wait_ms) as door:
+    with fleet.to_server(args.batch, max_wait_ms=args.max_wait_ms,
+                         method=method) as door:
         futures = [door.submit(r) for r in requests]
         answers = [f.result() for f in futures]
     dt = time.time() - t0
     st = door.stats
     assert all(a[0].shape[0] == r.shape[0]
                for a, r in zip(answers, requests))
-    print(f"async {args.method}: {st.requests} requests / {st.queries} "
+    print(f"async {method}: {st.requests} requests / {st.queries} "
           f"queries in {dt*1e3:.1f} ms ({st.queries/dt:.0f} q/s end-to-end, "
           f"{st.batches} micro-batches of {args.batch}, "
           f"padding {100*st.padding_fraction:.1f}%, "
           f"engine busy {st.engine_seconds*1e3:.1f} ms)")
+
+
+def compare_uncached(args, fleet: GPFleet, method, batches, total, dt):
+    """Time the legacy per-call path (registry `legacy_call`: refactorizes
+    every agent's kernel per request) on the same micro-batches."""
+    spec = get_method(method)
+    cfg = fleet.config
+    lt, f = fleet.log_theta, fleet.fitted
+    Xc = yc = Xa = ya = None
+    if fleet._comm_data is not None:
+        Xc, yc, Xa, ya = fleet._comm_data
+    elif spec.needs_augmented_data:
+        # checkpoints persist the fitted experts, not the raw communication
+        # datasets the per-call reference signature wants
+        print(f"--compare-uncached: skipped for {method} (the legacy "
+              f"per-call path needs the raw communication datasets, which "
+              f"a loaded checkpoint does not carry)")
+        return
+    fn = jax.jit(lambda Xq: spec.legacy_call(cfg, lt, f.Xp, f.yp, Xq,
+                                             fleet.A, Xc, yc, Xa, ya)[:2])
+    jax.block_until_ready(fn(batches[0]))
+    t0 = time.time()
+    for b in batches:
+        out = fn(b)
+    jax.block_until_ready(out)
+    dt_un = time.time() - t0
+    print(f"uncached per-call path: {total/dt_un:.0f} q/s "
+          f"-> engine speedup {dt_un/dt:.2f}x")
+
+
+def build_config(args, ap) -> FleetConfig:
+    """CLI flags -> FleetConfig (the validated, serializable description
+    the facade consumes). Invalid combos fail here with registry errors."""
+    method = args.method if args.method is not None else "rbcm"
+    if method.startswith("cen_"):
+        # centralized references ride the replicated engine; the config
+        # keeps the DECENTRALIZED counterpart so validation/persistence
+        # stay uniform AND the facade builds the same experts (cen_grbcm
+        # needs the augmented/communication experts like grbcm does)
+        base = method[4:]
+        method = base if base in method_names() else "rbcm"
+    try:
+        cfg = FleetConfig(
+            num_agents=args.agents,
+            trainer=args.trainer,
+            admm_iters=args.train_iters or FleetConfig.admm_iters,
+            fact_steps=args.train_iters or FleetConfig.fact_steps,
+            method=method,
+            chunk=args.chunk,
+            dac_iters=args.dac_iters,
+            eta_nn=args.eta_nn,
+            stream_mean=not args.no_stream,
+            sharded=args.sharded,
+            routed=args.routed,
+            online=args.online,
+        )
+        validate_config(cfg)
+        return cfg
+    except (ValueError, KeyError) as e:
+        ap.error(str(e))
 
 
 def main(argv=None):
@@ -179,8 +231,13 @@ def main(argv=None):
     ap.add_argument("--per-agent", type=int, default=256,
                     help="Ni; factor caching pays off as Ni grows (O(Ni^3) "
                          "refactorization per request on the uncached path)")
-    ap.add_argument("--method", default="rbcm",
-                    choices=sorted(PredictionEngine.METHODS))
+    ap.add_argument("--method", default=None,
+                    choices=sorted(method_names()) + sorted(_CEN_METHODS),
+                    help="prediction method (fleet registry name; default "
+                         "rbcm, or the saved config with --from-checkpoint)")
+    ap.add_argument("--trainer", default="dec-apx",
+                    choices=sorted(trainer_names()),
+                    help="training loop (fleet registry name)")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--batch", type=int, default=256,
                     help="micro-batch size (fixed compiled shape)")
@@ -188,17 +245,15 @@ def main(argv=None):
                     help="engine query-tile size")
     ap.add_argument("--dac-iters", type=int, default=100)
     ap.add_argument("--train-iters", type=int, default=0,
-                    help="DEC-apx-GP rounds (0 = use true hyperparameters)")
+                    help="training rounds (0 = use true hyperparameters)")
     ap.add_argument("--no-stream", action="store_true",
                     help="disable the streaming rbf_matvec mean path")
     ap.add_argument("--sharded", action="store_true",
                     help="shard the fleet over the agent axis of a local "
                          "device mesh (ShardedEngine; DAC-family methods)")
     ap.add_argument("--routed", action="store_true",
-                    help="CBNN query routing on the sharded fleet: serve "
-                         "each query from the shard holding its most-"
-                         "correlated experts (nn_* methods; implies "
-                         "--sharded)")
+                    help="CBNN query routing on the sharded fleet (nn_* "
+                         "methods; implies --sharded)")
     ap.add_argument("--eta-nn", type=float, default=0.1,
                     help="CBNN participation threshold (paper eq. 39)")
     ap.add_argument("--async-door", action="store_true",
@@ -210,101 +265,123 @@ def main(argv=None):
                          "request waits for its micro-batch to fill")
     ap.add_argument("--compare-uncached", action="store_true")
     ap.add_argument("--online", action="store_true",
-                    help="interleave observe and predict streams: sliding-"
+                    help="interleave observe and predict streams (sliding-"
                          "window experts, incremental factor updates, "
-                         "hot-swapped into the engine between micro-batches")
+                         "hot-swapped between micro-batches)")
     ap.add_argument("--observe-every", type=int, default=4,
                     help="fleet-wide observations ingested between "
                          "prediction micro-batches (online mode)")
+    ap.add_argument("--save-fleet", default=None, metavar="DIR",
+                    help="after fitting, persist the fleet (factors + "
+                         "config + graph) with GPFleet.save")
+    ap.add_argument("--from-checkpoint", default=None, metavar="DIR",
+                    help="GPFleet.load a saved fleet and serve it without "
+                         "refitting (build/train flags are ignored; "
+                         "--sharded/--routed deployment overrides are "
+                         "honored)")
     args = ap.parse_args(argv)
-    if args.online and "grbcm" in args.method:
-        ap.error("--online maintains base experts only; grbcm variants "
-                 "need separately refit augmented/communication experts")
     if args.routed:
         args.sharded = True
-        if not args.method.startswith("nn_"):
-            ap.error("--routed serves the CBNN nn_* methods")
-    if args.sharded and args.method not in ShardedEngine.METHODS:
-        ap.error(f"--sharded serves the DAC family {ShardedEngine.METHODS}; "
-                 "NPAE-family methods stay on the replicated engine")
 
-    M = args.agents
     key = jax.random.PRNGKey(0)
-    lt, Xp, yp = build_fleet(key, M, args.per_agent, args.train_iters)
-    A = path_graph(M)
-
     t0 = time.time()
-    fitted = jax.jit(fit_experts)(lt, Xp, yp)
-    fitted_aug = fitted_comm = None
-    if "grbcm" in args.method:
-        # grBCM aggregates AUGMENTED experts against the communication expert
-        Xc, yc = communication_dataset(jax.random.fold_in(key, 2), Xp, yp)
-        Xa, ya = augment(Xp, yp, Xc, yc)
-        fitted_aug = jax.jit(fit_experts)(lt, Xa, ya)
-        fitted_comm = jax.jit(fit_experts)(lt, Xc[None], yc[None])
-    jax.block_until_ready(fitted.L)
-    t_fit = time.time() - t0
-    if args.sharded:
-        mesh = make_agent_mesh(M)
-        eng = ShardedEngine(fitted, mesh, chunk=args.chunk,
-                            dac_iters=args.dac_iters, eta_nn=args.eta_nn,
-                            fitted_aug=fitted_aug, fitted_comm=fitted_comm,
-                            stream_mean=not args.no_stream)
-        mode = (f"sharded over {eng.ndev} device(s)"
-                + (", CBNN-routed" if args.routed else ""))
+    if args.from_checkpoint:
+        fleet = GPFleet.load(args.from_checkpoint)
+        method = args.method or fleet.config.method
+        if args.online and not fleet.config.online:
+            ap.error("--online: this checkpoint was not saved from an "
+                     "online fleet (no window state to resume); refit "
+                     "with --online --save-fleet")
+        # a --method override is FOLDED INTO the config before any
+        # deployment override, so shard()/routing validate against the
+        # method actually being served — same registry validation as the
+        # build path, clear errors, never a traceback mid-serving
+        if method.startswith("cen_"):
+            if fleet.config.sharded or args.sharded or args.routed:
+                ap.error("centralized cen_* references serve on the "
+                         "replicated engine only")
+        else:
+            try:
+                fleet.config = fleet.config.replace(method=method)
+                validate_config(fleet.config)
+            except ValueError as e:
+                ap.error(str(e))
+        if args.sharded or args.routed:
+            # deployment overrides are honored, not silently dropped
+            try:
+                fleet.shard(routed=args.routed or None)
+            except ValueError as e:
+                ap.error(str(e))
+        if "grbcm" in method and fleet.fitted_aug is None:
+            ap.error(f"checkpoint carries no augmented/communication "
+                     f"experts for {method}; save the fleet with a "
+                     f"grbcm method configured")
+        if args.save_fleet:
+            print(f"fleet re-saved -> {fleet.save(args.save_fleet)}")
+        M = fleet.num_agents
+        per_agent = fleet.fitted.Xp.shape[1]
+        built = f"loaded from {args.from_checkpoint} (no refit)"
     else:
-        eng = PredictionEngine(fitted, A, chunk=args.chunk,
-                               dac_iters=args.dac_iters, eta_nn=args.eta_nn,
-                               fitted_aug=fitted_aug,
-                               fitted_comm=fitted_comm,
-                               stream_mean=not args.no_stream)
+        cfg = build_config(args, ap)
+        method = args.method or cfg.method
+        if method.startswith("cen_") and (args.sharded or args.online):
+            ap.error("centralized cen_* references serve on the "
+                     "replicated engine only")
+        M, per_agent = args.agents, args.per_agent
+        Xp, yp = build_data(key, M, per_agent)
+        fleet = GPFleet(cfg)
+        # the synthetic-fleet launcher always starts from the TRUE
+        # (data-generating) theta: --train-iters 0 serves it directly,
+        # --train-iters N runs ADMM initialized there (the pre-facade
+        # build_fleet behavior, kept so benchmark numbers are comparable)
+        fleet.fit(Xp, yp, key=jax.random.fold_in(key, 2),
+                  log_theta0=pack(*_TRUE_THETA),
+                  train=bool(args.train_iters))
+        built = f"fitted in {(time.time()-t0)*1e3:.1f} ms"
+        if args.save_fleet:
+            path = fleet.save(args.save_fleet)
+            print(f"fleet saved -> {path}")
+    if fleet.config.sharded:
+        mode = (f"sharded over {fleet.engine.ndev} device(s)"
+                + (", CBNN-routed" if fleet.config.routed else ""))
+    else:
         mode = "replicated"
 
     requests = request_stream(key, args.requests, args.batch)
     batches, total, slices = micro_batches(requests, args.batch)
-    print(f"fleet: M={M} agents x Ni={args.per_agent} points ({mode}); "
-          f"factors cached in {t_fit*1e3:.1f} ms")
+    print(f"fleet: M={M} agents x Ni={per_agent} points ({mode}); {built}")
     print(f"queue: {args.requests} requests, {total} queries "
           f"-> {batches.shape[0]} micro-batches of {args.batch}")
 
+    # mode follows the CLI flag: an online checkpoint loaded WITHOUT
+    # --online batch-serves its restored factors untouched (the streaming
+    # loop ingests synthetic observations, mutating the windows)
     if args.online:
-        serve_online(args, lt, Xp, yp, eng, batches, total)
+        serve_online(args, fleet, method, batches, total)
         return
 
-    predict = (partial(eng.predict_routed, args.method) if args.routed
-               else partial(eng.predict, args.method))
     if args.async_door:
-        serve_async(args, predict, requests)
+        serve_async(args, fleet, method, requests)
         return
 
     # warmup compiles the one program all micro-batches reuse
-    jax.block_until_ready(predict(batches[0])[0])
+    jax.block_until_ready(fleet.predict(batches[0], method=method)[0])
     t0 = time.time()
     means = []
     for b in batches:
-        m, v, _ = predict(b)
+        m, v, _ = fleet.predict(b, method=method)
         means.append(m)
     jax.block_until_ready(means[-1])
     dt = time.time() - t0
     flat = jnp.concatenate(means)
     answers = [flat[a:b] for a, b in slices]       # de-batched per request
-    print(f"{args.method}: served {total} queries in {dt*1e3:.1f} ms "
+    print(f"{method}: served {total} queries in {dt*1e3:.1f} ms "
           f"({total/dt:.0f} q/s, {len(batches)/dt:.1f} batches/s, "
-          f"stream_mean={not args.no_stream}); "
+          f"stream_mean={fleet.config.stream_mean}); "
           f"last request -> {answers[-1].shape[0]} predictions")
 
-    if args.compare_uncached and args.method in _LEGACY:
-        legacy = _LEGACY[args.method]
-        fn = jax.jit(lambda Xq: legacy(lt, Xp, yp, Xq, A,
-                                       iters=args.dac_iters)[:2])
-        jax.block_until_ready(fn(batches[0]))
-        t0 = time.time()
-        for b in batches:
-            out = fn(b)
-        jax.block_until_ready(out)
-        dt_un = time.time() - t0
-        print(f"uncached per-call path: {total/dt_un:.0f} q/s "
-              f"-> engine speedup {dt_un/dt:.2f}x")
+    if args.compare_uncached and not method.startswith("cen_"):
+        compare_uncached(args, fleet, method, batches, total, dt)
 
 
 if __name__ == "__main__":

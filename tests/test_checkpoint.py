@@ -1,0 +1,115 @@
+"""checkpoint.io: save -> restore round trip and loud validation failures.
+
+The manifest stores `str(treedef)`, which cannot reconstruct a pytree — the
+caller supplies a template and `restore` must guarantee the stored leaves
+actually match it (names, shapes, dtypes), instead of the bare KeyError /
+silent shape drift of the unvalidated `load_checkpoint` path.
+"""
+import json
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, load_checkpoint, restore,
+                              save_checkpoint)
+
+
+class Pair(NamedTuple):
+    a: jax.Array
+    b: jax.Array
+    opt: jax.Array | None = None
+
+
+def _tree():
+    return {"w": jnp.arange(6.0).reshape(2, 3),
+            "pair": Pair(jnp.ones((4,)), jnp.zeros((2, 2), jnp.float32)),
+            "n": jnp.asarray(3, jnp.int32)}
+
+
+def _template(tree):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                        tree)
+
+
+def test_roundtrip_bit_identical(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 7, tree)
+    out = restore(str(tmp_path), _template(tree), step=7)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert got.dtype == want.dtype
+
+
+def test_restore_defaults_to_latest_step(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros(2)})
+    save_checkpoint(str(tmp_path), 5, {"x": jnp.ones(2)})
+    assert latest_step(str(tmp_path)) == 5
+    out = restore(str(tmp_path), {"x": jax.ShapeDtypeStruct((2,),
+                                                            jnp.zeros(2).dtype)})
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.ones(2))
+
+
+def test_restore_missing_dir_and_step(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore(str(tmp_path / "nope"), {"x": jnp.zeros(2)})
+    save_checkpoint(str(tmp_path), 0, {"x": jnp.zeros(2)})
+    with pytest.raises(FileNotFoundError):
+        restore(str(tmp_path), {"x": jnp.zeros(2)}, step=3)
+
+
+def test_restore_rejects_missing_leaf(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 0, tree)
+    bigger = dict(tree, extra=jnp.zeros(3))
+    with pytest.raises(ValueError, match="missing from checkpoint"):
+        restore(str(tmp_path), _template(bigger), step=0)
+
+
+def test_restore_rejects_extra_leaf(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 0, tree)
+    smaller = {k: v for k, v in tree.items() if k != "n"}
+    with pytest.raises(ValueError, match="does not expect"):
+        restore(str(tmp_path), _template(smaller), step=0)
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 0, tree)
+    bad = dict(tree, w=jnp.zeros((3, 2)))
+    with pytest.raises(ValueError, match="shape"):
+        restore(str(tmp_path), _template(bad), step=0)
+
+
+def test_restore_rejects_dtype_mismatch(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 0, tree)
+    bad = dict(tree, n=jnp.asarray(3, jnp.int64))
+    with pytest.raises(ValueError, match="dtype"):
+        restore(str(tmp_path), _template(bad), step=0)
+
+
+def test_manifest_records_leaves(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 2, tree)
+    with open(os.path.join(str(tmp_path), "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["step"] == 2
+    leaves = manifest["leaves"]
+    assert leaves["['w']"] == {"shape": [2, 3],
+                               "dtype": str(jnp.arange(6.0).dtype)}
+    assert set(leaves) == {"['w']", "['pair'].a", "['pair'].b", "['n']"}
+
+
+def test_load_checkpoint_back_compat(tmp_path):
+    """The unvalidated template path still works (legacy callers)."""
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 0, tree)
+    out = load_checkpoint(str(tmp_path), 0, tree)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))

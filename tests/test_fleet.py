@@ -1,0 +1,481 @@
+"""repro.fleet: registry completeness, facade == legacy, persistence.
+
+Acceptance gates for the lifecycle facade:
+
+  * the method/trainer registries are COMPLETE against the engines (a
+    method added to an engine without a registry entry fails here) and
+    every capability flag matches reality — shardable entries serve on the
+    ShardedEngine and non-shardable ones are rejected, online-safe entries
+    accept `OnlineExperts.to_fitted()` hot-swaps, augmented-data entries
+    get their communication experts built by the facade;
+  * `GPFleet.fit().predict()` equals the legacy per-function path at
+    <= 1e-6 f64 for ALL 13 methods (replicated), the DAC family sharded,
+    and the routable family routed;
+  * every registered trainer matches its legacy trained theta EXACTLY;
+  * a fleet saved with `GPFleet.save()` and loaded back serves
+    bit-identical predictions without refitting;
+  * `FleetConfig()` defaults reproduce configs/paper_gp.py exactly.
+
+Runs on 1 device in tier-1 and on 8 forced host devices in the CI
+sharded-mode step (the sharded/routed cases then exercise real meshes).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_gp import CONFIG as PAPER
+from repro.core.consensus import complete_graph, path_graph
+from repro.core.gp import augment, communication_dataset, pack, \
+    stripe_partition
+from repro.core.prediction import PredictionEngine, ShardedEngine
+from repro.core.training import (train_apx_gp, train_c_gp, train_dec_apx_gp,
+                                 train_dec_apx_gp_sharded, train_dec_c_gp,
+                                 train_dec_gapx_gp, train_fact_gp,
+                                 train_gapx_gp)
+from repro.data import gp_sample_field, random_inputs
+from repro.fleet import (METHODS, TRAINERS, FleetConfig, GPFleet, get_method,
+                         get_trainer, method_names, trainer_names,
+                         validate_config)
+from repro.launch.mesh import make_agent_mesh
+
+TRUE_LT = pack([1.2, 0.3], 1.3, 0.1)
+M = 4
+NT = 17          # deliberately not a multiple of the engine chunk (8)
+ITERS = 150
+COMM_KEY = jax.random.PRNGKey(3)
+
+BASE = dict(num_agents=M, chunk=8, dac_iters=ITERS, jor_iters=400,
+            dale_iters=800, eta_nn=0.1)
+
+
+@pytest.fixture(scope="module")
+def data():
+    X = random_inputs(jax.random.PRNGKey(0), 240)
+    _, y = gp_sample_field(jax.random.PRNGKey(1), X, TRUE_LT)
+    Xp, yp = stripe_partition(X, y, M)
+    Xs = random_inputs(jax.random.PRNGKey(2), NT)
+    Xc, yc = communication_dataset(COMM_KEY, Xp, yp)
+    Xa, ya = augment(Xp, yp, Xc, yc)
+    return Xp, yp, Xs, Xc, yc, Xa, ya
+
+
+def _fit(cfg, data, **kw):
+    Xp, yp, *_ = data
+    return GPFleet(cfg).fit(Xp, yp, key=COMM_KEY, log_theta0=TRUE_LT,
+                            train=False, **kw)
+
+
+@pytest.fixture(scope="module")
+def fleet(data):
+    """Path-graph replicated fleet with augmented/communication experts."""
+    return _fit(FleetConfig(method="nn_grbcm", **BASE), data)
+
+
+@pytest.fixture(scope="module")
+def fleet_complete(data):
+    """Complete-graph fleet (the NPAE family needs strongly-complete)."""
+    return _fit(FleetConfig(method="npae", graph="complete", **BASE), data)
+
+
+@pytest.fixture(scope="module")
+def fleet_sharded(data):
+    """Agent-sharded fleet (exact ring consensus: tight equivalence)."""
+    return _fit(FleetConfig(method="nn_grbcm", sharded=True,
+                            consensus="exact", **BASE), data)
+
+
+def assert_matches(out, ref, tol=1e-6):
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]),
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(ref[1]),
+                               atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# Registry completeness: one table, no silent drift
+# ---------------------------------------------------------------------------
+
+
+def test_method_registry_is_the_papers_13():
+    assert len(METHODS) == 13
+    assert set(method_names()) == {
+        "poe", "gpoe", "bcm", "rbcm", "grbcm", "npae", "npae_star",
+        "nn_poe", "nn_gpoe", "nn_bcm", "nn_rbcm", "nn_grbcm", "nn_npae"}
+    for name in method_names():
+        spec = get_method(name)
+        assert spec.name == name
+        assert callable(spec.legacy) and callable(spec.legacy_call)
+        assert spec.family in ("dac", "npae")
+
+
+def test_trainer_registry_is_the_papers_loops():
+    assert set(trainer_names()) == {"fact", "c", "apx", "gapx", "dec-c",
+                                    "dec-apx", "dec-gapx",
+                                    "dec-apx-sharded"}
+    for name in trainer_names():
+        assert callable(get_trainer(name).run)
+
+
+def test_registry_matches_engines():
+    """Engine method lists == registry-derived sets: drift fails here."""
+    cen = {m for m in PredictionEngine.METHODS if m.startswith("cen_")}
+    assert set(PredictionEngine.METHODS) == set(method_names()) | cen
+    assert set(ShardedEngine.METHODS) == {
+        n for n, s in METHODS.items() if s.shardable}
+
+
+def test_capability_flags_internally_consistent():
+    for name, s in METHODS.items():
+        if s.routable:
+            assert s.shardable and name.startswith("nn_")
+        assert s.needs_augmented_data == ("grbcm" in name)
+        assert s.online_safe == ("grbcm" not in name)
+        if s.family == "npae":
+            assert not s.shardable       # strongly-complete exchange
+
+
+def test_unknown_names_fail_loudly():
+    with pytest.raises(KeyError, match="unknown prediction method"):
+        get_method("nope")
+    with pytest.raises(KeyError, match="unknown trainer"):
+        get_trainer("sgd")
+
+
+# ---------------------------------------------------------------------------
+# Facade predict == legacy free-function path (all 13 methods, replicated)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(method_names()))
+def test_facade_matches_legacy(name, data, fleet, fleet_complete):
+    Xp, yp, Xs, Xc, yc, Xa, ya = data
+    fl = fleet_complete if name in ("npae", "npae_star") else fleet
+    A = complete_graph(M) if name in ("npae", "npae_star") else path_graph(M)
+    spec = get_method(name)
+    ref = spec.legacy_call(fl.config, TRUE_LT, Xp, yp, Xs, A, Xc, yc, Xa, ya)
+    out = fl.predict(Xs, method=name)
+    assert_matches(out, ref)
+    if name.startswith("nn_"):
+        np.testing.assert_array_equal(np.asarray(out[2]["mask"]),
+                                      np.asarray(ref[2]["mask"]))
+
+
+def test_facade_centralized_reference_passthrough(data, fleet):
+    Xs = data[2]
+    mean, var, _ = fleet.predict(Xs, method="cen_poe")
+    assert np.all(np.isfinite(np.asarray(mean)))
+    assert np.all(np.asarray(var) > 0)
+
+
+# ---------------------------------------------------------------------------
+# Sharded / routed capability flags match reality
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(
+    n for n, s in METHODS.items() if s.shardable))
+def test_sharded_matches_replicated(name, data, fleet, fleet_sharded):
+    Xs = data[2]
+    assert_matches(fleet_sharded.predict(Xs, method=name),
+                   fleet.predict(Xs, method=name))
+
+
+@pytest.mark.parametrize("name", sorted(
+    n for n, s in METHODS.items() if not s.shardable))
+def test_sharded_rejects_npae_family(name, data, fleet_sharded):
+    with pytest.raises(ValueError, match="not servable"):
+        fleet_sharded.predict(data[2], method=name)
+
+
+@pytest.mark.parametrize("name", sorted(
+    n for n, s in METHODS.items() if s.routable))
+def test_routed_matches_full_on_one_shard(name, data):
+    """On a 1-device mesh the routed block IS the fleet, so CBNN routing
+    must equal the full nn_* aggregate exactly (the construction the
+    multi-device exactness tests in test_sharded_serving build per shard).
+    """
+    cfg = FleetConfig(method="nn_grbcm", sharded=True, routed=True,
+                      consensus="exact", max_shard_devices=1, **BASE)
+    fl = _fit(cfg, data)
+    rep = FleetConfig(method="nn_grbcm", **BASE)
+    fl_rep = _fit(rep, data)
+    Xs = data[2]
+    assert_matches(fl.predict(Xs, method=name),
+                   fl_rep.predict(Xs, method=name))
+
+
+# ---------------------------------------------------------------------------
+# Online-safe flags match reality (OnlineExperts.to_fitted hot-swaps)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fleet_online(data):
+    Xp, yp, *_ = data
+    cfg = FleetConfig(online=True, method="rbcm", **BASE)
+    fl = GPFleet(cfg).fit(Xp, yp, log_theta0=TRUE_LT, train=False)
+    xs = random_inputs(jax.random.PRNGKey(11), M)
+    ys = jnp.zeros((M,), Xp.dtype)
+    return fl.observe(xs, ys)
+
+
+@pytest.mark.parametrize("name", sorted(
+    n for n, s in METHODS.items() if s.online_safe))
+def test_online_safe_methods_serve_live_windows(name, data, fleet_online):
+    mean, var, _ = fleet_online.predict(data[2], method=name)
+    assert np.all(np.isfinite(np.asarray(mean)))
+    assert np.all(np.asarray(var) > 0)
+
+
+def test_online_unsafe_methods_rejected():
+    for name, s in METHODS.items():
+        if s.online_safe:
+            continue
+        with pytest.raises(ValueError, match="online"):
+            GPFleet(FleetConfig(online=True, method=name, **BASE))
+
+
+def test_online_matches_batch_before_observing(data, fleet):
+    """A freshly seeded window (no stream events yet) serves the batch
+    answer: to_fitted() is a faithful FittedExperts view."""
+    Xp, yp, Xs, *_ = data
+    cfg = FleetConfig(online=True, method="rbcm", **BASE)
+    fl = GPFleet(cfg).fit(Xp, yp, log_theta0=TRUE_LT, train=False)
+    assert_matches(fl.predict(Xs), fleet.predict(Xs, method="rbcm"))
+
+
+# ---------------------------------------------------------------------------
+# Trainers: facade fit == legacy trained theta EXACTLY
+# ---------------------------------------------------------------------------
+
+_TRAIN = dict(num_agents=M, admm_iters=3, nested_iters=2, fact_steps=5)
+
+
+def _legacy_theta(name, cfg, lt0, Xp, yp, Xa, ya):
+    if name == "fact":
+        return train_fact_gp(lt0, Xp, yp, steps=cfg.fact_steps,
+                             lr=cfg.fact_lr)[0]
+    if name == "c":
+        return train_c_gp(lt0, Xp, yp, rho=cfg.rho, iters=cfg.admm_iters,
+                          nested_iters=cfg.nested_iters,
+                          nested_lr=cfg.nested_lr)[0]
+    if name == "apx":
+        return train_apx_gp(lt0, Xp, yp, rho=cfg.rho, L=cfg.lipschitz,
+                            iters=cfg.admm_iters)[0]
+    if name == "gapx":
+        return train_gapx_gp(lt0, Xa, ya, rho=cfg.rho, L=cfg.lipschitz,
+                             iters=cfg.admm_iters)[0]
+    A = path_graph(M)
+    if name == "dec-c":
+        thetas, _ = train_dec_c_gp(lt0, Xp, yp, A, rho=cfg.rho,
+                                   iters=cfg.admm_iters,
+                                   nested_iters=cfg.nested_iters,
+                                   nested_lr=cfg.nested_lr)
+    elif name == "dec-apx":
+        thetas, _ = train_dec_apx_gp(lt0, Xp, yp, A, rho=cfg.rho,
+                                     kappa=cfg.kappa, iters=cfg.admm_iters)
+    elif name == "dec-gapx":
+        thetas, _ = train_dec_gapx_gp(lt0, Xa, ya, A, rho=cfg.rho,
+                                      kappa=cfg.kappa, iters=cfg.admm_iters)
+    else:
+        assert name == "dec-apx-sharded"
+        thetas, _ = train_dec_apx_gp_sharded(
+            make_agent_mesh(M), "agents", lt0, Xp, yp, rho=cfg.rho,
+            kappa=cfg.kappa, iters=cfg.admm_iters)
+    return jnp.mean(thetas, axis=0)
+
+
+@pytest.mark.parametrize("name", sorted(trainer_names()))
+def test_trainer_matches_legacy_theta_exactly(name, data):
+    Xp, yp, Xs, Xc, yc, Xa, ya = data
+    if name == "dec-apx-sharded" and len(jax.devices()) < M:
+        pytest.skip(f"dec-apx-sharded needs {M} devices (one per agent)")
+    cfg = FleetConfig(trainer=name, method="rbcm", **_TRAIN)
+    lt0 = pack([2.0, 0.5], 1.0, 1.0)
+    fl = GPFleet(cfg).fit(Xp, yp, key=COMM_KEY, log_theta0=lt0)
+    want = _legacy_theta(name, cfg, lt0, Xp, yp, Xa, ya)
+    np.testing.assert_array_equal(np.asarray(fl.log_theta),
+                                  np.asarray(want))
+    assert fl.thetas.shape == (M, lt0.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Persistence: save -> load serves bit-identical predictions, no refit
+# ---------------------------------------------------------------------------
+
+
+def test_save_load_bit_identical(data, fleet, tmp_path):
+    Xs = data[2]
+    want = fleet.predict(Xs, method="nn_grbcm")
+    fleet.save(str(tmp_path))
+    fl2 = GPFleet.load(str(tmp_path))
+    assert fl2.config == fleet.config
+    got = fl2.predict(Xs, method="nn_grbcm")
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    # the augmented/communication experts made the trip too
+    assert fl2.fitted_aug is not None and fl2.fitted_comm is not None
+
+
+def test_save_load_online_state(data, fleet_online, tmp_path):
+    Xs = data[2]
+    want = fleet_online.predict(Xs)
+    fleet_online.save(str(tmp_path))
+    fl2 = GPFleet.load(str(tmp_path))
+    got = fl2.predict(Xs)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    # the window state survived: the stream can continue where it stopped
+    np.testing.assert_array_equal(np.asarray(fl2.window_counts),
+                                  np.asarray(fleet_online.window_counts))
+    fl2.observe(random_inputs(jax.random.PRNGKey(13), M),
+                jnp.zeros((M,), Xs.dtype))
+
+
+def test_save_load_new_process_bit_identical(data, fleet, tmp_path):
+    """The acceptance criterion verbatim: a FRESH PROCESS loads the saved
+    fleet and serves bit-identical predictions without refitting."""
+    import os
+    import subprocess
+    import sys
+
+    import repro
+    Xs = data[2]
+    want = np.asarray(fleet.predict(Xs, method="rbcm")[0])
+    fleet.save(str(tmp_path))
+    np.save(tmp_path / "Xs.npy", np.asarray(Xs))
+    np.save(tmp_path / "want.npy", want)
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    script = (
+        "import jax; jax.config.update('jax_enable_x64', True)\n"
+        "import numpy as np\n"
+        "from repro.fleet import GPFleet\n"
+        f"d = {str(tmp_path)!r}\n"
+        "fl = GPFleet.load(d)\n"
+        "m, v, _ = fl.predict(np.load(d + '/Xs.npy'), method='rbcm')\n"
+        "np.testing.assert_array_equal(np.asarray(m),\n"
+        "                              np.load(d + '/want.npy'))\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+
+
+def test_load_validates_against_corruption(data, fleet, tmp_path):
+    import numpy as onp
+    fleet.save(str(tmp_path))
+    path = tmp_path / "step_00000000.npz"
+    stored = dict(onp.load(str(path)))
+    stored["['fitted'].alpha"] = stored["['fitted'].alpha"][:, :-1]
+    onp.savez(str(path), **stored)
+    with pytest.raises(ValueError, match="does not match the template"):
+        GPFleet.load(str(tmp_path))
+
+
+def test_load_missing_manifest(tmp_path):
+    with pytest.raises(FileNotFoundError, match="fleet.json"):
+        GPFleet.load(str(tmp_path))
+
+
+def test_load_with_config_override(data, fleet, tmp_path):
+    fleet.save(str(tmp_path))
+    cfg = fleet.config.replace(method="poe")
+    fl2 = GPFleet.load(str(tmp_path), config=cfg)
+    assert_matches(fl2.predict(data[2]), fleet.predict(data[2],
+                                                       method="poe"))
+
+
+# ---------------------------------------------------------------------------
+# Config: paper defaults, validation, serialization
+# ---------------------------------------------------------------------------
+
+
+def test_config_defaults_reproduce_paper_gp():
+    c = FleetConfig()
+    assert (c.input_dim, c.theta0, c.num_agents, c.graph, c.rho, c.kappa,
+            c.lipschitz, c.admm_iters, c.nested_lr, c.eta_nn) == (
+        PAPER.input_dim, PAPER.theta0, PAPER.fleets[0], PAPER.graph,
+        PAPER.rho, PAPER.kappa, PAPER.lipschitz, PAPER.admm_iters,
+        PAPER.nested_lr, PAPER.eta_nn)
+
+
+def test_config_json_roundtrip():
+    c = FleetConfig(num_agents=8, method="nn_npae", trainer="dec-gapx",
+                    online=True, window=64)
+    assert FleetConfig.from_json(c.to_json()) == c
+    with pytest.raises(ValueError, match="unknown FleetConfig fields"):
+        FleetConfig.from_dict({"warp_drive": 1})
+
+
+def test_config_rejects_bad_values():
+    with pytest.raises(ValueError, match="graph"):
+        FleetConfig(graph="torus")
+    with pytest.raises(ValueError, match="consensus"):
+        FleetConfig(consensus="gossip")
+    with pytest.raises(ValueError, match="theta0"):
+        FleetConfig(input_dim=3)
+
+
+def test_capability_invalid_combos_rejected():
+    with pytest.raises(ValueError, match="not servable"):
+        validate_config(FleetConfig(method="npae", sharded=True))
+    with pytest.raises(ValueError, match="routable|routing"):
+        validate_config(FleetConfig(method="rbcm", sharded=True,
+                                    routed=True))
+    with pytest.raises(ValueError, match="sharded"):
+        validate_config(FleetConfig(method="nn_rbcm", routed=True))
+    with pytest.raises(ValueError, match="online"):
+        validate_config(FleetConfig(method="grbcm", online=True))
+    with pytest.raises(ValueError, match="cross-Gram"):
+        validate_config(FleetConfig(method="rbcm", sharded=True,
+                                    cache_cross=True))
+
+
+def test_config_is_static_pytree():
+    c = FleetConfig(num_agents=8)
+    assert jax.tree.leaves(c) == []          # static: no array leaves
+
+    @jax.jit
+    def f(cfg, x):
+        return x * cfg.num_agents
+
+    assert float(f(c, jnp.asarray(2.0))) == 16.0
+
+
+# ---------------------------------------------------------------------------
+# Facade guard rails
+# ---------------------------------------------------------------------------
+
+
+def test_unfitted_fleet_refuses_to_serve():
+    fl = GPFleet(FleetConfig(**BASE))
+    with pytest.raises(RuntimeError, match="fit"):
+        fl.predict(jnp.zeros((3, 2)))
+    with pytest.raises(RuntimeError, match="fit"):
+        fl.save("/tmp/nowhere")
+
+
+def test_fit_rejects_wrong_agent_count(data):
+    Xp, yp, *_ = data
+    fl = GPFleet(FleetConfig(num_agents=M + 1, **{k: v for k, v in
+                                                  BASE.items()
+                                                  if k != "num_agents"}))
+    with pytest.raises(ValueError, match="num_agents"):
+        fl.fit(Xp, yp)
+
+
+def test_observe_requires_online_fleet(data, fleet):
+    with pytest.raises(RuntimeError, match="online"):
+        fleet.observe(jnp.zeros((M, 2)), jnp.zeros(M))
+
+
+def test_serve_gp_cli_rejects_invalid_combos():
+    from repro.launch.serve_gp import main
+    for argv in (["--method", "npae", "--sharded"],
+                 ["--method", "grbcm", "--online"],
+                 ["--method", "rbcm", "--routed"],
+                 ["--method", "made_up"],
+                 ["--trainer", "sgd"]):
+        with pytest.raises(SystemExit):
+            main(argv)

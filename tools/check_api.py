@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Public-API snapshot check: the frozen export surface cannot drift by
+accident.
+
+`repro.fleet` is the lifecycle facade and `repro.core.prediction` is the
+method surface the facade wraps — both are documented (docs/fleet_api.md,
+README) and depended on by examples/launchers. This script compares each
+module's ACTUAL exports (`__all__`, every name importable) against the
+frozen lists below and fails with a precise diff on any change, so adding
+or removing a public name is always a deliberate, reviewed edit of this
+file plus the docs.
+
+Run from the repo root (CI docs job):
+
+    PYTHONPATH=src python tools/check_api.py
+"""
+import importlib
+import sys
+
+# -- the frozen surface ------------------------------------------------------
+# Update DELIBERATELY: when the public API changes, change this list in the
+# same PR and update docs/fleet_api.md + README accordingly.
+
+FROZEN = {
+    "repro.fleet": [
+        "FleetConfig", "GPFleet",
+        "METHODS", "TRAINERS", "MethodSpec", "TrainerSpec",
+        "get_method", "get_trainer", "method_names", "trainer_names",
+        "validate_config",
+    ],
+    "repro.core.prediction": [
+        "local_moments", "npae_terms", "chol_factors", "cross_gram",
+        "local_moments_cached", "npae_terms_cached", "stream_means",
+        "poe", "gpoe", "bcm", "rbcm", "grbcm", "npae",
+        "cbnn_scores", "cbnn_mask", "cbnn_scores_cached",
+        "cbnn_mask_cached",
+        "dec_poe", "dec_gpoe", "dec_bcm", "dec_rbcm", "dec_grbcm",
+        "dec_npae", "dec_npae_star", "dec_nn_poe", "dec_nn_gpoe",
+        "dec_nn_bcm", "dec_nn_rbcm", "dec_nn_grbcm", "dec_nn_npae",
+        "dec_poe_from_moments", "dec_gpoe_from_moments",
+        "dec_bcm_from_moments", "dec_rbcm_from_moments",
+        "dec_grbcm_from_moments", "dec_npae_from_terms",
+        "dec_npae_star_from_terms", "dec_nn_npae_from_terms",
+        "FittedExperts", "fit_experts", "map_query_tiles",
+        "PredictionEngine",
+        "ShardedEngine", "expert_specs", "replicated_specs",
+        "shard_experts",
+    ],
+    "repro.checkpoint": [
+        "save_checkpoint", "load_checkpoint", "latest_step", "restore",
+    ],
+}
+
+# registry contents are public API too: a renamed trainer/method key breaks
+# saved FleetConfigs and CLI invocations
+FROZEN_REGISTRY = {
+    "trainers": ["fact", "c", "apx", "gapx", "dec-c", "dec-apx",
+                 "dec-gapx", "dec-apx-sharded"],
+    "methods": ["poe", "gpoe", "bcm", "rbcm", "grbcm", "npae", "npae_star",
+                "nn_poe", "nn_gpoe", "nn_bcm", "nn_rbcm", "nn_grbcm",
+                "nn_npae"],
+}
+
+
+def check_module(modname: str, frozen: list[str]) -> list[str]:
+    errors = []
+    mod = importlib.import_module(modname)
+    actual = getattr(mod, "__all__", None)
+    if actual is None:
+        return [f"{modname}: no __all__ defined"]
+    extra = sorted(set(actual) - set(frozen))
+    missing = sorted(set(frozen) - set(actual))
+    if extra:
+        errors.append(f"{modname}: NEW exports not in the frozen snapshot "
+                      f"(add them here + docs deliberately): {extra}")
+    if missing:
+        errors.append(f"{modname}: exports REMOVED from the module "
+                      f"(breaks the documented surface): {missing}")
+    for name in actual:
+        if not hasattr(mod, name):
+            errors.append(f"{modname}: __all__ lists {name!r} but the "
+                          f"module does not define it")
+    return errors
+
+
+def check_registries() -> list[str]:
+    from repro.fleet import method_names, trainer_names
+    errors = []
+    for kind, names, want in (("trainer", trainer_names(),
+                               FROZEN_REGISTRY["trainers"]),
+                              ("method", method_names(),
+                               FROZEN_REGISTRY["methods"])):
+        if sorted(names) != sorted(want):
+            errors.append(
+                f"{kind} registry keys changed: "
+                f"added {sorted(set(names) - set(want))}, "
+                f"removed {sorted(set(want) - set(names))}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for modname, frozen in FROZEN.items():
+        errors += check_module(modname, frozen)
+    errors += check_registries()
+    if errors:
+        print("public-API snapshot check FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    n = sum(len(v) for v in FROZEN.values())
+    print(f"public-API snapshot OK: {n} exports across "
+          f"{len(FROZEN)} modules, "
+          f"{len(FROZEN_REGISTRY['trainers'])} trainers, "
+          f"{len(FROZEN_REGISTRY['methods'])} methods")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
