@@ -108,6 +108,8 @@ def run(sizes=(128, 512, 2048), reps=3, serve_agents=4, serve_window=256,
     out["serving"] = {"M": M, "window": W, "rounds": serve_rounds,
                       "obs_per_s": n_obs / dt, "queries_per_s": n_q / dt}
 
+    from .envtags import bench_tags
+    out.update(bench_tags("replicated"))
     with open(json_path, "w") as fh:
         json.dump(out, fh, indent=2)
     csv(f"# wrote {json_path}")

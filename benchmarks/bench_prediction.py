@@ -11,7 +11,14 @@ replicated vs sharded fleet throughput in the micro-batch latency regime,
 and CBNN query routing vs full-fleet consensus in the large-batch
 throughput regime, at tight eta_nn. Run it under
 XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU (or on a real
-multi-device platform); results land in BENCH_serving.json."""
+multi-device platform); results land in BENCH_serving.json.
+
+`run_scheduler` benchmarks the request-level serving scheduler
+(launch.scheduler): p50/p99 latency vs offered load under the open-loop
+Poisson generator (benchmarks/loadgen.py), continuous slot batching vs
+the v1 fixed-batch front-door geometry, for 1 and 2 resident tenants.
+The saturation curves and the sustainable-QPS comparison merge into
+BENCH_serving.json under the "scheduler" key."""
 from __future__ import annotations
 
 import json
@@ -312,7 +319,193 @@ def run_sharded(n_obs=8192, M=32, batch=256, big_batch=2048, chunk=256,
     csv(f"# routing agreement: {100*exact_frac:.1f}% of queries exact "
         f"(<1e-6), median deviation {np.median(dev):.2e}")
 
-    with open(json_path, "w") as fh:
-        json.dump(out, fh, indent=2)
+    from .envtags import bench_tags, merge_json
+    out.update(bench_tags("sharded"))
+    # read-modify-write: run_scheduler's "scheduler" section shares this
+    # artifact and must survive a sharded re-run (and vice versa)
+    merge_json(json_path, out)
     csv(f"# wrote {json_path}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Serving: request-level scheduler — continuous batching vs the v1 front door
+# ---------------------------------------------------------------------------
+
+def run_scheduler(n_obs=4096, M=8, max_slot=256, chunk=32, dac_iters=150,
+                  mean_rows=24, fractions=(0.15, 0.3, 0.5, 0.7, 0.85, 1.0),
+                  point_duration=5.0, max_wait_ms=2.0, csv=print,
+                  json_path="BENCH_serving.json", smoke=False):
+    """Saturation curves for the request-level scheduler (ISSUE 6).
+
+    Two systems over the SAME fleets, driven by the open-loop Poisson
+    generator at a sweep of offered loads (fractions of the full-slot
+    engine capacity):
+
+      fixed      — one slot geometry of `max_slot` rows: the v1 FrontDoor
+                   behavior (every dispatch pays the full-batch program,
+                   mostly padding at partial occupancy).
+      continuous — the quantized chunk*2^k slot ladder with round-down
+                   packing: partial loads run right-sized compiled
+                   programs, backlogs run 100%-occupied ones.
+
+    Reported per point: offered qps (rows/s), p50/p99 request latency,
+    rejected count (admission control at queue_depth — open-loop overload
+    is visible, never hidden behind a blocked generator). The headline is
+    SUSTAINABLE qps at equal p99: the SLO is the v1 fixed-batch door's
+    p99 at its LIGHTEST offered load — its unloaded floor, the best
+    service v1 ever delivers — and each system's sustainable qps is the
+    highest offered load that still meets that SLO with < 1% rejections.
+    Because queueing p99 is non-decreasing in offered load, each curve is
+    evaluated through its monotone (cumulative-max) envelope: a single
+    mid-load point whose sampled p99 dips below a lighter load's is
+    quantile noise, and must not extend what a system "sustains" (the
+    lightest measured point of each system always qualifies). Acceptance:
+    continuous >= 1.5x fixed. Fixed/continuous run back-to-back per
+    offered load so slow machine drift never lands on one system's whole
+    curve, and low-rate points stretch their window until ~250 requests
+    complete so the p99 estimate isn't a max-statistic. `n_obs` and `dac_iters` default near the
+    paper's protocol so the full-slot program costs tens of ms — the
+    regime the batch geometry is FOR; shrinking them (as --smoke does)
+    drops the program into scheduling-noise territory and flattens both
+    curves. The 2-tenant pass round-robins two resident
+    fleets (rbcm + poe) in one process and asserts zero recompiles after
+    warmup via the engines' jit-cache miss counters. CPython GC is paused
+    during each measurement window (collected between points) so the p99
+    tail measures the scheduler, not the garbage collector.
+    """
+    import gc
+    from repro.fleet import FleetConfig, GPFleet
+    from repro.launch.scheduler import ServingScheduler
+    from .envtags import bench_tags, merge_json
+    from .loadgen import TenantLoad, run_load
+
+    if smoke:
+        n_obs, M, max_slot, chunk, dac_iters = 256, 4, 64, 16, 30
+        mean_rows, fractions, point_duration = 12, (0.3, 0.8), 1.0
+
+    lt = pack([1.2, 0.3], 1.3, 0.1)
+    X = random_inputs(jax.random.PRNGKey(0), n_obs)
+    _, y = sst_like_field(X / jnp.max(X), key=jax.random.PRNGKey(1))
+    Xp, yp = stripe_partition(X, y, M)
+    dtype = np.asarray(Xp).dtype
+
+    def build(method):
+        cfg = FleetConfig(num_agents=M, method=method, chunk=chunk,
+                          dac_iters=dac_iters)
+        return GPFleet(cfg).fit(Xp, yp, log_theta0=lt, train=False)
+
+    fleets = {"a": build("rbcm"), "b": build("poe")}
+
+    # full-slot engine capacity (rows/s) anchors the offered-load sweep
+    Xfull = jnp.asarray(np.zeros((max_slot, Xp.shape[-1]), dtype))
+    t_full = _time_best(lambda q: fleets["a"].predict(q)[:2], Xfull, reps=3)
+    cap_qps = max_slot / t_full
+    max_rows = 2 * mean_rows - 1          # U[1, max_rows] -> mean_rows mean
+    csv(f"# scheduler: full-slot program {t_full*1e3:.1f} ms -> capacity "
+        f"{cap_qps:.0f} rows/s; request sizes U[1,{max_rows}]")
+    csv("table,system,tenants,offered_frac,offered_qps,completed,rejected,"
+        "p50_ms,p99_ms")
+
+    def run_point(system, n_tenants, frac):
+        continuous = system == "continuous"
+        sched = ServingScheduler(max_wait_ms=max_wait_ms)
+        names = list(fleets)[:n_tenants]
+        for name in names:
+            sched.add_fleet(name, fleets[name], max_slot=max_slot,
+                            continuous=continuous, admission="reject",
+                            queue_depth=8 * max_slot)
+        misses0 = {n: fleets[n].jit_cache_misses for n in names}
+        rate = frac * cap_qps / (n_tenants * mean_rows)   # requests/s/tenant
+        loads = [TenantLoad(n, rate, max_rows=max_rows) for n in names]
+        # low-rate points stretch their window toward ~250 total requests
+        # so p99 isn't a max-statistic over a few dozen samples
+        min_reqs = 0 if smoke else 250
+        dur = max(point_duration, min_reqs / (rate * n_tenants))
+        gc.collect()
+        gc.disable()        # keep collector pauses out of the p99 tail
+        try:
+            res = run_load(sched, loads, dur, dtype=dtype,
+                           seed=int(frac * 1000) + n_tenants)
+            sched.close()
+        finally:
+            gc.enable()
+        recompiles = sum(fleets[n].jit_cache_misses - misses0[n]
+                         for n in names)
+        assert recompiles == 0, \
+            f"{system}/{n_tenants}t recompiled {recompiles}x while serving"
+        point = {
+            "system": system, "tenants": n_tenants, "offered_frac": frac,
+            "offered_qps": sum(r.offered_qps for r in res.values()),
+            "offered_rps": sum(r.offered_rps for r in res.values()),
+            "completed": sum(r.completed for r in res.values()),
+            "rejected": sum(r.rejected for r in res.values()),
+            "submitted": sum(r.submitted for r in res.values()),
+            "p50_ms": max(r.p50_ms for r in res.values()),
+            "p99_ms": max(r.p99_ms for r in res.values()),
+        }
+        csv(f"scheduler,{system},{n_tenants},{frac},"
+            f"{point['offered_qps']:.0f},{point['completed']},"
+            f"{point['rejected']},{point['p50_ms']:.2f},"
+            f"{point['p99_ms']:.2f}")
+        return point
+
+    curves = []
+    for n_tenants in (1, 2):
+        # fixed/continuous back-to-back per offered load: slow machine
+        # drift over the sweep lands on both systems, not one curve
+        for frac in fractions:
+            for system in ("fixed", "continuous"):
+                curves.append(run_point(system, n_tenants, frac))
+
+    def sustainable(system, n_tenants, bound):
+        """Highest offered qps whose monotone-envelope p99 meets `bound`
+        with < 1% rejections.
+
+        Queueing p99 is non-decreasing in offered load, so each curve is
+        read through its cumulative max: a mid-load point whose sampled
+        p99 dips under a lighter load's is quantile noise and must not
+        extend what the system "sustains". The envelope must stay
+        strictly below the bound (a curve sitting AT the SLO within
+        noise isn't sustaining it) except at the system's lightest
+        measured point, which defines its floor."""
+        pts = sorted((c for c in curves if c["system"] == system
+                      and c["tenants"] == n_tenants),
+                     key=lambda c: c["offered_qps"])
+        best, envelope = 0.0, 0.0
+        for i, c in enumerate(pts):
+            envelope = max(envelope, c["p99_ms"])
+            ok_rej = c["rejected"] <= 0.01 * max(1, c["submitted"]
+                                                 + c["rejected"])
+            ok_p99 = envelope < bound or (i == 0 and c["p99_ms"] <= bound)
+            if ok_rej and ok_p99:
+                best = max(best, c["offered_qps"])
+        return best
+
+    out = {"curves": curves, "capacity_qps": cap_qps,
+           "t_full_slot_ms": t_full * 1e3, "max_slot": max_slot,
+           "chunk": chunk, "M": M, "mean_rows": mean_rows,
+           "point_duration_s": point_duration, "smoke": bool(smoke),
+           "sustainable": {}}
+    out.update(bench_tags("scheduler"))
+    for n_tenants in (1, 2):
+        # equal-p99 SLO: the v1 fixed-batch door's p99 at its lightest
+        # offered load — its unloaded floor, the best service v1 ever
+        # delivers — and both systems must serve under it
+        fixed_pts = sorted((c for c in curves if c["system"] == "fixed"
+                            and c["tenants"] == n_tenants),
+                           key=lambda c: c["offered_qps"])
+        bound = fixed_pts[0]["p99_ms"]
+        s_fix = sustainable("fixed", n_tenants, bound)
+        s_cont = sustainable("continuous", n_tenants, bound)
+        ratio = s_cont / s_fix if s_fix else float("inf")
+        out["sustainable"][f"{n_tenants}_tenant"] = {
+            "p99_bound_ms": bound, "fixed_qps": s_fix,
+            "continuous_qps": s_cont, "ratio": ratio}
+        csv(f"# {n_tenants} tenant(s): sustainable qps at p99 <= "
+            f"{bound:.1f} ms -> fixed {s_fix:.0f}, continuous "
+            f"{s_cont:.0f} ({ratio:.2f}x)")
+
+    merge_json(json_path, {"scheduler": out})
+    csv(f"# wrote {json_path} (scheduler section)")
     return out

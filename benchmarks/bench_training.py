@@ -204,6 +204,8 @@ def run_fused(n_train=1024, M=16, D=2, iters=50, reps=5, csv=print,
            "pallas_interpret": {"N": ni, "max_rel_err": pal_rel,
                                 "ok": pal_ok},
            "smoke": bool(smoke)}
+    from .envtags import bench_tags
+    out.update(bench_tags("replicated"))
     with open(json_path, "w") as fh:
         json.dump(out, fh, indent=2)
     csv(f"# wrote {json_path}")

@@ -1,0 +1,40 @@
+"""Environment tags stamped into every BENCH_*.json artifact.
+
+Benchmark JSONs accumulate across machines and backends (CPU CI today, a
+real accelerator ring tomorrow). Tagging each result dict with the jax
+backend and the serving topology it measured turns the artifacts into a
+cross-backend trajectory instead of a set of context-free numbers.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+
+
+def bench_tags(topology: str) -> dict:
+    """`topology` names the serving/execution layout the numbers describe:
+    "replicated" (one device holds the whole fleet), "sharded" (agent axis
+    over a device mesh), "routed" (sharded + CBNN query routing), or
+    "scheduler" (request-level scheduler over replicated engines)."""
+    return {
+        "backend": jax.default_backend(),
+        "device_count": len(jax.devices()),
+        "topology": topology,
+    }
+
+
+def merge_json(json_path: str, updates: dict) -> dict:
+    """Read-modify-write `json_path`: existing keys not in `updates`
+    survive, so independent benchmark sections can share one artifact
+    (e.g. run_sharded and run_scheduler both land in
+    BENCH_serving.json)."""
+    try:
+        with open(json_path) as fh:
+            full = json.load(fh)
+    except (FileNotFoundError, json.JSONDecodeError):
+        full = {}
+    full.update(updates)
+    with open(json_path, "w") as fh:
+        json.dump(full, fh, indent=2)
+    return full

@@ -1,0 +1,116 @@
+"""Open-loop Poisson load generator for the serving scheduler.
+
+Closed-loop drivers (submit, wait, repeat) pace themselves to the system
+under test, so they can never show saturation — the queue length is
+bounded by the driver's concurrency. This generator is OPEN-LOOP: each
+tenant's requests arrive on a Poisson timeline at the OFFERED rate,
+submitted on schedule regardless of completions, exactly like independent
+clients. Overload therefore shows up the way it does in production: queue
+depth grows, admission control starts rejecting (`SchedulerSaturated`,
+counted — run the scheduler's tenants with admission="reject" so the
+generator never blocks), and the p99 of what does complete blows up.
+
+Request sizes are ragged (uniform over [1, max_rows]) so slot packing is
+exercised, and request arrays are pre-generated so the submit loop spends
+its time on the timeline, not on RNG.
+
+`bench_prediction.run_scheduler` sweeps this generator over offered-load
+fractions to produce the latency-vs-load saturation curves in
+BENCH_serving.json.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.launch.scheduler import DeadlineExceeded, SchedulerSaturated
+
+__all__ = ["TenantLoad", "LoadResult", "run_load"]
+
+
+@dataclass
+class TenantLoad:
+    """One tenant's offered load: `rate` requests/s, sizes ~ U[1,
+    max_rows] (mean (max_rows + 1) / 2 rows per request)."""
+    name: str
+    rate: float
+    max_rows: int = 47
+    priority: int = 0
+    deadline_ms: float | None = None
+
+
+@dataclass
+class LoadResult:
+    """Per-tenant outcome of one load run. `offered_*` describe the
+    generated timeline (including rejected work); p50/p99 are request
+    latencies of COMPLETED work only — read them together with
+    `rejected`/`dropped`, a low p99 at high rejection is not sustained."""
+    tenant: str
+    offered_rps: float
+    offered_qps: float
+    submitted: int = 0
+    completed: int = 0
+    rejected: int = 0
+    dropped: int = 0
+    p50_ms: float = float("nan")
+    p99_ms: float = float("nan")
+
+
+def run_load(sched, loads, duration: float, *, input_dim: int = 2,
+             dtype=np.float64, lo: float = 0.0, hi: float = 2.0,
+             seed: int = 0, result_timeout: float = 600.0
+             ) -> dict[str, LoadResult]:
+    """Drive `sched` with the merged per-tenant Poisson timelines for
+    `duration` seconds of arrivals, wait for every accepted Future, and
+    return {tenant: LoadResult}.
+
+    The query DTYPE must match the fleets' fitted dtype — a mismatched
+    dtype is a new jit-cache geometry per slot, which would corrupt both
+    the latencies and the zero-recompile story.
+    """
+    rng = np.random.default_rng(seed)
+    events = []                      # (arrival_s, TenantLoad, Xq)
+    offered_rows = {load.name: 0 for load in loads}
+    for load in loads:
+        t = rng.exponential(1.0 / load.rate)
+        while t < duration:
+            n = int(rng.integers(1, load.max_rows + 1))
+            Xq = rng.uniform(lo, hi, (n, input_dim)).astype(dtype)
+            events.append((t, load, Xq))
+            offered_rows[load.name] += n
+            t += rng.exponential(1.0 / load.rate)
+    events.sort(key=lambda e: e[0])
+
+    results = {
+        load.name: LoadResult(load.name, offered_rps=load.rate,
+                              offered_qps=offered_rows[load.name] / duration)
+        for load in loads
+    }
+    futs = []
+    t0 = time.monotonic()
+    for at, load, Xq in events:
+        lag = at - (time.monotonic() - t0)
+        if lag > 0:
+            time.sleep(lag)
+        r = results[load.name]
+        try:
+            futs.append((load.name, sched.add_request(
+                Xq, tenant=load.name, priority=load.priority,
+                deadline_ms=load.deadline_ms)))
+            r.submitted += 1
+        except SchedulerSaturated:
+            r.rejected += 1
+    for name, fut in futs:
+        try:
+            fut.result(timeout=result_timeout)
+            results[name].completed += 1
+        except DeadlineExceeded:
+            results[name].dropped += 1
+    for name, st in sched.tenant_stats.items():
+        if name in results:
+            p50, p99 = st.latency_ms(50, 99)
+            results[name].p50_ms = p50
+            results[name].p99_ms = p99
+    return results

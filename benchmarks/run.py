@@ -24,17 +24,19 @@ def main() -> None:
                          "(training: fused-gradient bench with the Pallas "
                          "kernel in interpret mode + the JSON artifact; "
                          "sharded: shrunken fleet through both serving "
-                         "regimes)")
+                         "regimes; scheduler: short saturation sweep)")
     ap.add_argument("--only", default="all",
                     choices=["all", "training", "prediction", "serving",
-                             "sharded", "online", "roofline", "kernels"])
+                             "sharded", "scheduler", "online", "roofline",
+                             "kernels"])
     args = ap.parse_args()
-    if args.smoke and args.only not in ("all", "training", "sharded"):
+    if args.smoke and args.only not in ("all", "training", "sharded",
+                                        "scheduler"):
         # fail loudly: a CI step combining these would otherwise stay green
         # while executing nothing
         raise SystemExit(f"--smoke: section {args.only!r} has no "
-                         "seconds-scale mode; use --only training or "
-                         "sharded (or all)")
+                         "seconds-scale mode; use --only training, sharded "
+                         "or scheduler (or all)")
 
     out = sys.stdout
     def csv(line):
@@ -57,6 +59,12 @@ def main() -> None:
         from . import bench_prediction
         csv("# === agent-sharded serving + CBNN query routing ===")
         bench_prediction.run_sharded(csv=csv, smoke=args.smoke)
+
+    if args.only in ("all", "scheduler"):
+        from . import bench_prediction
+        csv("# === request-level scheduler (continuous batching vs v1 "
+            "front door) ===")
+        bench_prediction.run_scheduler(csv=csv, smoke=args.smoke)
 
     if args.smoke:
         # no other section has a seconds-scale mode yet; refuse to

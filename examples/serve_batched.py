@@ -1,13 +1,14 @@
-"""Batched GP serving through the async front door, fleet persistence
+"""Batched GP serving through the request scheduler, fleet persistence
 included — the production serving loop in ~40 lines.
 
     PYTHONPATH=src python examples/serve_batched.py
 
 Fit a fleet once, `save()` it, `load()` it back the way a serving process
 would (no refit — bit-identical factors), then serve a ragged request
-stream through `to_server()`: the FrontDoor collector coalesces requests
-into fixed-shape micro-batches (one compiled program, zero recompiles
-after warmup) and resolves each request through a Future.
+stream through `to_server()`: a one-tenant `ServingScheduler`
+(docs/serving_scheduler.md) packs requests continuously into a ladder of
+pre-compiled batch slots (zero recompiles after warmup) and resolves each
+request through a Future.
 
 (The LM prefill/decode scenario this example used to run lives on in
 `repro.launch.serve --arch ... --reduced`; see the README legacy note.)
@@ -38,7 +39,7 @@ fleet = GPFleet.load(ckpt)                   # fresh engine, no refit
 print(f"fleet: M={M}, trainer={cfg.trainer}, method={cfg.method}, "
       f"reloaded from {ckpt}")
 
-# --- a ragged request stream through the async micro-batching door --------
+# --- a ragged request stream through the serving scheduler ----------------
 rng = np.random.default_rng(0)
 requests = [random_inputs(jax.random.fold_in(key, 100 + i),
                           int(rng.integers(1, 65)))

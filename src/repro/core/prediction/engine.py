@@ -174,6 +174,7 @@ class PredictionEngine:
         self.fitted_comm = fitted_comm
         self.stream_mean = bool(stream_mean)
         self._compiled: dict[str, object] = {}
+        self._trace_count = 0
 
     # -- per-tile computation ------------------------------------------------
 
@@ -247,8 +248,31 @@ class PredictionEngine:
     # -- serving entry point -------------------------------------------------
 
     def _run(self, method, f, fa, fc, Xs):
+        # executes at TRACE time only: jit replays the compiled program on
+        # cache hits without re-entering this body, so the counter advances
+        # exactly once per new (method, query geometry) — the scheduler's
+        # zero-recompile-after-warmup contract is asserted against it
+        self._trace_count += 1
         return map_query_tiles(lambda Xq: self._tile(method, f, fa, fc, Xq),
                                Xs, self.chunk)
+
+    @property
+    def jit_cache_misses(self) -> int:
+        """Number of traces so far == distinct (method, query geometry)
+        pairs served. Flat across requests => every dispatch reused a
+        compiled program."""
+        return self._trace_count
+
+    def warm_slots(self, method: str, slots, *, input_dim: int | None = None,
+                   dtype=None):
+        """Pre-trace `method` for every query-batch geometry in `slots`
+        so a serving scheduler packing requests into those slots never
+        compiles on the request path."""
+        D = self.fitted.Xp.shape[-1] if input_dim is None else int(input_dim)
+        dt = self.fitted.Xp.dtype if dtype is None else dtype
+        for s in slots:
+            out = self.predict(method, jnp.zeros((int(s), D), dt))
+            jax.block_until_ready(out[0])
 
     def predict(self, method: str, Xs):
         """Serve one query batch -> (mean (Nt,), var (Nt,), info).

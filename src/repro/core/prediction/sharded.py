@@ -161,6 +161,7 @@ class ShardedEngine:
         self._centroids = np.asarray(jnp.mean(fitted.Xp, axis=1))
         self._rep = NamedSharding(mesh, P())
         self._compiled: dict[tuple, object] = {}
+        self._trace_count = 0
 
     # -- shard-local tile computation ---------------------------------------
 
@@ -280,6 +281,9 @@ class ShardedEngine:
         out_specs = (perq_specs, {"dac_residual": P()})
 
         def fn(*args):
+            # trace-time only (see PredictionEngine._run): one increment per
+            # new (full, method, query geometry) program
+            self._trace_count += 1
             f, *rest = args
             fa, fc = (rest[0], rest[1]) if grb else (None, None)
             Xs = rest[-1]
@@ -301,6 +305,7 @@ class ShardedEngine:
         grb = "grbcm" in method
 
         def fn(*args):
+            self._trace_count += 1                       # trace-time only
             f, *rest = args
             fa, fc = (rest[0], rest[1]) if grb else (None, None)
             Xr = rest[-1]                                # local (1, B, D)
@@ -316,6 +321,22 @@ class ShardedEngine:
                          in_specs=self._specs(grb) + (P(ax),),
                          out_specs=out_specs, check_rep=False)
         return jax.jit(prog)
+
+    @property
+    def jit_cache_misses(self) -> int:
+        """Traces so far == distinct (mode, method, geometry) programs
+        built. Flat across requests => every dispatch reused one."""
+        return self._trace_count
+
+    def warm_slots(self, method: str, slots, *, input_dim: int | None = None,
+                   dtype=None):
+        """Pre-trace full-fleet `method` for every query-batch geometry in
+        `slots` (serving schedulers call this at tenant registration)."""
+        D = self.fitted.Xp.shape[-1] if input_dim is None else int(input_dim)
+        dt = self.fitted.Xp.dtype if dtype is None else dtype
+        for s in slots:
+            out = self.predict(method, jnp.zeros((int(s), D), dt))
+            jax.block_until_ready(out[0])
 
     def _experts_args(self, method: str):
         if "grbcm" in method:

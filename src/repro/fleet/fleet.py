@@ -24,7 +24,10 @@ facade adds dispatch and state management, never new numerics):
   shard()      move a fitted fleet onto the agent-sharded engine in place
   save()/load()   `checkpoint.io` round trip of FittedExperts + FleetConfig
                + consensus graph (+ online window state)
-  to_server()  the async micro-batching `FrontDoor` over this fleet
+  to_server()  a one-tenant `launch.scheduler.ServingScheduler` over this
+               fleet (continuous slot batching; `submit`/`stats` keep the
+               v1 FrontDoor surface). Multi-tenant serving registers many
+               fleets on one scheduler via `ServingScheduler.add_fleet`.
 
 Capability validation happens at CONSTRUCTION (fleet/registry.py
 `validate_config`): a sharded NPAE-family fleet or a routed non-nn_* fleet
@@ -46,7 +49,7 @@ from ..core.gp import augment, communication_dataset, pack
 from ..core.online import OnlineExperts, from_batch, join, leave, observe_fleet
 from ..core.prediction import (FittedExperts, PredictionEngine, ShardedEngine,
                                fit_experts)
-from ..launch.frontdoor import FrontDoor
+from ..launch.scheduler import ServingScheduler
 from .config import FleetConfig
 from .registry import get_method, get_trainer, validate_config
 
@@ -278,15 +281,41 @@ class GPFleet:
         self._engine = None
         return self
 
+    def slot_geometry(self, method: str | None = None) -> tuple[int, int]:
+        """(align, max_slot) for serving schedulers packing this fleet:
+        slots are multiples of the engine chunk up to the method registry's
+        `max_slot` capability (NPAE-family per-query (M, M) solves cap out
+        earlier than the flat-tiling DAC family)."""
+        cfg = self.config
+        method = method if method is not None else cfg.method
+        base = method[4:] if method.startswith("cen_") else method
+        return int(cfg.chunk), int(get_method(base).max_slot)
+
+    @property
+    def jit_cache_misses(self) -> int:
+        """The serving engine's trace count (distinct compiled programs).
+        Flat across requests => zero recompiles; 0 before first serve."""
+        return 0 if self._engine is None else self._engine.jit_cache_misses
+
     def to_server(self, batch: int = 256, *, max_wait_ms: float = 2.0,
-                  method: str | None = None, queue_depth: int = 1024
-                  ) -> FrontDoor:
-        """The async micro-batching front door over this fleet: returns a
-        started `FrontDoor`; submit (Nq, D) requests, get Futures of
-        (mean, var). Use as a context manager to drain on exit."""
+                  method: str | None = None, queue_depth: int = 1024,
+                  continuous: bool = True, warm: bool = True,
+                  admission: str = "block", deadline_policy: str = "drop"
+                  ) -> ServingScheduler:
+        """A started one-tenant `ServingScheduler` over this fleet: submit
+        (Nq, D) requests, get Futures of (mean, var); use as a context
+        manager to drain on exit. `continuous=True` (default) serves the
+        quantized slot ladder up to `batch` rows — partial loads run
+        right-sized compiled programs; `continuous=False` reproduces the
+        v1 fixed-batch FrontDoor geometry. `warm=True` pre-compiles every
+        slot so the request path never traces."""
         self._require_fitted("to_server")
-        return FrontDoor(lambda Xs: self.predict(Xs, method=method), batch,
-                         max_wait_ms=max_wait_ms, queue_depth=queue_depth)
+        sched = ServingScheduler(max_wait_ms=max_wait_ms)
+        sched.add_fleet("default", self, method=method, max_slot=int(batch),
+                        continuous=continuous, queue_depth=queue_depth,
+                        admission=admission, deadline_policy=deadline_policy,
+                        warm=warm)
+        return sched
 
     # -- streaming / membership ----------------------------------------------
 

@@ -181,6 +181,10 @@ class MethodSpec(NamedTuple):
     routable: bool = False
     online_safe: bool = True
     needs_augmented_data: bool = False
+    # largest query-batch slot a serving scheduler should compile for this
+    # method: the NPAE family's per-query (M, M) solves make big batches
+    # memory-heavy, the DAC family tiles flat in the batch size
+    max_slot: int = 1024
 
 
 def _call_dac(fn):
@@ -237,9 +241,9 @@ METHODS: dict[str, MethodSpec] = {s.name: s for s in (
                _call_grbcm, shardable=True, online_safe=False,
                needs_augmented_data=True),
     MethodSpec("npae", "Alg. 10, eq. 18-21", "npae", dec.dec_npae,
-               _call_npae),
+               _call_npae, max_slot=256),
     MethodSpec("npae_star", "Alg. 11-12 (PM omega*)", "npae",
-               dec.dec_npae_star, _call_npae_star),
+               dec.dec_npae_star, _call_npae_star, max_slot=256),
     MethodSpec("nn_poe", "Alg. 13, eq. 39", "dac", dec.dec_nn_poe,
                _call_nn(dec.dec_nn_poe), shardable=True, routable=True),
     MethodSpec("nn_gpoe", "Alg. 14, eq. 39", "dac", dec.dec_nn_gpoe,
@@ -252,7 +256,7 @@ METHODS: dict[str, MethodSpec] = {s.name: s for s in (
                _call_nn_grbcm, shardable=True, routable=True,
                online_safe=False, needs_augmented_data=True),
     MethodSpec("nn_npae", "Alg. 18, eq. 39", "npae", dec.dec_nn_npae,
-               _call_nn_npae),
+               _call_nn_npae, max_slot=256),
 )}
 
 

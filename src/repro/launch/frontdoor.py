@@ -1,201 +1,81 @@
-"""Async micro-batching front door: request queue -> fixed-shape batches ->
-de-batched per-request futures.
+"""v1 front-door compat shim over the request-level scheduler.
 
-The serving engines (`PredictionEngine`, `ShardedEngine`) want fixed query
-shapes — one compiled program per batch geometry — while clients submit
-ragged requests at arbitrary times. `FrontDoor` bridges the two:
+The original `FrontDoor` was a single queue feeding fixed-shape
+micro-batches to one `predict_fn`. That machinery now lives in
+`repro.launch.scheduler.ServingScheduler` — continuous slot packing,
+multi-tenant round-robin, priorities, deadlines, admission control. This
+module keeps the v1 surface (`FrontDoor(predict_fn, batch)`, `submit`,
+`close`, `stats`, context manager) as a one-tenant scheduler pinned to a
+single fixed slot geometry, so existing callers and tests see byte-for-
+byte the old behavior:
 
-  submit(Xq) -> Future          clients enqueue (Nq_i, D) query arrays and
-                                immediately get a Future of (mean, var)
-  collector thread              drains the queue, coalescing requests until
-                                a full micro-batch of `batch` queries is
-                                pending or `max_wait_ms` has passed since
-                                the oldest undispatched request (latency
-                                bound under light load)
-  dispatch                      concatenates pending requests, pads the tail
-                                to the fixed `batch` shape (edge-replicating
-                                the last real query), runs `predict_fn` once
-                                per batch, slices the answers back per
-                                request, and resolves the futures
+  * every dispatch runs the one `(batch, D)` compiled program (zero
+    recompiles after the first), padding the tail by edge-replication;
+  * `submit` blocks for backpressure at `queue_depth` queued query rows
+    and raises `RuntimeError` (`SchedulerClosed`) after `close()`;
+  * `stats` is the tenant's `TenantStats`, a superset of the old
+    `FrontDoorStats` (same fields + drop/reject/latency counters).
 
-Every dispatch hits the engine's jit cache for the same compiled program —
-zero recompiles after the first batch regardless of request sizes. The
-routed CBNN path composes by passing `ShardedEngine.predict_routed` as
-`predict_fn` (routing happens per micro-batch inside the engine).
+The v1 bug where `submit()` held the lifecycle lock across a blocking
+queue `put()` — letting a backpressured submitter stall `close()` — is
+gone structurally: the scheduler's admission wait is a Condition wait
+that releases the lock, and `close()` wakes every waiter.
 
-This is an in-process front door (the paper's multi-robot deployments and
-our benchmarks drive it directly); an RPC server would own a FrontDoor and
-call submit per connection. `GPFleet.to_server()` is the one-line way to
-put a fitted fleet behind one.
+New code should use `ServingScheduler` (or `GPFleet.to_server()`, which
+returns one) directly; this shim exists so v1 call sites keep working.
 """
 from __future__ import annotations
 
-import queue
-import threading
-import time
 from concurrent.futures import Future
-from dataclasses import dataclass, field
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.launch.scheduler import ServingScheduler, TenantStats
 
+# v1 importers expect the stats type under this name
+FrontDoorStats = TenantStats
 
-@dataclass
-class FrontDoorStats:
-    """Serving counters (read after close): batches dispatched, queries
-    served, zero-padding fraction, wall time inside the engine."""
-    requests: int = 0
-    queries: int = 0
-    batches: int = 0
-    padded_queries: int = 0
-    engine_seconds: float = 0.0
-    _lock: threading.Lock = field(default_factory=threading.Lock,
-                                  repr=False)
-
-    @property
-    def padding_fraction(self) -> float:
-        total = self.queries + self.padded_queries
-        return self.padded_queries / total if total else 0.0
+__all__ = ["FrontDoor", "FrontDoorStats"]
 
 
 class FrontDoor:
-    """Micro-batching request front door over a `predict_fn`.
+    """Micro-batching request front door over a `predict_fn` (v1 API).
 
     predict_fn(Xs (batch, D)) -> (mean (batch,), var (batch,), info); bind
     the method name with functools.partial, e.g.
     `FrontDoor(partial(eng.predict, "rbcm"), batch=256)`.
+
+    Equivalent to a one-tenant `ServingScheduler` with the single slot
+    geometry `(batch,)`; `queue_depth` bounds queued query ROWS (v1
+    counted whole requests — rows is the resource the engine actually
+    spends, and it is what the scheduler's admission control meters).
     """
 
     def __init__(self, predict_fn, batch: int, *, max_wait_ms: float = 2.0,
                  queue_depth: int = 1024):
         self.predict_fn = predict_fn
         self.batch = int(batch)
-        self.max_wait_s = float(max_wait_ms) * 1e-3
-        self.stats = FrontDoorStats()
-        self._queue: queue.Queue = queue.Queue(maxsize=queue_depth)
-        self._closing = threading.Event()
-        # serializes the closed-check + enqueue in submit against close()
-        # setting the flag: once close holds this lock and sets _closing, no
-        # submit can slip a request past the final drain
-        self._lifecycle = threading.Lock()
-        self._leftover: list = []    # collector's undispatched items at exit
-        self._worker = threading.Thread(target=self._collector_loop,
-                                        name="gp-frontdoor", daemon=True)
-        self._worker.start()
+        self._sched = ServingScheduler(max_wait_ms=max_wait_ms)
+        self._tenant = self._sched.add_tenant(
+            "default", predict_fn, slots=(self.batch,),
+            queue_depth=queue_depth, admission="block")
 
-    # -- client side ---------------------------------------------------------
+    @property
+    def stats(self) -> TenantStats:
+        return self._tenant.stats
 
     def submit(self, Xq) -> Future:
         """Enqueue one request (Nq, D) -> Future of (mean (Nq,), var (Nq,)).
 
-        Raises RuntimeError after close(). Blocks (backpressure) when the
-        queue is at queue_depth.
+        Raises RuntimeError after close(). Blocks (backpressure) when
+        queue_depth query rows are already waiting.
         """
-        Xq = np.asarray(Xq)
-        if Xq.ndim != 2:
-            raise ValueError(f"request must be (Nq, D), got {Xq.shape}")
-        fut: Future = Future()
-        with self._lifecycle:
-            if self._closing.is_set():
-                raise RuntimeError("front door is closed")
-            self._queue.put((Xq, fut))
-        with self.stats._lock:
-            self.stats.requests += 1
-        return fut
+        return self._sched.add_request(Xq)
 
     def close(self, *, drain: bool = True):
         """Stop accepting requests; by default serve everything pending."""
-        with self._lifecycle:
-            self._closing.set()
-        self._worker.join()
-        pending = self._leftover + self._take_pending()
-        self._leftover = []
-        if drain:
-            self._dispatch(pending)
-        else:
-            for _, fut in pending:
-                fut.cancel()
+        self._sched.close(drain=drain)
 
     def __enter__(self):
         return self
 
     def __exit__(self, *exc):
         self.close()
-
-    # -- collector side ------------------------------------------------------
-
-    def _take_pending(self):
-        pending = []
-        while True:
-            try:
-                pending.append(self._queue.get_nowait())
-            except queue.Empty:
-                return pending
-
-    def _collector_loop(self):
-        pending: list = []
-        n_pending = 0
-        oldest = None
-        while not self._closing.is_set():
-            timeout = self.max_wait_s if oldest is None else \
-                max(1e-4, oldest + self.max_wait_s - time.monotonic())
-            try:
-                item = self._queue.get(timeout=timeout)
-                if oldest is None:
-                    oldest = time.monotonic()
-                pending.append(item)
-                n_pending += item[0].shape[0]
-            except queue.Empty:
-                pass
-            full = n_pending >= self.batch
-            expired = oldest is not None and \
-                time.monotonic() - oldest >= self.max_wait_s
-            if pending and (full or expired):
-                self._dispatch(pending)
-                pending, n_pending, oldest = [], 0, None
-        # closing: hand locally-held items to close() for the drain through
-        # a plain list — re-putting into the bounded queue could block
-        # forever with no consumer left
-        self._leftover = pending
-
-    def _dispatch(self, pending):
-        """Coalesce -> fixed-shape batches -> engine -> de-batch."""
-        if not pending:
-            return
-        arrays = [Xq for Xq, _ in pending]
-        sizes = [a.shape[0] for a in arrays]
-        allq = np.concatenate(arrays, axis=0)
-        total = allq.shape[0]
-        n_batches = -(-total // self.batch)
-        pad = n_batches * self.batch - total
-        if pad:
-            # edge-replicate so padded rows are a served workload, not X=0
-            allq = np.concatenate([allq, np.repeat(allq[-1:], pad, axis=0)])
-        batches = allq.reshape(n_batches, self.batch, allq.shape[1])
-        means, variances = [], []
-        t0 = time.monotonic()
-        try:
-            for b in batches:
-                mean, var, _ = self.predict_fn(jnp.asarray(b))
-                means.append(mean)
-                variances.append(var)
-            jax.block_until_ready(means[-1])
-            dt = time.monotonic() - t0
-            # device->host conversion can surface deferred runtime errors
-            # from EARLIER batches; keep it inside the guard so a failure
-            # fails the riders instead of killing the collector thread
-            mean = np.concatenate([np.asarray(m) for m in means])[:total]
-            var = np.concatenate([np.asarray(v) for v in variances])[:total]
-        except Exception as exc:  # fail every rider, not just the first
-            for _, fut in pending:
-                fut.set_exception(exc)
-            return
-        offs = np.concatenate([[0], np.cumsum(sizes)])
-        for (Xq, fut), a, b in zip(pending, offs[:-1], offs[1:]):
-            fut.set_result((mean[a:b], var[a:b]))
-        with self.stats._lock:
-            self.stats.queries += total
-            self.stats.padded_queries += pad
-            self.stats.batches += n_batches
-            self.stats.engine_seconds += dt

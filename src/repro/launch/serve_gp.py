@@ -24,10 +24,21 @@ Serving modes (the engine layer each path uses is in parentheses):
   --routed        CBNN query routing on the sharded fleet (nn_* methods,
                   paper §5.2 eq. 39): each query served by the shard
                   holding its most-correlated experts.
-  --async-door    serve through `GPFleet.to_server` (the FrontDoor
-                  collector thread): requests are SUBMITTED as they arrive
-                  and resolved through futures, micro-batches cut by size
+  --async-door    serve through `GPFleet.to_server` (the one-tenant
+                  serving scheduler): requests are SUBMITTED as they
+                  arrive and resolved through futures, slots cut by size
                   or the --max-wait-ms latency bound.
+  --scheduler     the request-level `ServingScheduler`: continuous slot
+                  batching with admission control, priorities and
+                  deadlines (--deadline-ms / --deadline-policy /
+                  --priority), and MULTIPLE resident fleets in one
+                  process — each `--tenant NAME=SPEC` (SPEC a method name
+                  for a synthetic fleet, or a GPFleet.save checkpoint
+                  dir) serves from its own jit cache, round-robined.
+                  `--loadgen RATE --duration S` drives it open-loop with
+                  Poisson arrivals per tenant instead of a fixed request
+                  list (admission switches to reject, so saturation shows
+                  up as rejected counts, not a blocked generator).
   --online        the streaming front door: between prediction micro-
                   batches every agent ingests --observe-every fresh
                   observations through `GPFleet.observe` (incremental
@@ -49,6 +60,7 @@ the engine speedup.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -165,6 +177,126 @@ def serve_async(args, fleet: GPFleet, method, requests):
           f"engine busy {st.engine_seconds*1e3:.1f} ms)")
 
 
+def _tenant_fleet(args, key, spec: str, ap):
+    """--tenant SPEC -> (fleet, served method). SPEC is a GPFleet.save
+    checkpoint dir (served with its saved config) or a method name (a
+    synthetic fleet built from the launcher flags)."""
+    if os.path.isdir(spec):
+        fleet = GPFleet.load(spec)
+        return fleet, fleet.config.method
+    method = spec
+    cfg_method = method[4:] if method.startswith("cen_") else method
+    if cfg_method not in method_names():
+        ap.error(f"--tenant spec {spec!r} is neither a checkpoint dir nor "
+                 f"a registered method ({sorted(method_names())})")
+    try:
+        cfg = FleetConfig(num_agents=args.agents, method=cfg_method,
+                          chunk=args.chunk, dac_iters=args.dac_iters,
+                          eta_nn=args.eta_nn, stream_mean=not args.no_stream)
+        validate_config(cfg)
+    except (ValueError, KeyError) as e:
+        ap.error(str(e))
+    Xp, yp = build_data(key, args.agents, args.per_agent)
+    fleet = GPFleet(cfg).fit(Xp, yp, key=jax.random.fold_in(key, 2),
+                             log_theta0=pack(*_TRUE_THETA), train=False)
+    return fleet, method
+
+
+def serve_scheduler(args, fleet: GPFleet, method, key, ap):
+    """Serve through the request-level `ServingScheduler`: every --tenant
+    is a resident fleet with its own compiled programs, interleaved
+    round-robin in ONE process; per-tenant p50/p99 and the zero-recompile
+    check are reported at exit."""
+    from .scheduler import (DeadlineExceeded, SchedulerSaturated,
+                            ServingScheduler)
+    if args.tenant:
+        tenants: dict = {}
+        for item in args.tenant:
+            if "=" not in item:
+                ap.error(f"--tenant wants NAME=SPEC, got {item!r}")
+            name, spec = item.split("=", 1)
+            if name in tenants:
+                ap.error(f"duplicate tenant name {name!r}")
+            tenants[name] = _tenant_fleet(
+                args, jax.random.fold_in(key, 7 + len(tenants)), spec, ap)
+    else:
+        tenants = {"default": (fleet, method)}
+
+    sched = ServingScheduler(max_wait_ms=args.max_wait_ms)
+    admission = "reject" if args.loadgen else "block"
+    for name, (fl, m) in tenants.items():
+        sched.add_fleet(name, fl, method=m, max_slot=args.batch,
+                        admission=admission,
+                        deadline_policy=args.deadline_policy)
+    # registration warmed every slot; serving must add zero traces
+    misses0 = {n: fl.jit_cache_misses for n, (fl, _) in tenants.items()}
+
+    rng = np.random.default_rng(0)
+    names = list(tenants)
+    futs = []
+    rejected = 0
+    t0 = time.time()
+    if args.loadgen:
+        # open-loop Poisson arrivals at --loadgen req/s PER TENANT for
+        # --duration seconds: submits happen on schedule regardless of
+        # completions, so overload appears as rejections + p99 growth
+        events = []
+        for name in names:
+            t = rng.exponential(1.0 / args.loadgen)
+            while t < args.duration:
+                events.append((t, name))
+                t += rng.exponential(1.0 / args.loadgen)
+        events.sort()
+        for i, (at, name) in enumerate(events):
+            lag = at - (time.time() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            n = int(rng.integers(1, max(2, args.batch // 2) + 1))
+            Xq = random_inputs(jax.random.fold_in(key, 500 + i), n)
+            try:
+                futs.append(sched.add_request(
+                    Xq, tenant=name, priority=args.priority,
+                    deadline_ms=args.deadline_ms))
+            except SchedulerSaturated:
+                rejected += 1
+    else:
+        for i in range(args.requests):
+            name = names[i % len(names)]
+            n = int(rng.integers(1, args.batch + 1))
+            Xq = random_inputs(jax.random.fold_in(key, 500 + i), n)
+            futs.append(sched.add_request(Xq, tenant=name,
+                                          priority=args.priority,
+                                          deadline_ms=args.deadline_ms))
+    served = dropped = 0
+    for f in futs:
+        try:
+            f.result(timeout=600)
+            served += 1
+        except DeadlineExceeded:
+            dropped += 1
+    sched.close()
+    dt = time.time() - t0
+    drive = (f"open-loop Poisson {args.loadgen:.0f} req/s/tenant x "
+             f"{args.duration:.1f} s" if args.loadgen
+             else f"{args.requests} requests")
+    print(f"scheduler: {len(tenants)} tenant(s), {drive} -> "
+          f"{served} served / {dropped} past-deadline / {rejected} rejected "
+          f"in {dt*1e3:.1f} ms")
+    for name, (fl, m) in tenants.items():
+        st = sched.tenant_stats[name]
+        p50, p99 = st.latency_ms(50, 99)
+        recompiles = fl.jit_cache_misses - misses0[name]
+        print(f"  {name} ({m}): {st.requests} req / {st.queries} q in "
+              f"{st.batches} slots, padding {100*st.padding_fraction:.1f}%, "
+              f"p50 {p50:.2f} ms, p99 {p99:.2f} ms, dropped {st.dropped}, "
+              f"lapsed {st.lapsed}, rejected {st.rejected}, "
+              f"engine busy {st.engine_seconds*1e3:.1f} ms, "
+              f"{recompiles} recompiles after warmup")
+    bad = [n for n, (fl, _) in tenants.items()
+           if fl.jit_cache_misses != misses0[n]]
+    assert not bad, f"serving recompiled for tenants {bad}"
+
+
 def compare_uncached(args, fleet: GPFleet, method, batches, total, dt):
     """Time the legacy per-call path (registry `legacy_call`: refactorizes
     every agent's kernel per request) on the same micro-batches."""
@@ -263,6 +395,30 @@ def main(argv=None):
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
                     help="async front door latency bound: max time a "
                          "request waits for its micro-batch to fill")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="serve through the request-level ServingScheduler "
+                         "(continuous slot batching, multi-tenant)")
+    ap.add_argument("--tenant", action="append", metavar="NAME=SPEC",
+                    help="register a resident fleet on the scheduler "
+                         "(repeatable). SPEC: a method name (synthetic "
+                         "fleet from the launcher flags) or a "
+                         "GPFleet.save checkpoint dir; without --tenant "
+                         "the launcher fleet serves as tenant 'default'")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; expiry follows "
+                         "--deadline-policy")
+    ap.add_argument("--deadline-policy", choices=("drop", "deprioritize"),
+                    default="drop",
+                    help="past-deadline work is dropped (Future raises "
+                         "DeadlineExceeded) or served only when no "
+                         "in-deadline work is pending")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="request priority (higher packs first)")
+    ap.add_argument("--loadgen", type=float, default=None, metavar="RATE",
+                    help="scheduler mode: open-loop Poisson load at RATE "
+                         "req/s per tenant instead of a fixed request list")
+    ap.add_argument("--duration", type=float, default=2.0,
+                    help="loadgen run length in seconds")
     ap.add_argument("--compare-uncached", action="store_true")
     ap.add_argument("--online", action="store_true",
                     help="interleave observe and predict streams (sliding-"
@@ -282,8 +438,18 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.routed:
         args.sharded = True
+    if (args.tenant or args.loadgen) and not args.scheduler:
+        ap.error("--tenant/--loadgen belong to scheduler serving; add "
+                 "--scheduler")
 
     key = jax.random.PRNGKey(0)
+
+    # multi-tenant scheduler serving builds its own fleets per --tenant
+    # spec; the single-fleet build below would be dead work
+    if args.scheduler and args.tenant:
+        serve_scheduler(args, None, None, key, ap)
+        return
+
     t0 = time.time()
     if args.from_checkpoint:
         fleet = GPFleet.load(args.from_checkpoint)
@@ -347,9 +513,13 @@ def main(argv=None):
     else:
         mode = "replicated"
 
+    print(f"fleet: M={M} agents x Ni={per_agent} points ({mode}); {built}")
+    if args.scheduler:
+        serve_scheduler(args, fleet, method, key, ap)
+        return
+
     requests = request_stream(key, args.requests, args.batch)
     batches, total, slices = micro_batches(requests, args.batch)
-    print(f"fleet: M={M} agents x Ni={per_agent} points ({mode}); {built}")
     print(f"queue: {args.requests} requests, {total} queries "
           f"-> {batches.shape[0]} micro-batches of {args.batch}")
 

@@ -1,0 +1,472 @@
+"""Front door v2: the request-level, multi-tenant serving scheduler.
+
+Acceptance gates:
+
+  * two resident GPFleet tenants served round-robin from ONE scheduler,
+    with ZERO jit recompiles after registration warmup — asserted via the
+    engines' jit-cache miss counters;
+  * continuous batching semantics: ragged requests stream across
+    fixed-geometry slots and come back stitched in order, a large request
+    spans several slots, answers match the direct engine call;
+  * scheduling policy: priority ordering, deadline drop vs deprioritize,
+    admission block (backpressure) vs reject (SchedulerSaturated);
+  * lifecycle: close(drain=False) cancels riders, a submitter blocked on
+    backpressure is woken (not deadlocked) by close() — the v1
+    submit-holds-lock-across-put bug stays dead.
+
+Policy tests drive the scheduler manually (autostart=False + step(force=
+True)) so they are deterministic; no sleeps for correctness, only for
+cross-thread handoff.
+"""
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.gp import pack
+from repro.data import random_inputs
+from repro.fleet import FleetConfig, GPFleet
+from repro.launch.scheduler import (DeadlineExceeded, SchedulerClosed,
+                                    SchedulerSaturated, ServingScheduler,
+                                    Tenant, slot_ladder, pick_slot)
+
+TRUE_LT = pack([1.2, 0.3], 1.3, 0.1)
+
+
+def echo_predict(Xs):
+    """Deterministic stand-in engine: mean = sum over features, var = 1."""
+    Xs = np.asarray(Xs)
+    return Xs.sum(axis=-1), np.ones(Xs.shape[0])
+
+
+def manual_sched(**kw):
+    return ServingScheduler(autostart=False, **kw)
+
+
+# ---------------------------------------------------------------------------
+# slot geometry
+# ---------------------------------------------------------------------------
+
+def test_slot_ladder_doubles_to_max():
+    assert slot_ladder(8, 64) == (8, 16, 32, 64)
+    assert slot_ladder(8, 50) == (8, 16, 32, 50)   # max always included
+    assert slot_ladder(16, 16) == (16,)
+    assert slot_ladder(32, 8) == (8,)              # max below align: pinned
+    with pytest.raises(ValueError):
+        slot_ladder(0, 64)
+    with pytest.raises(ValueError):
+        slot_ladder(8, -1)
+
+
+def test_pick_slot_exact_round_down_bounded_round_up_pad():
+    slots = (8, 16, 32)
+    assert pick_slot(slots, 8) == 8        # exact ladder fit
+    assert pick_slot(slots, 16) == 16
+    assert pick_slot(slots, 9) == 8        # round DOWN: 8 full rows now,
+    assert pick_slot(slots, 11) == 8       # remainder rides the next step
+    assert pick_slot(slots, 13) == 16      # >= 75% of the slot up: round UP,
+    assert pick_slot(slots, 31) == 32      # clear the backlog, bounded pad
+    assert pick_slot(slots, 1) == 8        # below the smallest slot: pad
+    assert pick_slot(slots, 32) == 32
+    assert pick_slot(slots, 1000) == 32
+    assert pick_slot(slots, 13, pad_budget=0.0) == 8   # strict round-down
+
+
+def test_tenant_validates_policies():
+    with pytest.raises(ValueError, match="admission"):
+        Tenant("t", echo_predict, (8,), queue_depth=8, admission="maybe",
+               deadline_policy="drop", max_wait_s=0.01)
+    with pytest.raises(ValueError, match="deadline_policy"):
+        Tenant("t", echo_predict, (8,), queue_depth=8, admission="block",
+               deadline_policy="shrug", max_wait_s=0.01)
+    with pytest.raises(ValueError, match="slots"):
+        Tenant("t", echo_predict, (), queue_depth=8, admission="block",
+               deadline_policy="drop", max_wait_s=0.01)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching semantics (manual stepping, echo engine)
+# ---------------------------------------------------------------------------
+
+def test_ragged_requests_stitched_in_order():
+    sched = manual_sched()
+    sched.add_tenant("t", echo_predict, slots=(4, 8))
+    rng = np.random.default_rng(0)
+    reqs = [rng.uniform(size=(int(n), 3)) for n in rng.integers(1, 7, 9)]
+    futs = [sched.add_request(r) for r in reqs]
+    while sched.step(force=True):
+        pass
+    for r, fut in zip(reqs, futs):
+        mean, var = fut.result(timeout=0)
+        np.testing.assert_allclose(mean, r.sum(axis=-1), atol=1e-12)
+        assert var.shape == (r.shape[0],)
+    sched.close()
+
+
+def test_large_request_spans_slots():
+    """A request bigger than the largest slot streams across steps and is
+    reassembled; intermediate steps leave the future unresolved."""
+    sched = manual_sched()
+    sched.add_tenant("t", echo_predict, slots=(4,))
+    Xq = np.arange(11.0 * 2).reshape(11, 2)     # 11 rows over 4-row slots
+    fut = sched.add_request(Xq)
+    assert sched.step(force=True) and not fut.done()
+    assert sched.step(force=True) and not fut.done()
+    assert sched.step(force=True) and fut.done()
+    mean, _ = fut.result(timeout=0)
+    np.testing.assert_allclose(mean, Xq.sum(axis=-1), atol=1e-12)
+    st = sched.stats
+    assert st.batches == 3 and st.queries == 11 and st.padded_queries == 1
+    sched.close()
+
+
+def test_padding_fraction_counts_pad_rows():
+    sched = manual_sched()
+    sched.add_tenant("t", echo_predict, slots=(8,))
+    sched.add_request(np.zeros((3, 2)))
+    sched.step(force=True)            # 3 real rows + 5 pad rows
+    st = sched.stats
+    assert st.queries == 3 and st.padded_queries == 5
+    assert st.padding_fraction == pytest.approx(5 / 8)
+    sched.close()
+
+
+def test_priority_orders_packing():
+    """Higher priority packs first; FIFO within a priority level."""
+    served = []
+
+    def spy(Xs):
+        served.append(int(np.asarray(Xs)[0, 0]))
+        return echo_predict(Xs)
+
+    sched = manual_sched()
+    sched.add_tenant("t", spy, slots=(2,))
+    tagged = lambda tag: np.full((2, 1), float(tag))
+    sched.add_request(tagged(0), priority=0)
+    sched.add_request(tagged(1), priority=5)
+    sched.add_request(tagged(2), priority=5)
+    sched.add_request(tagged(3), priority=9)
+    while sched.step(force=True):
+        pass
+    assert served == [3, 1, 2, 0]
+    sched.close()
+
+
+def test_round_robin_interleaves_tenants():
+    served = []
+    mk = lambda name: (lambda Xs, n=name: (served.append(n),
+                                           echo_predict(Xs))[1])
+    sched = manual_sched()
+    sched.add_tenant("a", mk("a"), slots=(4,))
+    sched.add_tenant("b", mk("b"), slots=(4,))
+    for _ in range(3):
+        sched.add_request(np.zeros((4, 2)), tenant="a")
+        sched.add_request(np.zeros((4, 2)), tenant="b")
+    while sched.step(force=True):
+        pass
+    assert served == ["a", "b", "a", "b", "a", "b"]
+    sched.close()
+
+
+def test_engine_error_fails_every_rider():
+    def boom(_):
+        raise RuntimeError("engine exploded")
+
+    sched = manual_sched()
+    sched.add_tenant("t", boom, slots=(8,))
+    futs = [sched.add_request(np.zeros((2, 2))) for _ in range(3)]
+    sched.step(force=True)
+    for fut in futs:
+        with pytest.raises(RuntimeError, match="exploded"):
+            fut.result(timeout=0)
+    sched.close()
+
+
+def test_request_validation():
+    sched = manual_sched()
+    sched.add_tenant("t", echo_predict, slots=(4,))
+    with pytest.raises(ValueError, match=r"\(Nq, D\)"):
+        sched.add_request(np.zeros(3))
+    with pytest.raises(ValueError, match="at least one"):
+        sched.add_request(np.zeros((0, 2)))
+    with pytest.raises(KeyError, match="unknown tenant"):
+        sched.add_request(np.zeros((1, 2)), tenant="nope")
+    sched.add_tenant("u", echo_predict, slots=(4,))
+    with pytest.raises(ValueError, match="tenant= is required"):
+        sched.add_request(np.zeros((1, 2)))      # ambiguous: 2 tenants
+    with pytest.raises(ValueError, match="single-tenant"):
+        sched.stats
+    sched.close()
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+def test_deadline_drop():
+    sched = manual_sched()
+    sched.add_tenant("t", echo_predict, slots=(4,), deadline_policy="drop")
+    late = sched.add_request(np.zeros((2, 2)), deadline_ms=0.01)
+    ok = sched.add_request(np.ones((2, 2)))
+    time.sleep(0.005)                  # let the 10us deadline lapse
+    sched.step(force=True)
+    with pytest.raises(DeadlineExceeded):
+        late.result(timeout=0)
+    assert ok.result(timeout=0)[0].shape == (2,)
+    st = sched.stats
+    assert st.dropped == 1 and st.queries == 2
+    sched.close()
+
+
+def test_deadline_deprioritize_serves_lapsed_last():
+    served = []
+
+    def spy(Xs):
+        served.append(int(np.asarray(Xs)[0, 0]))
+        return echo_predict(Xs)
+
+    sched = manual_sched()
+    sched.add_tenant("t", spy, slots=(2,), deadline_policy="deprioritize")
+    late = sched.add_request(np.full((2, 1), 7.0), deadline_ms=0.01,
+                             priority=100)
+    time.sleep(0.005)
+    fresh = sched.add_request(np.full((2, 1), 1.0), priority=0)
+    while sched.step(force=True):
+        pass
+    # the lapsed request lost its priority but was still served (after the
+    # in-deadline work), not dropped
+    assert served == [1, 7]
+    assert fresh.result(timeout=0)[0].shape == (2,)
+    assert late.result(timeout=0)[0].shape == (2,)
+    st = sched.stats
+    assert st.lapsed == 1 and st.dropped == 0
+    sched.close()
+
+
+def test_started_request_is_always_finished():
+    """Deadline expiry mid-stream never abandons a partially-served
+    request (policy=drop only applies before the first row dispatches)."""
+    sched = manual_sched()
+    sched.add_tenant("t", echo_predict, slots=(4,), deadline_policy="drop")
+    fut = sched.add_request(np.zeros((6, 2)), deadline_ms=50.0)
+    sched.step(force=True)             # rows 0-3 dispatched in-deadline
+    time.sleep(0.06)                   # now past the deadline, 2 rows left
+    sched.step(force=True)
+    assert fut.result(timeout=0)[0].shape == (6,)
+    assert sched.stats.dropped == 0
+    sched.close()
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_reject_raises_saturated():
+    sched = manual_sched()
+    sched.add_tenant("t", echo_predict, slots=(4,), queue_depth=8,
+                     admission="reject")
+    sched.add_request(np.zeros((8, 2)))
+    with pytest.raises(SchedulerSaturated):
+        sched.add_request(np.zeros((1, 2)))
+    assert sched.stats.rejected == 1
+    sched.step(force=True)             # drain one slot -> space again
+    sched.step(force=True)
+    sched.add_request(np.zeros((8, 2)))
+    sched.close()
+
+
+def test_backpressure_blocks_then_resumes():
+    """admission='block': an over-depth submit parks on the condition and
+    completes once a step frees queue space."""
+    sched = manual_sched()
+    sched.add_tenant("t", echo_predict, slots=(4,), queue_depth=4,
+                     admission="block")
+    sched.add_request(np.zeros((4, 2)))
+    state = {}
+
+    def blocked_submit():
+        state["fut"] = sched.add_request(np.ones((4, 2)))
+
+    th = threading.Thread(target=blocked_submit)
+    th.start()
+    time.sleep(0.05)
+    assert th.is_alive()               # backpressure engaged
+    sched.step(force=True)             # frees 4 rows -> waiter admitted
+    th.join(timeout=10.0)
+    assert not th.is_alive()
+    sched.step(force=True)
+    assert state["fut"].result(timeout=0)[0].shape == (4,)
+    sched.close()
+
+
+def test_close_wakes_blocked_submitter():
+    """close() must wake a submitter parked on backpressure with
+    SchedulerClosed — the v1 deadlock (submit holding the lifecycle lock
+    across a blocking queue put) is structurally impossible."""
+    sched = manual_sched()
+    sched.add_tenant("t", echo_predict, slots=(4,), queue_depth=4,
+                     admission="block")
+    sched.add_request(np.zeros((4, 2)))
+    errs = []
+
+    def blocked_submit():
+        try:
+            sched.add_request(np.ones((4, 2)))
+        except SchedulerClosed as e:
+            errs.append(e)
+
+    th = threading.Thread(target=blocked_submit)
+    th.start()
+    time.sleep(0.05)
+    assert th.is_alive()
+    sched.close(drain=False)           # must not deadlock
+    th.join(timeout=10.0)
+    assert not th.is_alive() and len(errs) == 1
+
+
+def test_deadline_drops_free_queue_space():
+    """A deadline drop releases its rows toward queue_depth (a waiter
+    blocked on backpressure is admitted even though nothing was served)."""
+    sched = manual_sched()
+    sched.add_tenant("t", echo_predict, slots=(4,), queue_depth=4,
+                     admission="block", deadline_policy="drop")
+    doomed = sched.add_request(np.zeros((4, 2)), deadline_ms=0.01)
+    time.sleep(0.005)
+    admitted = []
+    th = threading.Thread(
+        target=lambda: admitted.append(sched.add_request(np.ones((4, 2)))))
+    th.start()
+    time.sleep(0.05)
+    assert th.is_alive()
+    sched.step(force=True)             # drops the lapsed request
+    th.join(timeout=10.0)
+    assert not th.is_alive() and len(admitted) == 1
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=0)
+    sched.close()
+
+
+# ---------------------------------------------------------------------------
+# lifecycle
+# ---------------------------------------------------------------------------
+
+def test_close_drain_false_cancels_riders():
+    sched = manual_sched()
+    sched.add_tenant("t", echo_predict, slots=(4,))
+    futs = [sched.add_request(np.zeros((2, 2))) for _ in range(3)]
+    sched.close(drain=False)
+    for fut in futs:
+        assert fut.cancelled()
+        with pytest.raises(CancelledError):
+            fut.result(timeout=0)
+    with pytest.raises(SchedulerClosed):
+        sched.add_request(np.zeros((1, 2)))
+
+
+def test_close_drain_false_fails_partial_request_explicitly():
+    """A request with rows already streamed cannot be silently cancelled —
+    it gets SchedulerClosed so the caller knows rows were dispatched."""
+    sched = manual_sched()
+    sched.add_tenant("t", echo_predict, slots=(4,))
+    fut = sched.add_request(np.zeros((6, 2)))
+    sched.step(force=True)             # 4 of 6 rows served; 2 carried
+    sched.close(drain=False)
+    with pytest.raises(SchedulerClosed):
+        fut.result(timeout=0)
+
+
+def test_close_drain_serves_everything():
+    sched = ServingScheduler(max_wait_ms=1.0)     # real worker thread
+    sched.add_tenant("t", echo_predict, slots=(4, 8))
+    futs = [sched.add_request(np.full((3, 2), float(i))) for i in range(5)]
+    sched.close()                      # drain=True
+    for i, fut in enumerate(futs):
+        mean, _ = fut.result(timeout=0)
+        np.testing.assert_allclose(mean, np.full(3, 2.0 * i), atol=1e-12)
+
+
+def test_worker_thread_serves_without_stepping():
+    """autostart=True: the background worker dispatches on its own once
+    max_wait expires; no manual step() calls anywhere."""
+    with ServingScheduler(max_wait_ms=1.0) as sched:
+        sched.add_tenant("t", echo_predict, slots=(16,))
+        fut = sched.add_request(np.ones((3, 2)))
+        mean, _ = fut.result(timeout=60)
+        np.testing.assert_allclose(mean, np.full(3, 2.0), atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# two resident GPFleet tenants, zero recompiles (acceptance gate)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def two_fleets():
+    M = 4
+    X = random_inputs(jax.random.PRNGKey(0), 256)
+    from repro.data import gp_sample_field
+    from repro.core.gp import stripe_partition
+    _, y = gp_sample_field(jax.random.PRNGKey(1), X, TRUE_LT)
+    Xp, yp = stripe_partition(X, y, M)
+    mk = lambda method: GPFleet(
+        FleetConfig(num_agents=M, method=method, chunk=8, dac_iters=40)
+    ).fit(Xp, yp, log_theta0=TRUE_LT, train=False)
+    return mk("rbcm"), mk("poe")
+
+
+def test_two_fleet_tenants_zero_recompiles(two_fleets):
+    """The headline gate: two fleets resident in one scheduler, 14 ragged
+    requests each, every dispatch hits a warm jit cache (miss counters are
+    flat after registration warmup), answers match direct predicts."""
+    fa, fb = two_fleets
+    rng = np.random.default_rng(7)
+    with ServingScheduler(max_wait_ms=1.0) as sched:
+        sched.add_fleet("maps", fa, max_slot=32)
+        sched.add_fleet("robots", fb, max_slot=32)
+        misses = {"maps": fa.jit_cache_misses, "robots": fb.jit_cache_misses}
+        assert misses["maps"] > 0       # warmup did trace the ladder
+        futs = []
+        for i in range(14):
+            n = int(rng.integers(1, 40))
+            Xq = random_inputs(jax.random.PRNGKey(100 + i), n)
+            name = ("maps", "robots")[i % 2]
+            futs.append((name, Xq, sched.add_request(Xq, tenant=name)))
+        results = [(name, Xq, fut.result(timeout=300))
+                   for name, Xq, fut in futs]
+        assert fa.jit_cache_misses == misses["maps"]       # ZERO recompiles
+        assert fb.jit_cache_misses == misses["robots"]
+        stats = sched.tenant_stats
+        assert stats["maps"].requests == 7
+        assert stats["robots"].requests == 7
+    for name, Xq, (mean, var) in results:
+        fleet = fa if name == "maps" else fb
+        ref_m, ref_v, _ = fleet.predict(Xq)
+        np.testing.assert_allclose(mean, np.asarray(ref_m), atol=1e-8)
+        np.testing.assert_allclose(var, np.asarray(ref_v), atol=1e-8)
+
+
+def test_to_server_returns_scheduler(two_fleets):
+    """GPFleet.to_server() is now a one-tenant scheduler keeping the v1
+    FrontDoor submit/stats surface."""
+    fa, _ = two_fleets
+    with fa.to_server(batch=16) as srv:
+        assert isinstance(srv, ServingScheduler)
+        misses = fa.jit_cache_misses
+        futs = [srv.submit(random_inputs(jax.random.PRNGKey(i), 1 + i))
+                for i in range(4)]
+        for fut in futs:
+            fut.result(timeout=300)
+        assert fa.jit_cache_misses == misses
+        assert srv.stats.requests == 4
+
+
+def test_fleet_slot_geometry(two_fleets):
+    fa, _ = two_fleets
+    align, max_slot = fa.slot_geometry()
+    assert align == 8                       # engine chunk
+    assert max_slot >= align
+    # NPAE's per-query (M, M) solves cap its slot ceiling below the default
+    from repro.fleet import get_method
+    assert get_method("npae").max_slot < get_method("rbcm").max_slot

@@ -49,6 +49,14 @@ FROZEN = {
     "repro.checkpoint": [
         "save_checkpoint", "load_checkpoint", "latest_step", "restore",
     ],
+    "repro.launch.scheduler": [
+        "ServingScheduler", "Tenant", "TenantStats",
+        "DeadlineExceeded", "SchedulerClosed", "SchedulerSaturated",
+        "slot_ladder", "pick_slot",
+    ],
+    "repro.launch.frontdoor": [
+        "FrontDoor", "FrontDoorStats",
+    ],
 }
 
 # registry contents are public API too: a renamed trainer/method key breaks
