@@ -4,12 +4,20 @@ Benchmark JSONs accumulate across machines and backends (CPU CI today, a
 real accelerator ring tomorrow). Tagging each result dict with the jax
 backend and the serving topology it measured turns the artifacts into a
 cross-backend trajectory instead of a set of context-free numbers.
+
+`merge_json` additionally stamps the `repro.obs` default-registry snapshot
+under "obs_metrics" (requests, padding fraction, engine traces, ... —
+whatever the benchmarked run touched), so a BENCH_*.json carries the
+observability counters behind its numbers next to the envtags
+(docs/observability.md).
 """
 from __future__ import annotations
 
 import json
 
 import jax
+
+from repro.obs import default_registry
 
 
 def bench_tags(topology: str) -> dict:
@@ -28,13 +36,18 @@ def merge_json(json_path: str, updates: dict) -> dict:
     """Read-modify-write `json_path`: existing keys not in `updates`
     survive, so independent benchmark sections can share one artifact
     (e.g. run_sharded and run_scheduler both land in
-    BENCH_serving.json)."""
+    BENCH_serving.json). Also stamps the current `repro.obs` registry
+    snapshot as "obs_metrics" when any series exist (run.py enables the
+    registry so scheduler/engine counters are live during benchmarks)."""
     try:
         with open(json_path) as fh:
             full = json.load(fh)
     except (FileNotFoundError, json.JSONDecodeError):
         full = {}
     full.update(updates)
+    snap = default_registry().snapshot()
+    if snap:
+        full["obs_metrics"] = snap
     with open(json_path, "w") as fh:
         json.dump(full, fh, indent=2)
     return full

@@ -12,10 +12,15 @@ import sys
 
 import jax
 
+from repro.obs import default_registry
+
 jax.config.update("jax_enable_x64", True)
 
 
 def main() -> None:
+    # live metrics during benchmarks; merge_json stamps the snapshot into
+    # every BENCH_*.json artifact next to the envtags
+    default_registry().enable()
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",

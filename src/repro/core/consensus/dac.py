@@ -87,12 +87,18 @@ def dac_time_varying(w0: jax.Array, A_seq: jax.Array, eps: float):
 
 
 def dac_sharded(w_local: jax.Array, axis_name: str, iters: int,
-                eps: float | None = None):
+                eps: float | None = None, with_residuals: bool = False):
     """DAC on a cycle graph over a mesh axis via ppermute (sharded mode).
 
     Call inside shard_map; w_local is this agent's scalar/vector. Every agent
     exchanges with its ring neighbors only — this is the paper's neighbor-wise
     message pattern mapped onto the TPU ICI ring.
+
+    `with_residuals=True` additionally returns the per-round maximin spread
+    trajectory (iters,) — the sharded counterpart of `dac`'s residual ys,
+    replicated across devices (pmax/pmin) like `dac_sharded_residual`. The
+    diagnostic costs two extra collectives per round, so it is opt-in
+    (the engines' diagnostics mode; serving paths leave it off).
     """
     M = axis_size(axis_name)
     if eps is None:
@@ -109,10 +115,13 @@ def dac_sharded(w_local: jax.Array, axis_name: str, iters: int,
             # SAME single neighbor; counting it twice doubles the consensus
             # gain vs the simulated single-edge graph. Halve to match.
             nbr = 0.5 * nbr
-        return w + eps * nbr, None
+        w_next = w + eps * nbr
+        res = dac_sharded_residual(w_next, axis_name) if with_residuals \
+            else None
+        return w_next, res
 
-    w, _ = jax.lax.scan(body, w_local, None, length=iters)
-    return w
+    w, resids = jax.lax.scan(body, w_local, None, length=iters)
+    return (w, resids) if with_residuals else w
 
 
 def dac_sharded_residual(w_local: jax.Array, axis_name: str) -> jax.Array:

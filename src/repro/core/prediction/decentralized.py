@@ -228,9 +228,14 @@ def _rel_jitter(C, rel=1e-6):
 
 
 def dec_npae_from_terms(mu, kA, CA, prior_var, A, jor_iters=500,
-                        dac_iters=200, omega=None, jitter=1e-6):
+                        dac_iters=200, omega=None, jitter=1e-6,
+                        with_residuals=False):
     """DEC-NPAE (Alg. 10) core: JOR (strongly complete) + DAC on precomputed
-    NPAE terms. Lemma 2 default omega = 2/M * 0.999."""
+    NPAE terms. Lemma 2 default omega = 2/M * 0.999.
+
+    `with_residuals=True` (the engines' diagnostics mode) adds the full
+    per-round JOR residual trajectory "jor_residuals" (jor_iters,) — the
+    worst query per round — to info alongside the final "jor_residual"."""
     M = mu.shape[0]
     om = (2.0 / M) * 0.999 if omega is None else omega
 
@@ -239,17 +244,24 @@ def dec_npae_from_terms(mu, kA, CA, prior_var, A, jor_iters=500,
         def one(C, bm, bk):
             q, r = jor(_rel_jitter(C, jitter), jnp.stack([bm, bk], -1), om,
                        jor_iters)
-            return q[:, 0], q[:, 1], r[-1]
-        qm, qk, res = jax.vmap(one)(CA, b_mu, b_k)
-        return qm, qk, {"jor_residual": jnp.max(res), "omega": om}
+            return q[:, 0], q[:, 1], r
+        qm, qk, res = jax.vmap(one)(CA, b_mu, b_k)     # res (Nt, jor_iters)
+        info = {"jor_residual": jnp.max(res[:, -1]), "omega": om}
+        if with_residuals:
+            info["jor_residuals"] = jnp.max(res, axis=0)
+        return qm, qk, info
 
     return _npae_consensus(mu, kA, CA, prior_var, A, solver, dac_iters)
 
 
 def dec_npae_star_from_terms(mu, kA, CA, prior_var, A, jor_iters=500,
-                             dac_iters=200, pm_iters=100, jitter=1e-6):
+                             dac_iters=200, pm_iters=100, jitter=1e-6,
+                             with_residuals=False):
     """DEC-NPAE* (Alg. 12) core: PM/IPM estimate omega* = 2/(lmax+lmin) per
-    query, then JOR with the optimal relaxation (Lemma 3)."""
+    query, then JOR with the optimal relaxation (Lemma 3).
+
+    `with_residuals=True` adds the per-round "jor_residuals" trajectory
+    (see dec_npae_from_terms)."""
 
     def solver(CA, b_mu, b_k):
 
@@ -257,9 +269,12 @@ def dec_npae_star_from_terms(mu, kA, CA, prior_var, A, jor_iters=500,
             H = _rel_jitter(C, jitter)
             om = optimal_omega(H, pm_iters)
             q, r = jor(H, jnp.stack([bm, bk], -1), om, jor_iters)
-            return q[:, 0], q[:, 1], r[-1], om
+            return q[:, 0], q[:, 1], r, om
         qm, qk, res, oms = jax.vmap(one)(CA, b_mu, b_k)
-        return qm, qk, {"jor_residual": jnp.max(res), "omega": oms}
+        info = {"jor_residual": jnp.max(res[:, -1]), "omega": oms}
+        if with_residuals:
+            info["jor_residuals"] = jnp.max(res, axis=0)
+        return qm, qk, info
 
     return _npae_consensus(mu, kA, CA, prior_var, A, solver, dac_iters)
 

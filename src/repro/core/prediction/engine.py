@@ -36,6 +36,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ...obs import default_registry
 from ..gp.kernel import unpack
 from . import aggregation as agg
 from .cbnn import cbnn_mask_cached
@@ -173,8 +174,12 @@ class PredictionEngine:
         self.fitted_aug = fitted_aug
         self.fitted_comm = fitted_comm
         self.stream_mean = bool(stream_mean)
+        self.diagnostics = False
         self._compiled: dict[str, object] = {}
         self._trace_count = 0
+        self._traces_total = default_registry().counter(
+            "gp_jit_traces_total", "engine traces (compiled programs), by "
+            "engine and method")
 
     # -- per-tile computation ------------------------------------------------
 
@@ -201,6 +206,10 @@ class PredictionEngine:
             mean, v, info = _DAC_CORES[base](mu, var, pv, A,
                                              iters=self.dac_iters, mask=mask)
             red["dac_residual"] = info["dac_residuals"][-1]
+            if self.diagnostics:
+                # full per-round trajectory; max-reduced elementwise over
+                # tiles (worst tile per round), so shape stays (dac_iters,)
+                red["dac_residuals"] = info["dac_residuals"]
         elif base == "grbcm":
             mu_a, var_a = self._moments(fa, Xq)
             mu_c, var_c = self._moments(fc, Xq)
@@ -208,6 +217,8 @@ class PredictionEngine:
                 mu_a, var_a, mu_c[0], var_c[0], A, iters=self.dac_iters,
                 mask=mask)
             red["dac_residual"] = info["dac_residuals"][-1]
+            if self.diagnostics:
+                red["dac_residuals"] = info["dac_residuals"]
         elif method == "nn_npae":
             mu, kA, CA = self._terms(f, Xq)
             mean, v, info = dec_nn_npae_from_terms(
@@ -221,9 +232,13 @@ class PredictionEngine:
                                  pm_iters=self.pm_iters))
             mean, v, info = core(mu, kA, CA, pv, A, jor_iters=self.jor_iters,
                                  dac_iters=self.dac_iters,
-                                 jitter=self.npae_jitter)
+                                 jitter=self.npae_jitter,
+                                 with_residuals=self.diagnostics)
             red["dac_residual"] = info["dac_residuals"][-1]
             red["jor_residual"] = info["jor_residual"]
+            if self.diagnostics:
+                red["dac_residuals"] = info["dac_residuals"]
+                red["jor_residuals"] = info["jor_residuals"]
         elif method == "cen_npae":
             mu, kA, CA = self._terms(f, Xq)
             mean, v = agg.npae(mu, kA, CA, pv)
@@ -253,6 +268,7 @@ class PredictionEngine:
         # exactly once per new (method, query geometry) — the scheduler's
         # zero-recompile-after-warmup contract is asserted against it
         self._trace_count += 1
+        self._traces_total.inc(engine="replicated", method=method)
         return map_query_tiles(lambda Xq: self._tile(method, f, fa, fc, Xq),
                                Xs, self.chunk)
 
@@ -262,6 +278,17 @@ class PredictionEngine:
         pairs served. Flat across requests => every dispatch reused a
         compiled program."""
         return self._trace_count
+
+    def set_diagnostics(self, flag: bool):
+        """Toggle consensus-diagnostics capture: when on, `predict`'s info
+        carries the FULL per-round DAC residual trajectory ("dac_residuals",
+        worst tile per round) alongside the final scalars. The flag is
+        baked into traces, so toggling drops the compiled cache — leave it
+        off on serving paths and flip it for TraceRecorder runs."""
+        flag = bool(flag)
+        if flag != self.diagnostics:
+            self.diagnostics = flag
+            self._compiled.clear()
 
     def warm_slots(self, method: str, slots, *, input_dim: int | None = None,
                    dtype=None):

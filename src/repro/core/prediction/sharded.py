@@ -55,6 +55,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ...obs import default_registry
 from ..consensus.dac import (dac_sharded, dac_sharded_residual, ring_allmax,
                              ring_allsum)
 from .cbnn import _mask_from_scores, cbnn_scores_cached
@@ -160,8 +161,12 @@ class ShardedEngine:
         # -> owning shard); tiny, so they live on the host
         self._centroids = np.asarray(jnp.mean(fitted.Xp, axis=1))
         self._rep = NamedSharding(mesh, P())
+        self.diagnostics = False
         self._compiled: dict[tuple, object] = {}
         self._trace_count = 0
+        self._traces_total = default_registry().counter(
+            "gp_jit_traces_total", "engine traces (compiled programs), by "
+            "engine and method")
 
     # -- shard-local tile computation ---------------------------------------
 
@@ -231,9 +236,19 @@ class ShardedEngine:
         w0, mu_c, var_c = self._local_payloads(method, f, fa, fc, gidx, Xq,
                                                mask, ring=True)
         part = jnp.sum(w0, axis=0)                      # (chunk, 3) partial
+        res_traj = None
         if self.consensus == "exact":
             sums = ring_allsum(part, ax)
             res = jnp.zeros((), Xq.dtype)
+            if self.diagnostics:
+                res_traj = jnp.zeros((self.dac_iters,), Xq.dtype)
+        elif self.diagnostics:
+            # diagnostics mode: per-round maximin spread trajectory, at the
+            # cost of two extra collectives per DAC round
+            w, res_traj = dac_sharded(part, ax, self.dac_iters,
+                                      with_residuals=True)
+            res = res_traj[-1]
+            sums = self.ndev * w
         else:
             w = dac_sharded(part, ax, self.dac_iters)   # ~ total / ndev
             res = dac_sharded_residual(w, ax)
@@ -245,7 +260,10 @@ class ShardedEngine:
         perq = {"mean": mean, "var": v}
         if nn:
             perq["mask_t"] = mask.T                     # (chunk, Mb)
-        return perq, {"dac_residual": jax.lax.pmax(res, ax)}
+        red = {"dac_residual": jax.lax.pmax(res, ax)}
+        if res_traj is not None:
+            red["dac_residuals"] = res_traj
+        return perq, red
 
     def _routed_tile(self, method, f, fa, fc, gidx, Xq):
         """One query tile, routed mode: this device's block ONLY — local
@@ -278,12 +296,16 @@ class ShardedEngine:
         perq_specs = {"mean": P(), "var": P()}
         if nn:
             perq_specs["mask_t"] = P(None, ax)
-        out_specs = (perq_specs, {"dac_residual": P()})
+        red_specs = {"dac_residual": P()}
+        if self.diagnostics:
+            red_specs["dac_residuals"] = P()
+        out_specs = (perq_specs, red_specs)
 
         def fn(*args):
             # trace-time only (see PredictionEngine._run): one increment per
             # new (full, method, query geometry) program
             self._trace_count += 1
+            self._traces_total.inc(engine="sharded", method=method)
             f, *rest = args
             fa, fc = (rest[0], rest[1]) if grb else (None, None)
             Xs = rest[-1]
@@ -306,6 +328,7 @@ class ShardedEngine:
 
         def fn(*args):
             self._trace_count += 1                       # trace-time only
+            self._traces_total.inc(engine="sharded", method=method)
             f, *rest = args
             fa, fc = (rest[0], rest[1]) if grb else (None, None)
             Xr = rest[-1]                                # local (1, B, D)
@@ -327,6 +350,17 @@ class ShardedEngine:
         """Traces so far == distinct (mode, method, geometry) programs
         built. Flat across requests => every dispatch reused one."""
         return self._trace_count
+
+    def set_diagnostics(self, flag: bool):
+        """Toggle consensus-diagnostics capture: when on, full-fleet
+        `predict` info additionally carries the per-round ring-DAC maximin
+        spread trajectory ("dac_residuals", worst tile per round). Baked
+        into traces — toggling drops the compiled cache; leave it off on
+        serving paths."""
+        flag = bool(flag)
+        if flag != self.diagnostics:
+            self.diagnostics = flag
+            self._compiled.clear()
 
     def warm_slots(self, method: str, slots, *, input_dim: int | None = None,
                    dtype=None):

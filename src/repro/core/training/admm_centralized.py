@@ -14,7 +14,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .cache import make_local_grad
+from .cache import local_nll, make_local_grad
 
 
 def _z_update(thetas, psis, rho):
@@ -22,15 +22,43 @@ def _z_update(thetas, psis, rho):
     return jnp.mean(thetas + psis / rho, axis=0)
 
 
-@partial(jax.jit, static_argnames=("iters", "nested_iters", "grad_fn"))
+def _central_diag(thetas, z, z_prev, resid, rho, aux):
+    """Per-iteration diagnostics ys for the centralized loops (diag=True):
+    primal = max_i ||theta_i - z|| (the `residuals` quantity), dual =
+    rho * max|z - z_prev| (the z-update step scaled by rho, the standard
+    ADMM dual residual), per-agent NLL, and the theta trajectory."""
+    return {
+        "residuals": resid,
+        "primal_residuals": resid,
+        "dual_residuals": rho * jnp.max(jnp.abs(z - z_prev)),
+        "nll": jax.vmap(local_nll)(thetas, aux),
+        "theta_trajectory": thetas,
+    }
+
+
+def _central_info(zs, ys):
+    """Assemble the diag=True info dict: the v0 keys stay at the top level,
+    the extended per-iteration series ride info['diagnostics']."""
+    return {"z_history": zs, "residuals": ys["residuals"],
+            "diagnostics": dict(ys)}
+
+
+@partial(jax.jit,
+         static_argnames=("iters", "nested_iters", "grad_fn", "diag"))
 def train_c_gp(log_theta0, Xp, yp, rho: float = 500.0, iters: int = 100,
-               nested_iters: int = 10, nested_lr: float = 1e-5, grad_fn=None):
+               nested_iters: int = 10, nested_lr: float = 1e-5, grad_fn=None,
+               diag: bool = False):
     """c-GP (eq. 24): exact consensus ADMM, nested GD per agent per round.
 
     Returns (z, thetas, history dict). The nested problem (24b) is solved with
     `nested_iters` plain GD steps (the paper uses GD with alpha=1e-5); the
     local NLL gradient inside each step comes from the grad_fn hook, the
     penalty terms are analytic.
+
+    `diag=True` (static) additionally carries per-iteration diagnostics
+    through the scan — primal/dual residuals, per-agent NLL, and the theta
+    trajectory — returned under info["diagnostics"] for `TraceRecorder`.
+    The diag=False program is unchanged (no diagnostics in its carry/ys).
     """
     M = Xp.shape[0]
     D2 = log_theta0.shape[0]
@@ -50,25 +78,36 @@ def train_c_gp(log_theta0, Xp, yp, rho: float = 500.0, iters: int = 100,
         return th
 
     def body(carry, _):
-        thetas, psis = carry
+        thetas, psis = carry[0], carry[1]
         z = _z_update(thetas, psis, rho)                        # (24a)
         thetas = jax.vmap(nested, in_axes=(0, None, 0, 0))(
             thetas, z, psis, aux)                               # (24b)
         psis = psis + rho * (thetas - z)                        # (24c)
         resid = jnp.max(jnp.linalg.norm(thetas - z, axis=1))
-        return (thetas, psis), (z, resid)
+        if not diag:
+            return (thetas, psis), (z, resid)
+        d = _central_diag(thetas, z, carry[2], resid, rho, aux)
+        return (thetas, psis, z), (z, d)
 
-    (thetas, psis), (zs, resids) = jax.lax.scan(
-        body, (thetas, psis), None, length=iters)
-    return zs[-1], thetas, {"z_history": zs, "residuals": resids}
+    if not diag:
+        (thetas, psis), (zs, resids) = jax.lax.scan(
+            body, (thetas, psis), None, length=iters)
+        return zs[-1], thetas, {"z_history": zs, "residuals": resids}
+    (thetas, psis, _), (zs, ys) = jax.lax.scan(
+        body, (thetas, psis, thetas[0]), None, length=iters)
+    return zs[-1], thetas, _central_info(zs, ys)
 
 
-@partial(jax.jit, static_argnames=("iters", "grad_fn"))
+@partial(jax.jit, static_argnames=("iters", "grad_fn", "diag"))
 def train_apx_gp(log_theta0, Xp, yp, rho: float = 500.0, L: float = 5000.0,
-                 iters: int = 100, grad_fn=None):
+                 iters: int = 100, grad_fn=None, diag: bool = False):
     """apx-GP (eq. 26): proximal ADMM with analytic theta-update.
 
     theta_i = z - (grad L_i(z) + psi_i) / (rho + L_i)   (26b)
+
+    `diag=True` (static) carries per-iteration primal/dual residuals,
+    per-agent NLL, and the theta trajectory through the scan, returned
+    under info["diagnostics"] (see train_c_gp).
     """
     M = Xp.shape[0]
     thetas = jnp.broadcast_to(log_theta0, (M, log_theta0.shape[0])).astype(Xp.dtype)
@@ -78,25 +117,33 @@ def train_apx_gp(log_theta0, Xp, yp, rho: float = 500.0, L: float = 5000.0,
     shared_grads = jax.vmap(lgrad, in_axes=(None, 0))
 
     def body(carry, _):
-        thetas, psis = carry
+        thetas, psis = carry[0], carry[1]
         z = _z_update(thetas, psis, rho)                        # (26a)
         g = shared_grads(z, aux)                                # grad L_i(z)
         thetas = z[None] - (g + psis) / (rho + L)               # (26b)
         psis = psis + rho * (thetas - z[None])                  # (26c)
         resid = jnp.max(jnp.linalg.norm(thetas - z[None], axis=1))
-        return (thetas, psis), (z, resid)
+        if not diag:
+            return (thetas, psis), (z, resid)
+        d = _central_diag(thetas, z, carry[2], resid, rho, aux)
+        return (thetas, psis, z), (z, d)
 
-    (thetas, psis), (zs, resids) = jax.lax.scan(
-        body, (thetas, psis), None, length=iters)
-    return zs[-1], thetas, {"z_history": zs, "residuals": resids}
+    if not diag:
+        (thetas, psis), (zs, resids) = jax.lax.scan(
+            body, (thetas, psis), None, length=iters)
+        return zs[-1], thetas, {"z_history": zs, "residuals": resids}
+    (thetas, psis, _), (zs, ys) = jax.lax.scan(
+        body, (thetas, psis, thetas[0]), None, length=iters)
+    return zs[-1], thetas, _central_info(zs, ys)
 
 
 def train_gapx_gp(log_theta0, Xp_aug, yp_aug, rho: float = 500.0,
-                  L: float = 5000.0, iters: int = 100, grad_fn=None):
+                  L: float = 5000.0, iters: int = 100, grad_fn=None,
+                  diag: bool = False):
     """gapx-GP (Alg. 1): apx-GP on the augmented datasets D_{+i}.
 
     Callers build (Xp_aug, yp_aug) with gp.partition.communication_dataset +
     augment (sample -> flood -> union), then this is exactly apx-GP.
     """
     return train_apx_gp(log_theta0, Xp_aug, yp_aug, rho=rho, L=L, iters=iters,
-                        grad_fn=grad_fn)
+                        grad_fn=grad_fn, diag=diag)

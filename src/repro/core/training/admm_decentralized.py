@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from ..consensus.graph import axis_size
 
 from ..gp.nll import nll
-from .cache import make_local_grad
+from .cache import local_nll, make_local_grad
 
 
 def _graph_terms(A: jax.Array, dtype):
@@ -41,13 +41,49 @@ def _graph_terms(A: jax.Array, dtype):
     return A.astype(dtype), jnp.sum(A, axis=1).astype(dtype)
 
 
-@partial(jax.jit, static_argnames=("iters", "nested_iters", "grad_fn"))
+def _dec_diag(thetas_next, thetas_prev, Af, rho, aux):
+    """Per-iteration diagnostics ys for the decentralized loops (diag=True).
+
+    primal = worst EDGE disagreement max_{(i,j) in E} |theta_i - theta_j|
+    (the consensus constraints of P4 are edge-wise theta_i = theta_j); dual
+    = rho * max |theta^{s+1} - theta^s| (the iterate step scaled by rho);
+    plus per-agent NLL and the theta trajectory. The (M, M, K) edge-
+    difference broadcast is fine at diagnostic fleet sizes and never runs
+    in the diag=False program.
+    """
+    diffs = jnp.abs(thetas_next[:, None, :] - thetas_next[None, :, :])
+    primal = jnp.max(diffs * Af[:, :, None])
+    disagreement = jnp.max(
+        jnp.abs(thetas_next - jnp.mean(thetas_next, axis=0)))
+    return {
+        "residuals": disagreement,
+        "primal_residuals": primal,
+        "dual_residuals": rho * jnp.max(jnp.abs(thetas_next - thetas_prev)),
+        "nll": jax.vmap(local_nll)(thetas_next, aux),
+        "theta_trajectory": thetas_next,
+    }
+
+
+def _dec_info(ys):
+    """diag=True info dict: `residuals` stays the v0 top-level key, the
+    extended per-iteration series ride info['diagnostics']."""
+    return {"residuals": ys["residuals"], "diagnostics": dict(ys)}
+
+
+@partial(jax.jit,
+         static_argnames=("iters", "nested_iters", "grad_fn", "diag"))
 def train_dec_c_gp(log_theta0, Xp, yp, A, rho: float = 500.0,
                    iters: int = 100, nested_iters: int = 10,
-                   nested_lr: float = 1e-5, grad_fn=None):
+                   nested_lr: float = 1e-5, grad_fn=None,
+                   diag: bool = False):
     """DEC-c-GP (Alg. 2, eq. 30). Nested problem solved by GD with the
     gradient of Appendix A.2 (local NLL gradient through the grad_fn hook,
-    quadratic/linear terms analytic)."""
+    quadratic/linear terms analytic).
+
+    `diag=True` (static) carries per-iteration diagnostics through the scan
+    — edge-wise primal residuals, dual residuals, per-agent NLL, theta
+    trajectory — under info["diagnostics"]; the diag=False program is
+    unchanged."""
     M = Xp.shape[0]
     thetas = jnp.broadcast_to(log_theta0, (M, log_theta0.shape[0])).astype(Xp.dtype)
     p = jnp.zeros_like(thetas)
@@ -75,11 +111,14 @@ def train_dec_c_gp(log_theta0, Xp, yp, A, rho: float = 500.0,
         p = p + rho * (deg[:, None] * thetas - nbr_sum)             # (30a)
         thetas_next = jax.vmap(nested, in_axes=(0, 0, 0, 0, 0, 0))(
             thetas, thetas, nbr_sum, deg, p, aux)                   # (30b)
+        if diag:
+            return (thetas_next, p), _dec_diag(thetas_next, thetas, Af,
+                                               rho, aux)
         disagreement = jnp.max(jnp.abs(thetas_next - jnp.mean(thetas_next, 0)))
         return (thetas_next, p), disagreement
 
-    (thetas, p), resids = jax.lax.scan(body, (thetas, p), None, length=iters)
-    return thetas, {"residuals": resids}
+    (thetas, p), ys = jax.lax.scan(body, (thetas, p), None, length=iters)
+    return thetas, (_dec_info(ys) if diag else {"residuals": ys})
 
 
 def dec_apx_update(thetas, p, grads, nbr_sum, deg, rho, kappa):
@@ -96,14 +135,19 @@ def dec_apx_update(thetas, p, grads, nbr_sum, deg, rho, kappa):
     return thetas_next, p_next
 
 
-@partial(jax.jit, static_argnames=("iters", "grad_fn"))
+@partial(jax.jit, static_argnames=("iters", "grad_fn", "diag"))
 def train_dec_apx_gp(log_theta0, Xp, yp, A, rho: float = 500.0,
-                     kappa: float = 5000.0, iters: int = 100, grad_fn=None):
+                     kappa: float = 5000.0, iters: int = 100, grad_fn=None,
+                     diag: bool = False):
     """DEC-apx-GP (Alg. 3 / Theorem 1): closed-form decentralized ADMM.
 
     The per-iteration hot path: the cached-geometry gradient (grad_fn hook)
     vmapped across the agent axis, one adjacency matmul, the closed-form
-    sweep of eq. (34)."""
+    sweep of eq. (34).
+
+    `diag=True` (static) carries per-iteration diagnostics through the scan
+    (see train_dec_c_gp) under info["diagnostics"]; diag=False programs are
+    unchanged."""
     M = Xp.shape[0]
     thetas = jnp.broadcast_to(log_theta0, (M, log_theta0.shape[0])).astype(Xp.dtype)
     p = jnp.zeros_like(thetas)
@@ -116,20 +160,27 @@ def train_dec_apx_gp(log_theta0, Xp, yp, A, rho: float = 500.0,
         thetas, p = carry
         nbr_sum = Af @ thetas
         grads = fleet_grads(thetas, aux)
-        thetas, p = dec_apx_update(thetas, p, grads, nbr_sum, deg, rho, kappa)
-        disagreement = jnp.max(jnp.abs(thetas - jnp.mean(thetas, axis=0)))
-        return (thetas, p), disagreement
+        thetas_next, p = dec_apx_update(thetas, p, grads, nbr_sum, deg,
+                                        rho, kappa)
+        if diag:
+            return (thetas_next, p), _dec_diag(thetas_next, thetas, Af,
+                                               rho, aux)
+        disagreement = jnp.max(
+            jnp.abs(thetas_next - jnp.mean(thetas_next, axis=0)))
+        return (thetas_next, p), disagreement
 
-    (thetas, p), resids = jax.lax.scan(body, (thetas, p), None, length=iters)
-    return thetas, {"residuals": resids}
+    (thetas, p), ys = jax.lax.scan(body, (thetas, p), None, length=iters)
+    return thetas, (_dec_info(ys) if diag else {"residuals": ys})
 
 
 def train_dec_gapx_gp(log_theta0, Xp_aug, yp_aug, A, rho: float = 500.0,
-                      kappa: float = 5000.0, iters: int = 100, grad_fn=None):
+                      kappa: float = 5000.0, iters: int = 100, grad_fn=None,
+                      diag: bool = False):
     """DEC-gapx-GP (Alg. 4): sample -> flood -> augment (done by caller via
     gp.partition), then DEC-apx-GP on D_{+i}."""
     return train_dec_apx_gp(log_theta0, Xp_aug, yp_aug, A,
-                            rho=rho, kappa=kappa, iters=iters, grad_fn=grad_fn)
+                            rho=rho, kappa=kappa, iters=iters,
+                            grad_fn=grad_fn, diag=diag)
 
 
 # ---------------------------------------------------------------------------
@@ -177,6 +228,14 @@ def train_dec_apx_gp_sharded(mesh, axis_name, log_theta0, Xp, yp,
     Xp, yp carry the agent axis which is sharded over the mesh axis. The
     grad_fn hook resolves PER SHARD: each agent builds its own TrainingCache
     inside the shard_map body, once, before the iteration scan.
+
+    Returns (thetas, info) with the SAME info["residuals"] series as the
+    simulated loops — the per-iteration max consensus disagreement
+    max_i |theta_i - mean(theta)|, computed with pmean/pmax collectives
+    inside the scan (replicated across devices) — plus info["p"], the final
+    dual variables. Against `train_dec_apx_gp` on the matching cycle graph
+    the series agrees to reduction-order roundoff
+    (tests/test_training_admm.py).
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
@@ -188,7 +247,7 @@ def train_dec_apx_gp_sharded(mesh, axis_name, log_theta0, Xp, yp,
 
     @partial(shard_map, mesh=mesh,
              in_specs=(P(axis_name), P(axis_name), P(axis_name), P(axis_name)),
-             out_specs=(P(axis_name), P(axis_name)))
+             out_specs=(P(axis_name), P(axis_name), P()), check_rep=False)
     def run(thetas, p, Xl, yl):
         aux = jax.tree.map(lambda a: a[0], prepare(Xl, yl))
 
@@ -200,8 +259,16 @@ def train_dec_apx_gp_sharded(mesh, axis_name, log_theta0, Xp, yp,
             th2, pp2 = dec_apx_gp_sharded_step(
                 th[0], pp[0], Xl[0], yl[0], axis_name, rho=rho, kappa=kappa,
                 local_grad=local_grad)
-            return (th2[None], pp2[None]), None
-        (th, pp), _ = jax.lax.scan(body, (thetas, p), None, length=iters)
-        return th, pp
+            # the simulated loops' residual, on the ring: mean over the
+            # agent (mesh) axis, worst per-agent deviation via pmax — the
+            # result is replicated, so it exits through a P() out_spec
+            mean = jax.lax.pmean(th2, axis_name)
+            disagreement = jax.lax.pmax(jnp.max(jnp.abs(th2 - mean)),
+                                        axis_name)
+            return (th2[None], pp2[None]), disagreement
+        (th, pp), resids = jax.lax.scan(body, (thetas, p), None,
+                                        length=iters)
+        return th, pp, resids
 
-    return run(thetas0, p0, Xp, yp)
+    thetas, p, resids = run(thetas0, p0, Xp, yp)
+    return thetas, {"residuals": resids, "p": p}

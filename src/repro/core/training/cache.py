@@ -95,6 +95,17 @@ def nll_grad_cached(log_theta, d2u, y, jitter: float = 1e-8,
                           interpret=interpret)
 
 
+def local_nll(log_theta, aux, jitter: float = 1e-8):
+    """Per-agent NLL VALUE from whatever aux `make_local_grad`'s prepare
+    built — TrainingCache (fused path) or the raw (Xi, yi) tuple (autodiff /
+    custom hooks). The diagnostics (`diag=True`) mode of the ADMM loops
+    vmaps this over the agent axis to carry per-iteration NLL through the
+    scan without a second geometry pass."""
+    if isinstance(aux, TrainingCache):
+        return nll_from_cache(log_theta, aux.d2u, aux.y, jitter=jitter)
+    return nll(log_theta, *aux, jitter=jitter)
+
+
 def make_local_grad(grad_fn=None, jitter: float = 1e-8,
                     cache_limit_mb: float = 4096.0):
     """Resolve the `grad_fn` hook of the ADMM training loops.

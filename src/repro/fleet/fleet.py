@@ -28,6 +28,9 @@ facade adds dispatch and state management, never new numerics):
                fleet (continuous slot batching; `submit`/`stats` keep the
                v1 FrontDoor surface). Multi-tenant serving registers many
                fleets on one scheduler via `ServingScheduler.add_fleet`.
+  metrics()    `repro.obs` default-registry snapshot + a fleet-shape block
+               (docs/observability.md); `fit(trace=TraceRecorder())`
+               records per-iteration training diagnostics the same way.
 
 Capability validation happens at CONSTRUCTION (fleet/registry.py
 `validate_config`): a sharded NPAE-family fleet or a routed non-nn_* fleet
@@ -43,6 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from ..checkpoint.io import restore, save_checkpoint
+from ..obs import default_registry
 from ..core.consensus import (complete_graph, cycle_graph, path_graph,
                               random_connected_graph)
 from ..core.gp import augment, communication_dataset, pack
@@ -147,7 +151,7 @@ class GPFleet:
         return self._comm_data
 
     def fit(self, Xp, yp, *, key=None, log_theta0=None, grad_fn=None,
-            train: bool = True) -> "GPFleet":
+            train: bool = True, trace=None) -> "GPFleet":
         """Train hyperparameters (trainer registry) and cache the serving
         factors. Returns self (chainable).
 
@@ -156,6 +160,10 @@ class GPFleet:
         method needs one (default PRNGKey(0): deterministic).
         `train=False` skips training and serves from `log_theta0` (default:
         config.theta0) — the "true hyperparameters known" scenario.
+        `trace` (a `repro.obs.TraceRecorder`) switches the trainer's
+        diagnostics mode on (`diag=True`: per-iteration NLL, primal/dual
+        residuals, theta trajectory carried through the scan) and records
+        the resulting info dict on the recorder after the fit.
         """
         cfg = self.config
         Xp, yp = jnp.asarray(Xp), jnp.asarray(yp)
@@ -185,7 +193,11 @@ class GPFleet:
         else:
             Xt, yt = (Xa, ya) if spec.needs_augmented_data else (Xp, yp)
             self.log_theta, self.thetas, self.train_info = spec.run(
-                cfg, lt0, Xt, yt, self.A, mesh=self.mesh, grad_fn=grad_fn)
+                cfg, lt0, Xt, yt, self.A, mesh=self.mesh, grad_fn=grad_fn,
+                diag=trace is not None)
+            if trace is not None:
+                trace.record(cfg.trainer, self.train_info,
+                             num_agents=cfg.num_agents, method=cfg.method)
         self._cache_factors(Xp, yp)
         return self
 
@@ -296,6 +308,24 @@ class GPFleet:
         """The serving engine's trace count (distinct compiled programs).
         Flat across requests => zero recompiles; 0 before first serve."""
         return 0 if self._engine is None else self._engine.jit_cache_misses
+
+    def metrics(self) -> dict:
+        """Observability snapshot: the process-wide `repro.obs` default
+        registry (counters/gauges/histograms — serving schedulers and the
+        engines' trace counters write here when metrics are enabled) plus a
+        `fleet` block describing THIS fleet (shape, method, engine trace
+        count). Prometheus-format export of the same registry comes from
+        `repro.obs.prometheus_text()` / `serve_gp --metrics-port`."""
+        snap = default_registry().snapshot()
+        snap["fleet"] = {
+            "num_agents": self.config.num_agents,
+            "trainer": self.config.trainer,
+            "method": self.config.method,
+            "sharded": self.config.sharded,
+            "is_fitted": self.is_fitted,
+            "jit_cache_misses": self.jit_cache_misses,
+        }
+        return snap
 
     def to_server(self, batch: int = 256, *, max_wait_ms: float = 2.0,
                   method: str | None = None, queue_depth: int = 1024,

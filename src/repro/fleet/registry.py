@@ -4,10 +4,13 @@ One table per axis of the paper:
 
   TRAINERS — the 6 ADMM training loops of §4 (plus FACT-GP and the sharded
   eq. 34 execution mode), each behind a UNIFORM adapter
-  `spec.run(cfg, log_theta0, Xp, yp, A, mesh=None, grad_fn=None)
+  `spec.run(cfg, log_theta0, Xp, yp, A, mesh=None, grad_fn=None, diag=False)
       -> (log_theta (K,), thetas (M, K), info)`
   that forwards the FleetConfig's ADMM parameters to the legacy loop
-  unchanged (facade-trained theta is bitwise the legacy theta).
+  unchanged (facade-trained theta is bitwise the legacy theta). `diag=True`
+  threads the loops' per-iteration diagnostics capture (primal/dual
+  residuals, per-agent NLL, theta trajectories) into info["diagnostics"]
+  for `repro.obs.TraceRecorder` — see GPFleet.fit(trace=...).
 
   METHODS — the 13 decentralized prediction methods of §5 with per-entry
   CAPABILITY flags:
@@ -61,58 +64,66 @@ class TrainerSpec(NamedTuple):
     needs_augmented_data: bool = False
 
 
-def _run_fact(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+def _run_fact(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None, diag=False):
+    # FACT-GP's full NLL history is already its diagnostic; diag is a no-op
     lt, vals = train_fact_gp(lt0, Xp, yp, steps=cfg.fact_steps,
                              lr=cfg.fact_lr)
     M = Xp.shape[0]
     return lt, jnp.broadcast_to(lt, (M, lt.shape[0])), {"nll": vals}
 
 
-def _run_c(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+def _run_c(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None, diag=False):
     z, thetas, hist = train_c_gp(lt0, Xp, yp, rho=cfg.rho,
                                  iters=cfg.admm_iters,
                                  nested_iters=cfg.nested_iters,
-                                 nested_lr=cfg.nested_lr, grad_fn=grad_fn)
+                                 nested_lr=cfg.nested_lr, grad_fn=grad_fn,
+                                 diag=diag)
     return z, thetas, hist
 
 
-def _run_apx(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+def _run_apx(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None, diag=False):
     z, thetas, hist = train_apx_gp(lt0, Xp, yp, rho=cfg.rho,
                                    L=cfg.lipschitz, iters=cfg.admm_iters,
-                                   grad_fn=grad_fn)
+                                   grad_fn=grad_fn, diag=diag)
     return z, thetas, hist
 
 
-def _run_gapx(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+def _run_gapx(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None, diag=False):
     z, thetas, hist = train_gapx_gp(lt0, Xp, yp, rho=cfg.rho,
                                     L=cfg.lipschitz, iters=cfg.admm_iters,
-                                    grad_fn=grad_fn)
+                                    grad_fn=grad_fn, diag=diag)
     return z, thetas, hist
 
 
-def _run_dec_c(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+def _run_dec_c(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None, diag=False):
     thetas, info = train_dec_c_gp(lt0, Xp, yp, A, rho=cfg.rho,
                                   iters=cfg.admm_iters,
                                   nested_iters=cfg.nested_iters,
-                                  nested_lr=cfg.nested_lr, grad_fn=grad_fn)
+                                  nested_lr=cfg.nested_lr, grad_fn=grad_fn,
+                                  diag=diag)
     return jnp.mean(thetas, axis=0), thetas, info
 
 
-def _run_dec_apx(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+def _run_dec_apx(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None,
+                 diag=False):
     thetas, info = train_dec_apx_gp(lt0, Xp, yp, A, rho=cfg.rho,
                                     kappa=cfg.kappa, iters=cfg.admm_iters,
-                                    grad_fn=grad_fn)
+                                    grad_fn=grad_fn, diag=diag)
     return jnp.mean(thetas, axis=0), thetas, info
 
 
-def _run_dec_gapx(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+def _run_dec_gapx(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None,
+                  diag=False):
     thetas, info = train_dec_gapx_gp(lt0, Xp, yp, A, rho=cfg.rho,
                                      kappa=cfg.kappa, iters=cfg.admm_iters,
-                                     grad_fn=grad_fn)
+                                     grad_fn=grad_fn, diag=diag)
     return jnp.mean(thetas, axis=0), thetas, info
 
 
-def _run_dec_apx_sharded(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
+def _run_dec_apx_sharded(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None,
+                         diag=False):
+    # the sharded loop has no separate diag mode: its residuals series is
+    # always captured on-device (satellite cost: one pmean/pmax per round)
     M = Xp.shape[0]
     if mesh is None:
         from ..launch.mesh import make_agent_mesh
@@ -124,11 +135,11 @@ def _run_dec_apx_sharded(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None):
             f"(cycle graph over the device ring) but the mesh has {ndev} "
             f"device(s) for {M} agents; use trainer 'dec-apx' (simulated "
             f"mode, any device count) or provide an {M}-device mesh")
-    thetas, p = train_dec_apx_gp_sharded(mesh, "agents", lt0, Xp, yp,
-                                         rho=cfg.rho, kappa=cfg.kappa,
-                                         iters=cfg.admm_iters,
-                                         grad_fn=grad_fn)
-    return jnp.mean(thetas, axis=0), thetas, {"p": p}
+    thetas, info = train_dec_apx_gp_sharded(mesh, "agents", lt0, Xp, yp,
+                                            rho=cfg.rho, kappa=cfg.kappa,
+                                            iters=cfg.admm_iters,
+                                            grad_fn=grad_fn)
+    return jnp.mean(thetas, axis=0), thetas, info
 
 
 TRAINERS: dict[str, TrainerSpec] = {s.name: s for s in (

@@ -52,21 +52,33 @@ lock, and `close()` wakes every waiter — so a blocked submitter can never
 stall shutdown (the v1 `submit`-holds-lock-while-`put`-blocks bug is
 structurally impossible here).
 
+Observability (repro.obs, docs/observability.md): every `TenantStats`
+counter mirrors into the metrics registry as a `tenant`-labeled series
+(gp_requests_total, gp_queries_total, ...), request latency rides a
+bounded histogram sketch instead of a sample deque, and each request
+carries a `Span` through queue -> pack -> dispatch -> device -> stitch
+whose per-stage timings land in gp_request_stage_seconds and — when a
+`span_log` is configured — in a JSONL event per request. All timing uses
+`time.perf_counter()` (monotonic, highest resolution); disabling the
+registry reduces every hook to an early-return.
+
 `GPFleet.to_server()` returns a one-tenant scheduler; `launch.frontdoor.
 FrontDoor` is the v1-compatible shim over the same machinery.
 """
 from __future__ import annotations
 
 import heapq
+import os
 import threading
 import time
 from collections import deque
 from concurrent.futures import Future
-from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..obs import Histogram, MetricsRegistry, Span, SpanLog, default_registry
 
 __all__ = [
     "ServingScheduler", "Tenant", "TenantStats",
@@ -147,58 +159,155 @@ def pick_slot(slots: tuple[int, ...], n_rows: int,
     return down
 
 
-@dataclass
+# counter field -> registry metric name (the per-tenant labeled mirror)
+_STAT_COUNTERS = {
+    "requests": ("gp_requests_total", "requests accepted"),
+    "queries": ("gp_queries_total", "real (client) query rows served"),
+    "batches": ("gp_batches_total", "slots dispatched"),
+    "padded_queries": ("gp_padded_queries_total",
+                       "pad rows dispatched alongside real rows"),
+    "dropped": ("gp_deadline_dropped_total",
+                "requests dropped past their deadline"),
+    "rejected": ("gp_rejected_total", "admission-control rejections"),
+    "lapsed": ("gp_lapsed_total",
+               "past-deadline requests de-prioritized but served"),
+    "completed": ("gp_completed_total", "requests answered"),
+}
+# private always-on registry backing each TenantStats' local sketch (direct
+# Histogram construction: the instance is NOT registered/exported — the
+# exported copy is the shared registry's tenant-labeled histogram)
+_LOCAL = MetricsRegistry(enabled=True)
+
+
 class TenantStats:
-    """Per-tenant serving counters + request latency samples.
+    """Per-tenant serving counters + a bounded request-latency sketch.
 
     `queries` counts real (client) rows served, `padded_queries` the pad
     rows dispatched alongside them; `batches` counts slots. `dropped` are
     deadline drops, `rejected` admission rejections, `lapsed` past-deadline
-    requests de-prioritized (but eventually served)."""
-    requests: int = 0
-    queries: int = 0
-    batches: int = 0
-    padded_queries: int = 0
-    dropped: int = 0
-    rejected: int = 0
-    lapsed: int = 0
-    engine_seconds: float = 0.0
-    _lock: threading.Lock = field(default_factory=threading.Lock,
-                                  repr=False)
-    _latencies_ms: deque = field(
-        default_factory=lambda: deque(maxlen=200_000), repr=False)
+    requests de-prioritized (but eventually served).
+
+    Latency samples land in a fixed-bucket histogram (`repro.obs`) — O(1)
+    memory at any request count, percentiles within the bucket ratio
+    (~19%) of exact — and every counter mirrors into the scheduler's
+    metrics registry as a `tenant`-labeled series (docs/observability.md
+    lists the names). The local counts here remain the authoritative read
+    surface; the registry mirror is what exporters scrape.
+    """
+
+    def __init__(self, tenant: str = "default",
+                 registry: MetricsRegistry | None = None):
+        self.tenant = tenant
+        self._registry = registry if registry is not None \
+            else default_registry()
+        self._lock = threading.Lock()
+        self._counts = {f: 0 for f in _STAT_COUNTERS}
+        self._engine_seconds = 0.0
+        self._lat = Histogram("latency_seconds", "", _LOCAL)
+        reg = self._registry
+        self._mirror = {f: reg.counter(name, help)
+                        for f, (name, help) in _STAT_COUNTERS.items()}
+        self._mirror_engine = reg.counter(
+            "gp_engine_seconds_total", "engine-busy seconds")
+        self._mirror_lat = reg.histogram(
+            "gp_request_latency_seconds", "end-to-end request latency")
+        self._mirror_stage = reg.histogram(
+            "gp_request_stage_seconds", "per-stage request time "
+            "(queue|pack|dispatch|device|stitch)")
+        self._gauge_pad = reg.gauge(
+            "gp_padding_fraction", "pad rows / dispatched rows")
+
+    # -- mutation (scheduler-internal) --------------------------------------
+
+    def count(self, field: str, n: int = 1):
+        with self._lock:
+            self._counts[field] += n
+        self._mirror[field].inc(n, tenant=self.tenant)
+
+    def add_engine_seconds(self, dt: float):
+        with self._lock:
+            self._engine_seconds += dt
+        self._mirror_engine.inc(dt, tenant=self.tenant)
+
+    def record_latency(self, seconds: float):
+        self._lat.observe(seconds)
+        self._mirror_lat.observe(seconds, tenant=self.tenant)
+        self.count("completed")
+
+    def record_stages(self, stages: dict[str, float]):
+        for stage, dt in stages.items():
+            self._mirror_stage.observe(dt, tenant=self.tenant, stage=stage)
+
+    def update_gauges(self):
+        self._gauge_pad.set(self.padding_fraction, tenant=self.tenant)
+
+    # -- read surface (v1-compatible) ---------------------------------------
+
+    def _get(self, field: str) -> int:
+        with self._lock:
+            return self._counts[field]
+
+    @property
+    def requests(self) -> int:
+        return self._get("requests")
+
+    @property
+    def queries(self) -> int:
+        return self._get("queries")
+
+    @property
+    def batches(self) -> int:
+        return self._get("batches")
+
+    @property
+    def padded_queries(self) -> int:
+        return self._get("padded_queries")
+
+    @property
+    def dropped(self) -> int:
+        return self._get("dropped")
+
+    @property
+    def rejected(self) -> int:
+        return self._get("rejected")
+
+    @property
+    def lapsed(self) -> int:
+        return self._get("lapsed")
+
+    @property
+    def completed(self) -> int:
+        return self._get("completed")
+
+    @property
+    def engine_seconds(self) -> float:
+        with self._lock:
+            return self._engine_seconds
 
     @property
     def padding_fraction(self) -> float:
-        total = self.queries + self.padded_queries
-        return self.padded_queries / total if total else 0.0
-
-    def record_latency(self, seconds: float):
         with self._lock:
-            self._latencies_ms.append(seconds * 1e3)
+            total = self._counts["queries"] + self._counts["padded_queries"]
+            return self._counts["padded_queries"] / total if total else 0.0
 
     def latency_ms(self, *quantiles: float) -> tuple[float, ...]:
         """Request-latency percentiles in ms, e.g. stats.latency_ms(50, 99)
         -> (p50, p99). NaN when nothing completed yet."""
-        with self._lock:
-            lat = np.asarray(self._latencies_ms, dtype=np.float64)
-        if lat.size == 0:
-            return tuple(float("nan") for _ in quantiles)
-        return tuple(float(np.percentile(lat, q)) for q in quantiles)
+        return tuple(self._lat.quantile(q / 100.0) * 1e3 for q in quantiles)
 
-    @property
-    def completed(self) -> int:
+    def __repr__(self):
         with self._lock:
-            return len(self._latencies_ms)
+            counts = dict(self._counts)
+        return f"TenantStats({self.tenant!r}, {counts})"
 
 
 class _Request:
     """One in-flight request; `off` rows are already reserved into slots,
     `parts` holds the per-slot answer slices until all `n` rows return."""
     __slots__ = ("Xq", "n", "fut", "priority", "deadline", "arrival", "seq",
-                 "off", "parts", "lapsed")
+                 "off", "parts", "lapsed", "span")
 
-    def __init__(self, Xq, fut, priority, deadline, arrival, seq):
+    def __init__(self, Xq, fut, priority, deadline, arrival, seq, span=None):
         self.Xq = Xq
         self.n = Xq.shape[0]
         self.fut = fut
@@ -209,6 +318,7 @@ class _Request:
         self.off = 0
         self.parts: list = []
         self.lapsed = False
+        self.span = span
 
     @property
     def sort_key(self):
@@ -221,7 +331,8 @@ class Tenant:
     `add_fleet`."""
 
     def __init__(self, name: str, predict_fn, slots, *, queue_depth: int,
-                 admission: str, deadline_policy: str, max_wait_s: float):
+                 admission: str, deadline_policy: str, max_wait_s: float,
+                 registry: MetricsRegistry | None = None):
         if admission not in ("block", "reject"):
             raise ValueError(f"admission must be 'block' or 'reject', "
                              f"got {admission!r}")
@@ -238,7 +349,7 @@ class Tenant:
         self.admission = admission
         self.deadline_policy = deadline_policy
         self.max_wait_s = float(max_wait_s)
-        self.stats = TenantStats()
+        self.stats = TenantStats(name, registry=registry)
         # scheduling state (all guarded by the scheduler's _lock)
         self.heap: list = []          # (sort_key, _Request) in-deadline work
         self.lapsed: deque = deque()  # past-deadline, deprioritized FIFO
@@ -287,10 +398,21 @@ class ServingScheduler:
     to drive it manually (deterministic tests). `submit` is an alias of
     `add_request` so a one-tenant scheduler is a drop-in for the v1
     FrontDoor surface (`GPFleet.to_server()` returns exactly that).
+
+    `registry` (default: the process-wide `repro.obs.default_registry()`)
+    receives the tenant-labeled counter/histogram mirror; `span_log` (a
+    path or `repro.obs.SpanLog`) exports one JSONL event per finished
+    request with the per-stage span timings.
     """
 
-    def __init__(self, *, max_wait_ms: float = 2.0, autostart: bool = True):
+    def __init__(self, *, max_wait_ms: float = 2.0, autostart: bool = True,
+                 registry: MetricsRegistry | None = None, span_log=None):
         self.max_wait_s = float(max_wait_ms) * 1e-3
+        self.registry = registry if registry is not None \
+            else default_registry()
+        self._own_span_log = isinstance(span_log, (str, os.PathLike))
+        self.span_log: SpanLog | None = (
+            SpanLog(span_log) if self._own_span_log else span_log)
         self._tenants: dict[str, Tenant] = {}
         self._order: list[str] = []
         self._rr = 0                      # round-robin cursor into _order
@@ -305,6 +427,13 @@ class ServingScheduler:
             self._worker = threading.Thread(target=self._worker_loop,
                                             name="gp-scheduler", daemon=True)
             self._worker.start()
+
+    def _tracing(self) -> bool:
+        return self.span_log is not None or self.registry.enabled
+
+    def _emit(self, event: dict):
+        if self.span_log is not None:
+            self.span_log.emit(event)
 
     # -- tenant registration -------------------------------------------------
 
@@ -323,7 +452,8 @@ class ServingScheduler:
         tenant = Tenant(name, predict_fn, slots, queue_depth=queue_depth,
                         admission=admission, deadline_policy=deadline_policy,
                         max_wait_s=(self.max_wait_s if max_wait_ms is None
-                                    else float(max_wait_ms) * 1e-3))
+                                    else float(max_wait_ms) * 1e-3),
+                        registry=self.registry)
         with self._lock:
             if self._closing:
                 raise SchedulerClosed("scheduler is closed")
@@ -357,11 +487,19 @@ class ServingScheduler:
         if warm:
             example = np.zeros((1, int(fleet.config.input_dim)),
                                dtype=fleet.fitted.Xp.dtype)
-        return self.add_tenant(name, predict_fn, slots=slots,
-                               queue_depth=queue_depth, admission=admission,
-                               deadline_policy=deadline_policy,
-                               max_wait_ms=max_wait_ms,
-                               warm_example=example)
+        tenant = self.add_tenant(name, predict_fn, slots=slots,
+                                 queue_depth=queue_depth,
+                                 admission=admission,
+                                 deadline_policy=deadline_policy,
+                                 max_wait_ms=max_wait_ms,
+                                 warm_example=example)
+        # pull-style gauge: the engine's trace count, sampled at collect
+        # time — "recompiles after warmup" is this minus its post-warm value
+        self.registry.gauge(
+            "gp_jit_cache_misses",
+            "engine trace count (distinct compiled programs)").set_fn(
+            lambda: float(fleet.jit_cache_misses), tenant=name)
+        return tenant
 
     def warm(self, name: str, example) -> None:
         """Compile every slot geometry of tenant `name` against `example`
@@ -422,16 +560,17 @@ class ServingScheduler:
         if Xq.shape[0] == 0:
             raise ValueError("request must contain at least one query row")
         t = self._get(tenant)
-        now = time.monotonic()
+        now = time.perf_counter()
         deadline = None if deadline_ms is None else now + deadline_ms * 1e-3
         fut: Future = Future()
+        span = Span("request", t=now, tenant=t.name,
+                    priority=int(priority)) if self._tracing() else None
         with self._lock:
             if self._closing:
                 raise SchedulerClosed("scheduler is closed")
             while t.pending_rows + Xq.shape[0] > t.queue_depth:
                 if t.admission == "reject":
-                    with t.stats._lock:
-                        t.stats.rejected += 1
+                    t.stats.count("rejected")
                     raise SchedulerSaturated(
                         f"tenant {t.name!r} queue is full "
                         f"({t.pending_rows} rows >= depth {t.queue_depth})")
@@ -442,14 +581,16 @@ class ServingScheduler:
                     raise SchedulerClosed("scheduler closed while waiting "
                                           "for queue space")
             self._seq += 1
-            req = _Request(Xq, fut, int(priority), deadline, now, self._seq)
+            req = _Request(Xq, fut, int(priority), deadline, now, self._seq,
+                           span=span)
+            if span is not None:
+                span.labels["seq"] = req.seq
             heapq.heappush(t.heap, (req.sort_key, req))
             t.pending_rows += req.n
             if t.oldest is None or now < t.oldest:
                 t.oldest = now
             self._work.notify_all()
-        with t.stats._lock:
-            t.stats.requests += 1
+        t.stats.count("requests")
         return fut
 
     # v1 FrontDoor-compatible alias (GPFleet.to_server returns a scheduler)
@@ -487,8 +628,7 @@ class ServingScheduler:
                     continue
                 if not req.lapsed:
                     req.lapsed = True
-                    with t.stats._lock:
-                        t.stats.lapsed += 1
+                    t.stats.count("lapsed")
                 t.lapsed.append(req)
                 continue
             return req
@@ -526,7 +666,7 @@ class ServingScheduler:
         """Pack and serve ONE slot for the next tenant in round-robin
         order. Returns True if a slot was dispatched. `force` dispatches
         partial slots immediately (drain / manual stepping)."""
-        now = time.monotonic()
+        now = time.perf_counter()
         dropped: list[_Request] = []
         with self._lock:
             t = self._next_tenant_locked(now, force)
@@ -534,20 +674,25 @@ class ServingScheduler:
         # futures resolve OUTSIDE the lock: done-callbacks may re-enter
         # (submit a follow-up request) without deadlocking
         for req in dropped:
-            with t.stats._lock:
-                t.stats.dropped += 1
+            t.stats.count("dropped")
+            if req.span is not None:
+                req.span.advance("queue")
+                self._emit(req.span.event("deadline_dropped", rows=req.n))
             if not req.fut.cancelled():
                 req.fut.set_exception(DeadlineExceeded(
                     f"request missed its deadline by "
                     f"{(now - req.deadline) * 1e3:.1f} ms before scheduling"))
         if plan is None:
             return False
-        self._execute(t, *plan)
+        self._execute(t, *plan, t_pack0=now)
         return True
 
-    def _execute(self, t: Tenant, riders, slot: int):
+    def _execute(self, t: Tenant, riders, slot: int, *,
+                 t_pack0: float | None = None):
         """Run one packed slot through the tenant's predict_fn and fan the
         answers back out (called WITHOUT the lock)."""
+        if t_pack0 is None:
+            t_pack0 = time.perf_counter()
         parts = [req.Xq[a:a + k] for req, a, k in riders]
         rows = sum(k for _, _, k in riders)
         batch = np.concatenate(parts, axis=0)
@@ -555,37 +700,61 @@ class ServingScheduler:
             # edge-replicate: pad rows are a served workload, never X=0
             batch = np.concatenate(
                 [batch, np.repeat(batch[-1:], slot - rows, axis=0)])
-        t0 = time.monotonic()
+        t0 = time.perf_counter()
+        for req, _, _ in riders:
+            if req.span is not None:
+                # a multi-slot request re-enters "queue" after each slot's
+                # stitch, so the stages stay contiguous across slots
+                req.span.advance("queue", t_pack0)
+                req.span.advance("pack", t0)
         try:
             out = t.predict_fn(jnp.asarray(batch))
             mean, var = out[0], out[1]
+            t_disp = time.perf_counter()       # async dispatch returned
             jax.block_until_ready(mean)
-            dt = time.monotonic() - t0
+            t_dev = time.perf_counter()
+            dt = t_dev - t0
+            for req, _, _ in riders:
+                if req.span is not None:
+                    req.span.advance("dispatch", t_disp)
+                    req.span.advance("device", t_dev)
             # device->host can surface deferred runtime errors; keep it in
             # the guard so a failure fails the riders, not the worker
             mean = np.asarray(mean)[:rows]
             var = np.asarray(var)[:rows]
         except Exception as exc:       # fail every rider, not just one
             for req, _, _ in riders:
+                if req.span is not None:
+                    req.span.advance("stitch")
+                    self._emit(req.span.event("error", rows=req.n))
                 if not req.fut.cancelled():
                     req.fut.set_exception(exc)
             return
         off = 0
-        done = time.monotonic()
+        done = time.perf_counter()
         for req, _, k in riders:
             req.parts.append((mean[off:off + k], var[off:off + k]))
             off += k
             if sum(p[0].shape[0] for p in req.parts) == req.n:
                 m = np.concatenate([p[0] for p in req.parts])
                 v = np.concatenate([p[1] for p in req.parts])
-                t.stats.record_latency(done - req.arrival)
+                if req.span is not None:
+                    req.span.advance("stitch")
+                    t.stats.record_latency(req.span.elapsed)
+                    t.stats.record_stages(req.span.stages)
+                    self._emit(req.span.event(
+                        "ok", rows=req.n, slots=len(req.parts)))
+                else:
+                    t.stats.record_latency(done - req.arrival)
                 if not req.fut.cancelled():
                     req.fut.set_result((m, v))
-        with t.stats._lock:
-            t.stats.queries += rows
-            t.stats.padded_queries += slot - rows
-            t.stats.batches += 1
-            t.stats.engine_seconds += dt
+            elif req.span is not None:
+                req.span.advance("stitch")     # next slot waits in "queue"
+        t.stats.count("queries", rows)
+        t.stats.count("padded_queries", slot - rows)
+        t.stats.count("batches")
+        t.stats.add_engine_seconds(dt)
+        t.stats.update_gauges()
 
     # -- worker / lifecycle --------------------------------------------------
 
@@ -594,7 +763,7 @@ class ServingScheduler:
             with self._lock:
                 if self._closing:
                     return
-                now = time.monotonic()
+                now = time.perf_counter()
                 timeout = None
                 ready = False
                 for t in self._tenants.values():
@@ -654,6 +823,8 @@ class ServingScheduler:
                         "scheduler closed mid-request (drain=False)"))
                 else:
                     req.fut.cancel()
+        if self._own_span_log and self.span_log is not None:
+            self.span_log.close()
 
     def __enter__(self):
         return self

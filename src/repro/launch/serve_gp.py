@@ -72,6 +72,7 @@ from ..core.prediction import PredictionEngine
 from ..data import gp_sample_field, random_inputs
 from ..fleet import (FleetConfig, GPFleet, get_method, method_names,
                      trainer_names, validate_config)
+from ..obs import prometheus_text, start_metrics_server
 
 # centralized references (engine-only, not fleet methods) stay servable on
 # the replicated path; everything else comes from the registry
@@ -137,7 +138,7 @@ def serve_online(args, fleet: GPFleet, method, batches, total):
     compiled = dict(fleet.engine._compiled)
 
     n_obs = 0
-    t0 = time.time()
+    t0 = time.perf_counter()
     means = []
     for i, b in enumerate(batches):
         for j in range(args.observe_every):
@@ -147,7 +148,7 @@ def serve_online(args, fleet: GPFleet, method, batches, total):
         m, v, _ = fleet.predict(b, method=method)
         means.append(m)
     jax.block_until_ready(means[-1])
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     assert all(fleet.engine._compiled[k] is compiled[k] for k in compiled), \
         "hot swap recompiled a prediction program"
     W = fleet.fitted.Xp.shape[1]
@@ -161,12 +162,12 @@ def serve_async(args, fleet: GPFleet, method, requests):
     """Serve the request stream through `GPFleet.to_server` (the FrontDoor
     collector thread): submitted as fast as clients produce them, resolved
     via futures, micro-batches cut by size or the --max-wait-ms bound."""
-    t0 = time.time()
+    t0 = time.perf_counter()
     with fleet.to_server(args.batch, max_wait_ms=args.max_wait_ms,
                          method=method) as door:
         futures = [door.submit(r) for r in requests]
         answers = [f.result() for f in futures]
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     st = door.stats
     assert all(a[0].shape[0] == r.shape[0]
                for a, r in zip(answers, requests))
@@ -222,7 +223,8 @@ def serve_scheduler(args, fleet: GPFleet, method, key, ap):
     else:
         tenants = {"default": (fleet, method)}
 
-    sched = ServingScheduler(max_wait_ms=args.max_wait_ms)
+    sched = ServingScheduler(max_wait_ms=args.max_wait_ms,
+                             span_log=args.trace_log)
     admission = "reject" if args.loadgen else "block"
     for name, (fl, m) in tenants.items():
         sched.add_fleet(name, fl, method=m, max_slot=args.batch,
@@ -235,7 +237,7 @@ def serve_scheduler(args, fleet: GPFleet, method, key, ap):
     names = list(tenants)
     futs = []
     rejected = 0
-    t0 = time.time()
+    t0 = time.perf_counter()
     if args.loadgen:
         # open-loop Poisson arrivals at --loadgen req/s PER TENANT for
         # --duration seconds: submits happen on schedule regardless of
@@ -248,7 +250,7 @@ def serve_scheduler(args, fleet: GPFleet, method, key, ap):
                 t += rng.exponential(1.0 / args.loadgen)
         events.sort()
         for i, (at, name) in enumerate(events):
-            lag = at - (time.time() - t0)
+            lag = at - (time.perf_counter() - t0)
             if lag > 0:
                 time.sleep(lag)
             n = int(rng.integers(1, max(2, args.batch // 2) + 1))
@@ -275,7 +277,7 @@ def serve_scheduler(args, fleet: GPFleet, method, key, ap):
         except DeadlineExceeded:
             dropped += 1
     sched.close()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     drive = (f"open-loop Poisson {args.loadgen:.0f} req/s/tenant x "
              f"{args.duration:.1f} s" if args.loadgen
              else f"{args.requests} requests")
@@ -295,6 +297,8 @@ def serve_scheduler(args, fleet: GPFleet, method, key, ap):
     bad = [n for n, (fl, _) in tenants.items()
            if fl.jit_cache_misses != misses0[n]]
     assert not bad, f"serving recompiled for tenants {bad}"
+    if args.trace_log:
+        print(f"request trace (JSONL spans) -> {args.trace_log}")
 
 
 def compare_uncached(args, fleet: GPFleet, method, batches, total, dt):
@@ -316,11 +320,11 @@ def compare_uncached(args, fleet: GPFleet, method, batches, total, dt):
     fn = jax.jit(lambda Xq: spec.legacy_call(cfg, lt, f.Xp, f.yp, Xq,
                                              fleet.A, Xc, yc, Xa, ya)[:2])
     jax.block_until_ready(fn(batches[0]))
-    t0 = time.time()
+    t0 = time.perf_counter()
     for b in batches:
         out = fn(b)
     jax.block_until_ready(out)
-    dt_un = time.time() - t0
+    dt_un = time.perf_counter() - t0
     print(f"uncached per-call path: {total/dt_un:.0f} q/s "
           f"-> engine speedup {dt_un/dt:.2f}x")
 
@@ -419,6 +423,16 @@ def main(argv=None):
                          "req/s per tenant instead of a fixed request list")
     ap.add_argument("--duration", type=float, default=2.0,
                     help="loadgen run length in seconds")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve GET /metrics (Prometheus text) and /statusz "
+                         "(registry snapshot JSON) on PORT for the run "
+                         "(0 = ephemeral port, printed at startup)")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="at exit, write the Prometheus text dump of the "
+                         "metrics registry to PATH")
+    ap.add_argument("--trace-log", default=None, metavar="PATH",
+                    help="scheduler mode: append one JSONL span event per "
+                         "request (per-stage timings) to PATH")
     ap.add_argument("--compare-uncached", action="store_true")
     ap.add_argument("--online", action="store_true",
                     help="interleave observe and predict streams (sliding-"
@@ -441,7 +455,28 @@ def main(argv=None):
     if (args.tenant or args.loadgen) and not args.scheduler:
         ap.error("--tenant/--loadgen belong to scheduler serving; add "
                  "--scheduler")
+    if args.trace_log and not args.scheduler:
+        ap.error("--trace-log belongs to scheduler serving; add --scheduler")
 
+    server = None
+    if args.metrics_port is not None:
+        server = start_metrics_server(args.metrics_port)
+        print(f"metrics: http://127.0.0.1:{server.port}/metrics "
+              f"(+ /statusz)")
+    try:
+        _serve(args, ap)
+    finally:
+        if args.metrics_dump:
+            with open(args.metrics_dump, "w") as fh:
+                fh.write(prometheus_text())
+            print(f"metrics dump (Prometheus text) -> {args.metrics_dump}")
+        if server is not None:
+            server.stop()
+
+
+def _serve(args, ap):
+    """Dispatch to the serving mode the flags selected (factored out of
+    `main` so the metrics endpoint/dump wrap every mode uniformly)."""
     key = jax.random.PRNGKey(0)
 
     # multi-tenant scheduler serving builds its own fleets per --tenant
@@ -450,7 +485,7 @@ def main(argv=None):
         serve_scheduler(args, None, None, key, ap)
         return
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if args.from_checkpoint:
         fleet = GPFleet.load(args.from_checkpoint)
         method = args.method or fleet.config.method
@@ -503,7 +538,7 @@ def main(argv=None):
         fleet.fit(Xp, yp, key=jax.random.fold_in(key, 2),
                   log_theta0=pack(*_TRUE_THETA),
                   train=bool(args.train_iters))
-        built = f"fitted in {(time.time()-t0)*1e3:.1f} ms"
+        built = f"fitted in {(time.perf_counter()-t0)*1e3:.1f} ms"
         if args.save_fleet:
             path = fleet.save(args.save_fleet)
             print(f"fleet saved -> {path}")
@@ -536,13 +571,13 @@ def main(argv=None):
 
     # warmup compiles the one program all micro-batches reuse
     jax.block_until_ready(fleet.predict(batches[0], method=method)[0])
-    t0 = time.time()
+    t0 = time.perf_counter()
     means = []
     for b in batches:
         m, v, _ = fleet.predict(b, method=method)
         means.append(m)
     jax.block_until_ready(means[-1])
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     flat = jnp.concatenate(means)
     answers = [flat[a:b] for a, b in slices]       # de-batched per request
     print(f"{method}: served {total} queries in {dt*1e3:.1f} ms "

@@ -1,0 +1,504 @@
+"""repro.obs: metrics registry, request spans, exporters, training traces.
+
+Acceptance gates (ISSUE 7):
+
+  * concurrent-writer correctness: racing threads never lose counter
+    increments or histogram samples;
+  * histogram quantile accuracy: interpolated percentiles within the
+    geometric bucket ratio of exact numpy percentiles, at O(buckets)
+    memory;
+  * zero overhead when disabled: a disabled registry makes every write an
+    early-return whose cost is noise next to one scheduler dispatch, and
+    flipping metrics on/off never changes the engines' jit trace counts;
+  * end-to-end traceability: a scheduler request's span stages tile its
+    lifetime exactly (sum == e2e), and the JSONL event log + Prometheus
+    dump + `GPFleet.metrics()` all expose the same per-tenant counters.
+"""
+import json
+import threading
+import time
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.gp import pack
+from repro.core.gp import stripe_partition
+from repro.data import gp_sample_field, random_inputs
+from repro.fleet import FleetConfig, GPFleet
+from repro.launch.scheduler import ServingScheduler
+from repro.obs import (Histogram, MetricsRegistry, MetricsServer, Span,
+                       SpanLog, TraceRecorder, default_latency_buckets,
+                       default_registry, parse_prometheus_text,
+                       prometheus_text, read_spans, start_metrics_server)
+
+TRUE_LT = pack([1.2, 0.3], 1.3, 0.1)
+
+
+def echo_predict(Xs):
+    Xs = np.asarray(Xs)
+    return Xs.sum(axis=-1), np.ones(Xs.shape[0])
+
+
+@pytest.fixture(scope="module")
+def small_fleet():
+    X = random_inputs(jax.random.PRNGKey(0), 128)
+    _, y = gp_sample_field(jax.random.PRNGKey(1), X, TRUE_LT)
+    Xp, yp = stripe_partition(X, y, 4)
+    cfg = FleetConfig(num_agents=4, trainer="dec-apx", method="poe",
+                      admm_iters=5, chunk=16)
+    return GPFleet(cfg).fit(Xp, yp), Xp
+
+
+# ---------------------------------------------------------------------------
+# registry basics
+# ---------------------------------------------------------------------------
+
+def test_counter_labels_and_monotonicity():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs_total", "requests")
+    c.inc(tenant="a")
+    c.inc(2, tenant="a")
+    c.inc(tenant="b", method="poe")
+    assert c.value(tenant="a") == 3.0
+    assert c.value(tenant="b", method="poe") == 1.0
+    assert c.value(tenant="missing") == 0.0
+    with pytest.raises(ValueError):
+        c.inc(-1, tenant="a")
+
+
+def test_registry_get_or_create_and_kind_clash():
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_gauge_set_and_pull_fn():
+    reg = MetricsRegistry()
+    g = reg.gauge("depth")
+    g.set(3.0, queue="q0")
+    box = {"v": 7}
+    g.set_fn(lambda: float(box["v"]), queue="q1")
+    assert g.value(queue="q0") == 3.0
+    assert g.value(queue="q1") == 7.0
+    box["v"] = 9
+    assert g.value(queue="q1") == 9.0          # sampled at collection time
+
+
+def test_disabled_registry_writes_are_noops_but_set_fn_registers():
+    reg = MetricsRegistry(enabled=False)
+    reg.counter("c").inc(5)
+    reg.gauge("g").set(1.0)
+    reg.histogram("h").observe(0.5)
+    assert reg.counter("c").value() == 0.0
+    assert reg.histogram("h").count() == 0
+    # pull-gauge registration is wiring, not a hot-path write: it sticks
+    reg.gauge("g").set_fn(lambda: 42.0)
+    assert reg.gauge("g").value() == 42.0
+    reg.enable()
+    reg.counter("c").inc(5)
+    assert reg.counter("c").value() == 5.0
+
+
+# ---------------------------------------------------------------------------
+# concurrent writers
+# ---------------------------------------------------------------------------
+
+def test_concurrent_counter_and_histogram_exact_totals():
+    """8 racing writer threads, two label sets: no lost updates."""
+    reg = MetricsRegistry()
+    c = reg.counter("hits_total")
+    h = reg.histogram("lat_seconds")
+    n_threads, per_thread = 8, 2000
+
+    def writer(i):
+        tenant = "even" if i % 2 == 0 else "odd"
+        for k in range(per_thread):
+            c.inc(tenant=tenant)
+            h.observe(1e-4 * (k % 50 + 1), tenant=tenant)
+
+    threads = [threading.Thread(target=writer, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    expect = n_threads // 2 * per_thread
+    assert c.value(tenant="even") == expect
+    assert c.value(tenant="odd") == expect
+    assert h.count(tenant="even") == expect
+    assert h.count(tenant="odd") == expect
+    assert h.sum(tenant="even") == pytest.approx(
+        per_thread / 50 * sum(1e-4 * j for j in range(1, 51))
+        * (n_threads // 2), rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# histogram quantiles
+# ---------------------------------------------------------------------------
+
+def test_histogram_quantiles_match_numpy_within_bucket_ratio():
+    """Interpolated quantiles vs exact percentiles on a lognormal latency
+    sample: relative error bounded by the bucket ratio (~19% default)."""
+    rng = np.random.default_rng(0)
+    samples = np.exp(rng.normal(-6.0, 1.0, size=20_000))   # ~ms scale
+    reg = MetricsRegistry()
+    h = reg.histogram("lat")
+    for v in samples:
+        h.observe(float(v))
+    ratio = default_latency_buckets()[1] / default_latency_buckets()[0]
+    for q in (0.5, 0.9, 0.99):
+        exact = float(np.percentile(samples, q * 100))
+        approx = h.quantile(q)
+        assert abs(approx - exact) / exact <= (ratio - 1.0) + 1e-6, \
+            (q, exact, approx)
+
+
+def test_histogram_edge_cases():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat")
+    assert np.isnan(h.quantile(0.5))           # empty series
+    h.observe(0.004)
+    # single sample: min == max tightens every quantile to the exact value
+    assert h.quantile(0.0) == pytest.approx(0.004)
+    assert h.quantile(1.0) == pytest.approx(0.004)
+    h2 = reg.histogram("lat2", buckets=(1.0, 2.0))
+    h2.observe(100.0)                          # overflow bucket
+    assert h2.quantile(1.0) == pytest.approx(100.0)
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    with pytest.raises(ValueError):
+        reg.histogram("bad", buckets=(2.0, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+def test_span_stages_tile_elapsed_exactly():
+    sp = Span("request", t=100.0, tenant="t")
+    sp.advance("queue", 100.5)
+    sp.advance("pack", 100.6)
+    sp.advance("device", 101.0)
+    sp.advance("queue", 101.2)                 # re-entry accumulates
+    assert sp.stages["queue"] == pytest.approx(0.7)
+    assert sum(sp.stages.values()) == pytest.approx(sp.elapsed)
+    ev = sp.event(outcome="ok", rows=8)
+    assert ev["tenant"] == "t" and ev["rows"] == 8
+    assert sum(ev["stages_ms"].values()) == pytest.approx(ev["e2e_ms"])
+
+
+def test_span_log_round_trip(tmp_path):
+    path = str(tmp_path / "spans.jsonl")
+    with SpanLog(path) as log:
+        sp = Span("request", t=0.0, tenant="t")
+        sp.advance("queue", 0.25)
+        log.emit(sp.event())
+        log.emit(sp.event(outcome="error", error="boom"))
+    events = read_spans(path)
+    assert len(events) == 2
+    assert events[0]["event"] == "request"
+    assert events[0]["stages_ms"]["queue"] == pytest.approx(250.0)
+    assert events[1]["outcome"] == "error"
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def _seeded_registry():
+    reg = MetricsRegistry()
+    reg.counter("reqs_total", "reqs").inc(3, tenant="a b")
+    reg.counter("reqs_total").inc(5, tenant='quo"te')
+    reg.gauge("depth").set(2.5)
+    h = reg.histogram("lat", buckets=(0.001, 0.01, 0.1))
+    for v in (0.0005, 0.005, 0.005, 0.05, 1.0):
+        h.observe(v, tenant="a b")
+    return reg
+
+
+def test_prometheus_text_parses_back():
+    reg = _seeded_registry()
+    fams = parse_prometheus_text(prometheus_text(reg))
+    vals = {tuple(sorted(l.items())): v for l, v in fams["reqs_total"]}
+    assert vals[(("tenant", "a b"),)] == 3.0
+    assert vals[(("tenant", 'quo"te'),)] == 5.0          # escaping survives
+    assert fams["depth"][0][1] == 2.5
+    # histogram: cumulative le= buckets, _sum/_count
+    buckets = {l["le"]: v for l, v in fams["lat_bucket"]}
+    assert buckets["0.001"] == 1.0
+    assert buckets["0.01"] == 3.0
+    assert buckets["0.1"] == 4.0
+    assert buckets["+Inf"] == 5.0
+    assert fams["lat_count"][0][1] == 5.0
+    assert fams["lat_sum"][0][1] == pytest.approx(1.0605)
+
+
+def test_parse_prometheus_rejects_malformed():
+    with pytest.raises(ValueError):
+        parse_prometheus_text("lat_bucket{le=0.1} 3\n")   # unquoted label
+    with pytest.raises(ValueError):
+        parse_prometheus_text("novalue\n")
+
+
+def test_metrics_server_serves_metrics_and_statusz():
+    reg = _seeded_registry()
+    with MetricsServer(port=0, registry=reg) as srv:
+        base = f"http://127.0.0.1:{srv.port}"
+        text = urllib.request.urlopen(f"{base}/metrics").read().decode()
+        assert "reqs_total" in parse_prometheus_text(text)
+        snap = json.loads(
+            urllib.request.urlopen(f"{base}/statusz").read().decode())
+        assert snap["reqs_total"]["kind"] == "counter"
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"{base}/nope")
+    assert isinstance(start_metrics_server(0, registry=reg), MetricsServer)
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: tenant-labeled mirror + request spans
+# ---------------------------------------------------------------------------
+
+def test_scheduler_counters_mirror_into_registry(tmp_path):
+    reg = MetricsRegistry()
+    path = str(tmp_path / "spans.jsonl")
+    sched = ServingScheduler(registry=reg, span_log=path)
+    sched.add_tenant("t", echo_predict, slots=(4,))
+    futs = [sched.add_request(np.full((3, 2), float(i)), tenant="t")
+            for i in range(5)]
+    for f in futs:
+        f.result(timeout=10)
+    sched.close()
+    st = sched.tenant_stats["t"]
+    c = {name: reg.counter(name).value(tenant="t")
+         for name in ("gp_requests_total", "gp_queries_total",
+                      "gp_batches_total", "gp_padded_queries_total",
+                      "gp_completed_total")}
+    # local counts are the authoritative surface; the registry mirror must
+    # agree exactly (what exporters scrape)
+    assert c["gp_requests_total"] == st.requests == 5
+    assert c["gp_queries_total"] == st.queries == 15
+    assert c["gp_batches_total"] == st.batches
+    assert c["gp_padded_queries_total"] == st.padded_queries
+    assert c["gp_completed_total"] == st.completed == 5
+    assert reg.histogram("gp_request_latency_seconds").count(tenant="t") == 5
+    assert reg.gauge("gp_padding_fraction").value(tenant="t") \
+        == pytest.approx(st.padding_fraction)
+    # per-stage histogram saw every pipeline stage
+    stage_labels = {l["stage"] for l in
+                    reg.histogram("gp_request_stage_seconds").labelsets()}
+    assert {"queue", "pack", "dispatch", "device", "stitch"} <= stage_labels
+
+    spans = read_spans(path)
+    assert len(spans) == 5
+    for s in spans:
+        assert s["outcome"] == "ok" and s["tenant"] == "t"
+        # contiguous stage accounting: the stages TILE the lifetime
+        assert sum(s["stages_ms"].values()) \
+            == pytest.approx(s["e2e_ms"], rel=0.05)
+
+
+def test_scheduler_span_covers_multi_slot_request(tmp_path):
+    """A request streaming across several slots keeps one span whose
+    stages still sum to its end-to-end latency (queue re-entry)."""
+    path = str(tmp_path / "spans.jsonl")
+    sched = ServingScheduler(span_log=path, registry=MetricsRegistry())
+    sched.add_tenant("t", echo_predict, slots=(4,))
+    f = sched.add_request(np.ones((10, 2)), tenant="t")   # 3 slots of 4
+    mean, _ = f.result(timeout=10)
+    sched.close()
+    assert mean.shape == (10,)
+    (s,) = read_spans(path)
+    assert s["slots"] >= 3
+    assert sum(s["stages_ms"].values()) == pytest.approx(s["e2e_ms"],
+                                                         rel=0.05)
+
+
+def test_scheduler_under_threaded_load_loses_nothing(tmp_path):
+    """Many client threads against one scheduler: registry totals match
+    the authoritative local counters and every span is accounted for."""
+    reg = MetricsRegistry()
+    path = str(tmp_path / "spans.jsonl")
+    sched = ServingScheduler(registry=reg, span_log=path)
+    sched.add_tenant("t", echo_predict, slots=(4, 8))
+    n_threads, per_thread = 6, 20
+    errs = []
+
+    def client(i):
+        try:
+            for k in range(per_thread):
+                n = 1 + (i + k) % 7
+                f = sched.add_request(np.full((n, 2), 1.0), tenant="t")
+                mean, _ = f.result(timeout=30)
+                assert mean.shape == (n,)
+        except Exception as e:            # pragma: no cover - failure path
+            errs.append(e)
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    sched.close()
+    assert not errs
+    total = n_threads * per_thread
+    st = sched.tenant_stats["t"]
+    assert st.requests == st.completed == total
+    assert reg.counter("gp_requests_total").value(tenant="t") == total
+    assert reg.counter("gp_completed_total").value(tenant="t") == total
+    assert reg.counter("gp_queries_total").value(tenant="t") == st.queries
+    assert len(read_spans(path)) == total
+
+
+# ---------------------------------------------------------------------------
+# zero overhead when disabled
+# ---------------------------------------------------------------------------
+
+def test_disabled_registry_write_cost_is_noise_vs_dispatch():
+    """~20 metric writes ride each dispatch; with the registry disabled
+    their total cost must be < 5% of one echo-engine dispatch through the
+    scheduler."""
+    reg = MetricsRegistry(enabled=False)
+    c = reg.counter("x")
+    n = 20_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        c.inc(tenant="t")
+    per_write = (time.perf_counter() - t0) / n
+
+    sched = ServingScheduler(registry=reg, autostart=False)
+    sched.add_tenant("t", echo_predict, slots=(8,))
+    t0 = time.perf_counter()
+    reps = 50
+    for _ in range(reps):
+        f = sched.add_request(np.ones((8, 2)), tenant="t")
+        sched.step(force=True)
+        f.result(timeout=10)
+    per_dispatch = (time.perf_counter() - t0) / reps
+    sched.close()
+    assert 20 * per_write < 0.05 * per_dispatch, \
+        (per_write, per_dispatch)
+
+
+def test_metrics_toggle_never_changes_jit_traces(small_fleet):
+    """Flipping the registry on/off must not interact with jit tracing:
+    the engine's trace count stays flat across toggles on repeated
+    predicts of the same geometry."""
+    fleet, Xp = small_fleet
+    reg = default_registry()
+    was = reg.enabled
+    try:
+        reg.disable()
+        fleet.predict(Xp[0][:16])
+        misses = fleet.jit_cache_misses
+        reg.enable()
+        fleet.predict(Xp[0][:16])
+        reg.disable()
+        fleet.predict(Xp[0][:16])
+        assert fleet.jit_cache_misses == misses
+    finally:
+        reg.enabled = was
+
+
+# ---------------------------------------------------------------------------
+# engine trace counter + training diagnostics + facade
+# ---------------------------------------------------------------------------
+
+def test_engine_trace_counter_matches_cache_misses(small_fleet):
+    fleet, Xp = small_fleet
+    reg = default_registry()
+    was = reg.enabled
+    try:
+        reg.enable()
+        before = reg.counter("gp_jit_traces_total").value(
+            engine="replicated", method="gpoe")
+        fleet.predict(Xp[0][:16], method="gpoe")       # new method: traces
+        fleet.predict(Xp[0][:16], method="gpoe")       # cached: no trace
+        after = reg.counter("gp_jit_traces_total").value(
+            engine="replicated", method="gpoe")
+        assert after == before + 1
+    finally:
+        reg.enabled = was
+
+
+def test_engine_diagnostics_mode_captures_consensus_trajectories(
+        small_fleet):
+    """set_diagnostics(True) adds the per-round DAC (and, for NPAE, JOR)
+    residual trajectories to info without perturbing predictions; the flag
+    is baked into traces, so toggling clears the jit cache."""
+    fleet, Xp = small_fleet
+    eng = fleet.engine
+    m0, v0, i0 = fleet.predict(Xp[0][:16], method="rbcm")
+    assert "dac_residuals" not in i0
+    eng.set_diagnostics(True)
+    try:
+        m1, v1, i1 = fleet.predict(Xp[0][:16], method="rbcm")
+        np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+        assert i1["dac_residuals"].shape == (fleet.config.dac_iters,)
+        _, _, i2 = fleet.predict(Xp[0][:16], method="npae")
+        assert i2["jor_residuals"].shape == (fleet.config.jor_iters,)
+        assert i2["jor_residuals"][-1] == pytest.approx(
+            float(i2["jor_residual"]))
+    finally:
+        eng.set_diagnostics(False)
+
+
+def test_trace_recorder_ingests_fit_diagnostics(small_fleet, tmp_path):
+    fleet, Xp = small_fleet
+    X = random_inputs(jax.random.PRNGKey(3), 64)
+    _, y = gp_sample_field(jax.random.PRNGKey(4), X, TRUE_LT)
+    Xp2, yp2 = stripe_partition(X, y, 4)
+    rec = TraceRecorder()
+    f2 = GPFleet(fleet.config).fit(Xp2, yp2, trace=rec)
+    assert len(rec) == 1
+    t = rec.last()
+    assert t["name"] == "dec-apx" and t["num_agents"] == 4
+    iters = fleet.config.admm_iters
+    assert t["nll"].shape == (iters, 4)
+    assert t["primal_residuals"].shape == (iters,)
+    assert t["theta_trajectory"].shape[0] == iters
+    (s,) = rec.summary()
+    assert s["iters"] == iters and np.isfinite(s["final_nll_mean"])
+    # diagnostics never perturb the result
+    f3 = GPFleet(fleet.config).fit(Xp2, yp2)
+    np.testing.assert_array_equal(np.asarray(f2.thetas),
+                                  np.asarray(f3.thetas))
+    # JSONL round trip
+    path = rec.to_jsonl(str(tmp_path / "trace.jsonl"))
+    with open(path) as fh:
+        row = json.loads(fh.readline())
+    assert row["name"] == "dec-apx"
+    assert len(row["residuals"]) == iters
+
+
+def test_fleet_metrics_agrees_with_prometheus_endpoint(small_fleet):
+    """Acceptance: GPFleet.metrics() and the /metrics endpoint expose the
+    same counters with the same per-tenant labels."""
+    fleet, Xp = small_fleet
+    reg = default_registry()
+    was = reg.enabled
+    try:
+        reg.enable()
+        with fleet.to_server(batch=32) as sched:
+            # rename the default tenant label by using a fresh scheduler
+            # is overkill; the "default" tenant is unique enough here
+            for _ in range(3):
+                sched.submit(Xp[0][:8]).result(timeout=30)
+        snap = fleet.metrics()
+        assert snap["fleet"]["num_agents"] == 4
+        assert snap["fleet"]["is_fitted"] is True
+        snap_reqs = {tuple(sorted(s["labels"].items())): s["value"]
+                     for s in snap["gp_requests_total"]["series"]}
+        fams = parse_prometheus_text(prometheus_text(reg))
+        prom_reqs = {tuple(sorted(l.items())): v
+                     for l, v in fams["gp_requests_total"]}
+        assert snap_reqs == prom_reqs
+        assert snap_reqs[(("tenant", "default"),)] >= 3
+        for name in ("gp_queries_total", "gp_padded_queries_total",
+                     "gp_engine_seconds_total", "gp_jit_traces_total"):
+            assert name in snap and name in fams, name
+    finally:
+        reg.enabled = was

@@ -115,6 +115,63 @@ def test_dec_apx_sharded_matches_simulated():
                                rtol=1e-6, atol=1e-8)
 
 
+def test_dec_apx_sharded_residuals_match_simulated():
+    """The sharded loop returns the SAME info["residuals"] series as the
+    simulated loop (per-iteration max consensus disagreement, computed with
+    pmean/pmax collectives inside the sharded scan): observability of the
+    deployment path must not diverge from the reference semantics."""
+    if jax.device_count() < 4:
+        pytest.skip("needs >= 4 devices")
+    from repro.core.training import train_dec_apx_gp_sharded
+    from repro.core.consensus import cycle_graph
+    X = random_inputs(jax.random.PRNGKey(0), 400)
+    _, y = gp_sample_field(jax.random.PRNGKey(1), X, TRUE_LT)
+    Xp, yp = stripe_partition(X, y, 4)
+    mesh = jax.make_mesh((4,), ("agents",))
+    th_sh, info_sh = train_dec_apx_gp_sharded(mesh, "agents", LT0, Xp, yp,
+                                              iters=40)
+    th_sim, info_sim = train_dec_apx_gp(LT0, Xp, yp, cycle_graph(4),
+                                        iters=40)
+    assert info_sh["residuals"].shape == (40,)
+    assert info_sh["p"].shape == th_sh.shape          # final duals ride along
+    np.testing.assert_allclose(np.asarray(info_sh["residuals"]),
+                               np.asarray(info_sim["residuals"]),
+                               rtol=1e-5, atol=1e-8)
+
+
+def test_dec_apx_diag_mode_matches_plain(fleet_data):
+    """diag=True only ADDS diagnostics: the trained thetas are bitwise the
+    diag=False thetas, and the extended per-iteration series are shaped and
+    finite (primal/dual residuals, per-agent NLL, theta trajectory)."""
+    Xp, yp = fleet_data
+    A = path_graph(4)
+    th0, info0 = train_dec_apx_gp(LT0, Xp, yp, A, iters=25)
+    th1, info1 = train_dec_apx_gp(LT0, Xp, yp, A, iters=25, diag=True)
+    np.testing.assert_array_equal(np.asarray(th0), np.asarray(th1))
+    np.testing.assert_array_equal(np.asarray(info0["residuals"]),
+                                  np.asarray(info1["residuals"]))
+    d = info1["diagnostics"]
+    assert d["nll"].shape == (25, 4)
+    assert d["theta_trajectory"].shape == (25, 4, LT0.shape[0])
+    for k in ("primal_residuals", "dual_residuals"):
+        assert d[k].shape == (25,)
+        assert np.isfinite(np.asarray(d[k])).all()
+
+
+def test_apx_diag_mode_matches_plain(fleet_data):
+    """Centralized counterpart of the diag-equivalence guarantee."""
+    Xp, yp = fleet_data
+    z0, th0, h0 = train_apx_gp(LT0, Xp, yp, iters=25)
+    z1, th1, h1 = train_apx_gp(LT0, Xp, yp, iters=25, diag=True)
+    np.testing.assert_array_equal(np.asarray(z0), np.asarray(z1))
+    np.testing.assert_array_equal(np.asarray(th0), np.asarray(th1))
+    np.testing.assert_array_equal(np.asarray(h0["residuals"]),
+                                  np.asarray(h1["residuals"]))
+    d = h1["diagnostics"]
+    assert d["nll"].shape == (25, 4)
+    assert np.isfinite(np.asarray(d["dual_residuals"])).all()
+
+
 def test_dec_apx_sharded_two_agents_matches_simulated():
     """M=2 ring regression for dec_apx_gp_sharded_step: ppermute fwd == bwd
     delivers ONE shared neighbor; summing both directions double-counted it

@@ -57,6 +57,14 @@ FROZEN = {
     "repro.launch.frontdoor": [
         "FrontDoor", "FrontDoorStats",
     ],
+    "repro.obs": [
+        "Counter", "Gauge", "Histogram", "MetricsRegistry",
+        "default_latency_buckets", "default_registry",
+        "Span", "SpanLog", "read_spans",
+        "TraceRecorder",
+        "prometheus_text", "parse_prometheus_text",
+        "MetricsServer", "start_metrics_server",
+    ],
 }
 
 # registry contents are public API too: a renamed trainer/method key breaks
