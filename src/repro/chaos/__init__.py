@@ -1,0 +1,20 @@
+"""repro.chaos: seeded, replayable fault injection for the fleet.
+
+    plan = FaultPlan(seed=7, dropouts=(Dropout(agent=2, at=0),),
+                     straggle_every=3, straggle_ms=50.0)
+    mean, var, info = fleet.predict(Xs, fault_plan=plan,
+                                    allow_degraded=True)
+    assert info["degraded"]
+
+Consensus faults (dropouts, edge loss, NaN payloads) run the degraded
+consensus path with explicit flags; serving faults (stragglers, injected
+failures) ride `wrap_predict_fn` on the scheduler dispatch path. See
+docs/robustness.md for the fault model and degradation semantics.
+"""
+from .faults import Dropout, FaultInjected, FaultPlan
+from .inject import membership_events, wrap_predict_fn
+
+__all__ = [
+    "FaultPlan", "Dropout", "FaultInjected",
+    "wrap_predict_fn", "membership_events",
+]

@@ -19,17 +19,35 @@ def _flatten(tree):
     return {jax.tree_util.keystr(kp): np.asarray(v) for kp, v in paths}
 
 
+def _atomic_publish(tmp_path: str, final_path: str):
+    """fsync + rename so a crash mid-save leaves the previous complete file
+    (or nothing), never a truncated one. POSIX rename is atomic within a
+    filesystem; both paths live in the checkpoint directory."""
+    with open(tmp_path, "rb") as f:
+        os.fsync(f.fileno())
+    os.replace(tmp_path, final_path)
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    """Write the step's leaves (.npz) and manifest.json ATOMICALLY: each
+    file lands via temp + rename, arrays before manifest, so every state a
+    reader can observe is loadable — either the previous checkpoint intact
+    or the new one complete; `restore` rejects the in-between states."""
     os.makedirs(ckpt_dir, exist_ok=True)
     leaves = _flatten(tree)
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
-    np.savez(path, **leaves)
+    np.savez(path + ".tmp.npz", **leaves)      # np.savez appends .npz itself
+    _atomic_publish(path + ".tmp.npz", path)
     treedef = jax.tree.structure(tree)
-    with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
+    mpath = os.path.join(ckpt_dir, "manifest.json")
+    with open(mpath + ".tmp", "w") as f:
         json.dump({"treedef": str(treedef), "step": step,
                    "leaves": {k: {"shape": list(v.shape),
                                   "dtype": str(v.dtype)}
                               for k, v in leaves.items()}}, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(mpath + ".tmp", mpath)
     return path
 
 

@@ -1,10 +1,12 @@
 from .graph import (path_graph, cycle_graph, complete_graph,
                     random_connected_graph, degree_matrix, laplacian,
                     max_degree, perron, diameter, is_connected,
-                    attach_agent, remove_agent)
+                    connected_components, attach_agent, remove_agent)
 from .dac import (dac, dac_until, dac_residual, dac_sharded,
                   dac_sharded_residual, dac_time_varying, ring_allreduce,
                   ring_allsum, ring_allmax)
+from .degraded import (ConsensusDiverged, dac_masked, dac_masked_sums,
+                       ring_allsum_masked)
 from .jor import jor, jor_sharded
 from .power_method import power_method, extreme_eigs, optimal_omega
 from .dale import dale, dale_sharded
@@ -13,10 +15,12 @@ from .flooding import flood, flood_sharded
 __all__ = [
     "path_graph", "cycle_graph", "complete_graph", "random_connected_graph",
     "degree_matrix", "laplacian", "max_degree", "perron", "diameter",
-    "is_connected", "attach_agent", "remove_agent",
+    "is_connected", "connected_components", "attach_agent", "remove_agent",
     "dac", "dac_until", "dac_residual", "dac_sharded",
     "dac_sharded_residual", "dac_time_varying",
     "ring_allreduce", "ring_allsum", "ring_allmax",
+    "ConsensusDiverged", "dac_masked", "dac_masked_sums",
+    "ring_allsum_masked",
     "jor", "jor_sharded", "power_method", "extreme_eigs", "optimal_omega",
     "dale", "dale_sharded", "flood", "flood_sharded",
 ]

@@ -36,7 +36,10 @@ def dale(H: jax.Array, b: jax.Array, A: jax.Array, iters: int):
 
     def body(Q, _):
         nbr_sum = A @ Q                                  # (M, M)
-        avg = nbr_sum / deg[:, None]
+        # a degree-0 agent (single-agent graph, severed node) has an all-
+        # zero neighbor sum; dividing by max(deg, 1) keeps it at its local
+        # solution x_part instead of 0/0 = NaN, and is exact for deg >= 1
+        avg = nbr_sum / jnp.maximum(deg, 1.0)[:, None]
         proj_avg = jax.vmap(proj)(H, avg)
         Q_next = x_part + proj_avg
         return Q_next, jnp.max(jnp.abs(Q_next - Q))

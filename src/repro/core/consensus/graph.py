@@ -116,6 +116,28 @@ def is_connected(A: jax.Array) -> bool:
     return bool(np.isfinite(_all_pairs_dist(A)).all())
 
 
+def connected_components(A: jax.Array, alive=None) -> np.ndarray:
+    """Component labels (M,) int: nodes i, j share a label iff connected.
+
+    Labels are the smallest member index of each component, so they are
+    stable under any traversal order. `alive` (M,) bool/0-1 restricts the
+    graph to the live subgraph first: dead nodes lose every incident edge
+    and come out as singleton components — this is the partition detector
+    the degraded consensus readout uses (docs/robustness.md)."""
+    An = np.asarray(A) > 0
+    M = An.shape[0]
+    if alive is not None:
+        live = np.asarray(alive).astype(bool)
+        An = An & live[:, None] & live[None, :]
+    dist = np.full((M, M), np.inf)
+    np.fill_diagonal(dist, 0)
+    dist[An] = 1
+    for k in range(M):  # Floyd-Warshall on the restricted graph
+        dist = np.minimum(dist, dist[:, k:k + 1] + dist[k:k + 1, :])
+    reach = np.isfinite(dist)
+    return np.array([int(np.flatnonzero(row)[0]) for row in reach])
+
+
 def axis_size(axis_name) -> int:
     """Static size of a mapped mesh axis, from inside shard_map/pmap.
 

@@ -16,8 +16,20 @@ import jax.numpy as jnp
 
 
 @partial(jax.jit, static_argnames=("iters",))
-def jor(H: jax.Array, b: jax.Array, omega, iters: int, q0=None):
-    """Simulated-network JOR. b (M,) or (M, K). Returns (q, residuals)."""
+def jor(H: jax.Array, b: jax.Array, omega, iters: int, q0=None, mask=None):
+    """Simulated-network JOR. b (M,) or (M, K). Returns (q, residuals).
+
+    `mask` (M,) 0/1 decouples dead agents from the system: their rows and
+    columns are zeroed, the diagonal replaced by 1 and their b entries by
+    0, so the live block solves exactly the masked system and dead
+    entries settle at 0 (the degraded-mode hook; mask=None leaves the
+    system — and the compiled trace — untouched).
+    """
+    if mask is not None:
+        mk = mask.astype(H.dtype)
+        H = H * (mk[:, None] * mk[None, :]) \
+            + jnp.diag(1.0 - mk).astype(H.dtype)
+        b = b * (mk[:, None] if b.ndim == 2 else mk)
     d = jnp.diagonal(H)
     R_off = H - jnp.diag(d)
     if q0 is None:

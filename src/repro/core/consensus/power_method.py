@@ -22,7 +22,10 @@ def power_method(R: jax.Array, iters: int = 200):
     def body(e, _):
         g = R @ e
         ginf = jnp.max(jnp.abs(g))
-        e_next = g / ginf
+        # a zero iterate (R has an empty/zero spectrum side, e.g. the
+        # shifted B of a 1x1 or identity R) must report lambda = 0, not
+        # propagate 0/0 = NaN through the omega* formula
+        e_next = g / jnp.where(ginf > 0.0, ginf, 1.0)
         return e_next, ginf
 
     e, ginfs = jax.lax.scan(body, e0, None, length=iters)

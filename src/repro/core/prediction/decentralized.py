@@ -110,55 +110,65 @@ def _grbcm_posterior(s_mu, s_prec, s_beta, mu_c, var_c):
 
 
 def _poe_family_from_moments(mu, var, prior_var, A, iters, beta_mode: str,
-                             bcm_correction: bool, mask=None):
+                             bcm_correction: bool, mask=None, dac_fn=None):
     m = jnp.ones_like(mu) if mask is None else \
         jnp.broadcast_to(mask, mu.shape).astype(mu.dtype)
     M_eff = jnp.sum(m, axis=0)                            # (Nt,)
     beta = _poe_beta(var, prior_var, m, M_eff, beta_mode)
     w0 = _poe_summands(beta, mu, var)                     # (M, Nt, 3)
-    sums, res = _dac_sums(w0.reshape(w0.shape[0], -1), A, iters)
+    sums_fn = _dac_sums if dac_fn is None else dac_fn
+    sums, res = sums_fn(w0.reshape(w0.shape[0], -1), A, iters)
     sums = sums.reshape(mu.shape[1], 3)
     mean, v = _poe_posterior(sums[:, 0], sums[:, 1], sums[:, 2], prior_var,
                              bcm_correction)
     return mean, v, {"dac_residuals": res}
 
 
-def dec_poe_from_moments(mu, var, prior_var, A, iters=200, mask=None):
+def dec_poe_from_moments(mu, var, prior_var, A, iters=200, mask=None,
+                         dac_fn=None):
     """DEC-PoE (Alg. 5) on precomputed local moments."""
     return _poe_family_from_moments(mu, var, prior_var, A, iters, "one",
-                                    False, mask)
+                                    False, mask, dac_fn)
 
 
-def dec_gpoe_from_moments(mu, var, prior_var, A, iters=200, mask=None):
+def dec_gpoe_from_moments(mu, var, prior_var, A, iters=200, mask=None,
+                          dac_fn=None):
     """DEC-gPoE (Alg. 6) on precomputed local moments."""
     return _poe_family_from_moments(mu, var, prior_var, A, iters, "avg",
-                                    False, mask)
+                                    False, mask, dac_fn)
 
 
-def dec_bcm_from_moments(mu, var, prior_var, A, iters=200, mask=None):
+def dec_bcm_from_moments(mu, var, prior_var, A, iters=200, mask=None,
+                         dac_fn=None):
     """DEC-BCM (Alg. 7) on precomputed local moments."""
     return _poe_family_from_moments(mu, var, prior_var, A, iters, "one",
-                                    True, mask)
+                                    True, mask, dac_fn)
 
 
-def dec_rbcm_from_moments(mu, var, prior_var, A, iters=200, mask=None):
+def dec_rbcm_from_moments(mu, var, prior_var, A, iters=200, mask=None,
+                          dac_fn=None):
     """DEC-rBCM (Alg. 8) on precomputed local moments."""
     return _poe_family_from_moments(mu, var, prior_var, A, iters, "entropy",
-                                    True, mask)
+                                    True, mask, dac_fn)
 
 
 def dec_grbcm_from_moments(mu_aug, var_aug, mu_c, var_c, A, iters=200,
-                           mask=None):
+                           mask=None, dac_fn=None):
     """DEC-grBCM (Alg. 9) core: three DACs on augmented-expert quantities.
 
     mu_aug/var_aug (M, Nt) are the AUGMENTED experts' moments; mu_c/var_c
     (Nt,) the communication expert's.
+
+    `dac_fn` (signature of `_dac_sums`) swaps the consensus readout — the
+    degraded-mode hook (core/consensus/degraded.dac_masked_sums). None
+    keeps the exact path and its compiled traces byte-identical.
     """
     m = jnp.ones_like(mu_aug) if mask is None else \
         jnp.broadcast_to(mask, mu_aug.shape).astype(mu_aug.dtype)
     beta = _grbcm_beta(var_aug, var_c, m, jnp.arange(mu_aug.shape[0]))
     w0 = _poe_summands(beta, mu_aug, var_aug)
-    sums, res = _dac_sums(w0.reshape(w0.shape[0], -1), A, iters)
+    sums_fn = _dac_sums if dac_fn is None else dac_fn
+    sums, res = sums_fn(w0.reshape(w0.shape[0], -1), A, iters)
     sums = sums.reshape(mu_aug.shape[1], 3)
     mean, v = _grbcm_posterior(sums[:, 0], sums[:, 1], sums[:, 2], mu_c,
                                var_c)
@@ -203,13 +213,37 @@ def dec_grbcm(log_theta, Xp_aug, yp_aug, Xc, yc, Xs, A, iters=200, mask=None):
 # NPAE family
 # ---------------------------------------------------------------------------
 
-def _npae_consensus(mu, kA, CA, prior_var, A, solver, dac_iters):
-    """Shared scaffold: per-query linear solves then DAC to assemble dots."""
+def _masked_system(CA, mkT):
+    """Decouple masked agents from a per-query NPAE system (CA (Nt, M, M),
+    mkT (Nt, M)): masked rows/columns zeroed, diagonal set to 1, so the
+    live block solves exactly the masked system and masked entries settle
+    at 0. With mkT all-ones this is an elementwise *1 + 0 — the identity
+    the CBNN and degraded paths share."""
+    M = CA.shape[-1]
+    eye = jnp.eye(M, dtype=CA.dtype)
+    return CA * (mkT[:, :, None] * mkT[:, None, :]) \
+        + eye[None] * (1.0 - mkT)[:, None, :]
+
+
+def _npae_consensus(mu, kA, CA, prior_var, A, solver, dac_iters, mask=None,
+                    dac_fn=None):
+    """Shared scaffold: per-query linear solves then DAC to assemble dots.
+
+    `mask` (M, Nt) 0/1 excludes agents from the system (decoupled rows,
+    zeroed payloads); `dac_fn` swaps the consensus readout (`_dac_sums`
+    signature) — the degraded-mode hooks. Both default to the exact path.
+    """
+    if mask is not None:
+        mk = mask.astype(mu.dtype)
+        CA = _masked_system(CA, mk.T)
+        mu = mu * mk
+        kA = kA * mk
     q_mu, q_k, solver_info = solver(CA, mu.T, kA.T)        # (Nt, M) each
 
     # each agent holds w_i = [k_A]_i * q_i ; DAC recovers the dot products
     w0 = jnp.stack([kA * q_mu.T, kA * q_k.T], axis=-1)     # (M, Nt, 2)
-    sums, res = _dac_sums(w0.reshape(w0.shape[0], -1), A, dac_iters)
+    sums_fn = _dac_sums if dac_fn is None else dac_fn
+    sums, res = sums_fn(w0.reshape(w0.shape[0], -1), A, dac_iters)
     sums = sums.reshape(mu.shape[1], 2)
     mean = sums[:, 0]                                      # k_A^T C_A^-1 mu  (20)
     var = jnp.maximum(prior_var - sums[:, 1], 1e-12)       # (21)
@@ -229,13 +263,14 @@ def _rel_jitter(C, rel=1e-6):
 
 def dec_npae_from_terms(mu, kA, CA, prior_var, A, jor_iters=500,
                         dac_iters=200, omega=None, jitter=1e-6,
-                        with_residuals=False):
+                        with_residuals=False, mask=None, dac_fn=None):
     """DEC-NPAE (Alg. 10) core: JOR (strongly complete) + DAC on precomputed
     NPAE terms. Lemma 2 default omega = 2/M * 0.999.
 
     `with_residuals=True` (the engines' diagnostics mode) adds the full
     per-round JOR residual trajectory "jor_residuals" (jor_iters,) — the
-    worst query per round — to info alongside the final "jor_residual"."""
+    worst query per round — to info alongside the final "jor_residual".
+    `mask`/`dac_fn` are the degraded-mode hooks (see `_npae_consensus`)."""
     M = mu.shape[0]
     om = (2.0 / M) * 0.999 if omega is None else omega
 
@@ -251,17 +286,18 @@ def dec_npae_from_terms(mu, kA, CA, prior_var, A, jor_iters=500,
             info["jor_residuals"] = jnp.max(res, axis=0)
         return qm, qk, info
 
-    return _npae_consensus(mu, kA, CA, prior_var, A, solver, dac_iters)
+    return _npae_consensus(mu, kA, CA, prior_var, A, solver, dac_iters,
+                           mask=mask, dac_fn=dac_fn)
 
 
 def dec_npae_star_from_terms(mu, kA, CA, prior_var, A, jor_iters=500,
                              dac_iters=200, pm_iters=100, jitter=1e-6,
-                             with_residuals=False):
+                             with_residuals=False, mask=None, dac_fn=None):
     """DEC-NPAE* (Alg. 12) core: PM/IPM estimate omega* = 2/(lmax+lmin) per
     query, then JOR with the optimal relaxation (Lemma 3).
 
     `with_residuals=True` adds the per-round "jor_residuals" trajectory
-    (see dec_npae_from_terms)."""
+    (see dec_npae_from_terms); `mask`/`dac_fn` the degraded-mode hooks."""
 
     def solver(CA, b_mu, b_k):
 
@@ -276,7 +312,8 @@ def dec_npae_star_from_terms(mu, kA, CA, prior_var, A, jor_iters=500,
             info["jor_residuals"] = jnp.max(res, axis=0)
         return qm, qk, info
 
-    return _npae_consensus(mu, kA, CA, prior_var, A, solver, dac_iters)
+    return _npae_consensus(mu, kA, CA, prior_var, A, solver, dac_iters,
+                           mask=mask, dac_fn=dac_fn)
 
 
 def dec_npae(log_theta, Xp, yp, Xs, A, jor_iters=500, dac_iters=200,
@@ -336,28 +373,37 @@ def dec_nn_grbcm(log_theta, Xp_aug, yp_aug, Xc, yc, Xs, A, eta_nn, iters=200,
 
 
 def dec_nn_npae_from_terms(mask, mu, kA, CA, prior_var, A, dale_iters=2000,
-                           jitter=1e-6):
+                           jitter=1e-6, readout=None):
     """DEC-NN-NPAE (Alg. 18) core: CBNN-masked NPAE system solved by DALE —
     strongly connected suffices.
 
     Masked agents are decoupled (unit diagonal rows in H, zero b), so DALE
     solves the selected block exactly; the prediction is assembled from any
     agent's converged full solution vector.
+
+    `readout` (M,) 0/1 restricts which agents' solution copies are
+    averaged — the degraded-mode hook: on a partitioned graph only the
+    surviving component's copies converge to the right solution, so the
+    caller passes its component mask (with a live subgraph as `A`).
+    Default None averages every copy (the exact path, unchanged).
     """
     M, Nt = mu.shape
     mkT = mask.T.astype(mu.dtype)                           # (Nt, M)
-    eye = jnp.eye(M, dtype=mu.dtype)
-    H = _rel_jitter(CA * (mkT[:, :, None] * mkT[:, None, :])
-                    + eye[None] * (1.0 - mkT)[:, None, :], jitter)
+    H = _rel_jitter(_masked_system(CA, mkT), jitter)
     kA_m = (kA * mask).T                                    # (Nt, M)
     mu_m = (mu * mask).T
+    r = None if readout is None else readout.astype(mu.dtype)
 
     def one(Ht, bm, bk, kv):
         Qm, rm = dale(Ht, bm, A, dale_iters)
         Qk, rk = dale(Ht, bk, A, dale_iters)
         # every agent holds the full solution; average copies for robustness
-        qm = jnp.mean(Qm, axis=0)
-        qk = jnp.mean(Qk, axis=0)
+        if r is None:
+            qm = jnp.mean(Qm, axis=0)
+            qk = jnp.mean(Qk, axis=0)
+        else:
+            qm = (r @ Qm) / jnp.maximum(jnp.sum(r), 1.0)
+            qk = (r @ Qk) / jnp.maximum(jnp.sum(r), 1.0)
         return kv @ qm, kv @ qk, jnp.maximum(rm[-1], rk[-1])
 
     mean, kck, res = jax.vmap(one)(H, mu_m, kA_m, kA_m)

@@ -36,7 +36,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from ...obs import default_registry
+from ..consensus.degraded import ConsensusDiverged, dac_masked_sums
+from ..consensus.graph import connected_components
 from ..gp.kernel import unpack
 from . import aggregation as agg
 from .cbnn import cbnn_mask_cached
@@ -161,7 +165,7 @@ class PredictionEngine:
                  eta_nn: float = 0.1, npae_jitter: float = 1e-6,
                  fitted_aug: FittedExperts | None = None,
                  fitted_comm: FittedExperts | None = None,
-                 stream_mean: bool = False):
+                 stream_mean: bool = False, degraded_tol: float = 1e-2):
         self.fitted = fitted
         self.A = A
         self.chunk = int(chunk)
@@ -174,12 +178,27 @@ class PredictionEngine:
         self.fitted_aug = fitted_aug
         self.fitted_comm = fitted_comm
         self.stream_mean = bool(stream_mean)
+        self.degraded_tol = float(degraded_tol)
         self.diagnostics = False
         self._compiled: dict[str, object] = {}
+        self._chaos_cache: dict = {}      # FaultPlan -> derived mask arrays
         self._trace_count = 0
-        self._traces_total = default_registry().counter(
+        reg = default_registry()
+        self._traces_total = reg.counter(
             "gp_jit_traces_total", "engine traces (compiled programs), by "
             "engine and method")
+        self._degraded_total = reg.counter(
+            "gp_degraded_predictions_total", "predictions served in degraded "
+            "mode (dropped agents / partitions / scrubbed payloads)")
+        self._diverged_total = reg.counter(
+            "gp_consensus_diverged_total", "predictions that raised "
+            "ConsensusDiverged (residual or finiteness guard)")
+        self._scrubbed_gauge = reg.gauge(
+            "gp_scrubbed_payloads", "agents with non-finite consensus "
+            "payloads scrubbed in the last degraded prediction")
+        self._alive_gauge = reg.gauge(
+            "gp_alive_agents", "agents alive at the last degraded "
+            "prediction's readout")
 
     # -- per-tile computation ------------------------------------------------
 
@@ -191,7 +210,7 @@ class PredictionEngine:
         return npae_terms_cached(f.log_theta, f.Xp, f.L, f.alpha, Xq,
                                  Kcross=f.Kcross)
 
-    def _tile(self, method: str, f, fa, fc, Xq):
+    def _tile(self, method: str, f, fa, fc, Xq, chaos=None):
         A, pv = self.A, f.prior_var
         nn = method.startswith("nn_")
         base = method[3:] if nn else method
@@ -200,11 +219,35 @@ class PredictionEngine:
             mask, _ = cbnn_mask_cached(f.log_theta, f.Xp, f.L, Xq,
                                        self.eta_nn)
         red = {}
+        dac_fn = None
+
+        def degrade(mu, var, m):
+            """Chaos payload stage: inject the plan's NaN corruption, then
+            SCRUB — non-finite per-agent payloads are zeroed, excluded
+            from the participation mask, and counted — so corruption can
+            never reach the aggregation arithmetic silently."""
+            mu = jnp.where(chaos["corrupt"][:, None], jnp.nan, mu)
+            ok = jnp.isfinite(mu) & jnp.isfinite(var)
+            eligible = chaos["payload"][:, None] > 0
+            red["scrubbed"] = jnp.sum(jnp.any(~ok & eligible, axis=1)
+                                      ).astype(mu.dtype)
+            m2 = chaos["payload"][:, None] * ok.astype(mu.dtype)
+            if m is not None:
+                m2 = m2 * jnp.broadcast_to(m, mu.shape).astype(mu.dtype)
+            return jnp.where(ok, mu, 0.0), jnp.where(ok, var, pv), m2
+
+        if chaos is not None:
+            dac_fn = lambda w0, A_, iters: dac_masked_sums(
+                w0, A_, chaos["alive_seq"], chaos["readout"],
+                chaos["n_relay"], edge_seq=chaos.get("edge_seq"))
 
         if base in _DAC_CORES:
             mu, var = self._moments(f, Xq)
+            if chaos is not None:
+                mu, var, mask = degrade(mu, var, mask)
             mean, v, info = _DAC_CORES[base](mu, var, pv, A,
-                                             iters=self.dac_iters, mask=mask)
+                                             iters=self.dac_iters, mask=mask,
+                                             dac_fn=dac_fn)
             red["dac_residual"] = info["dac_residuals"][-1]
             if self.diagnostics:
                 # full per-round trajectory; max-reduced elementwise over
@@ -213,27 +256,38 @@ class PredictionEngine:
         elif base == "grbcm":
             mu_a, var_a = self._moments(fa, Xq)
             mu_c, var_c = self._moments(fc, Xq)
+            if chaos is not None:
+                # the communication expert is a serving-host dataset, not a
+                # fleet member — only the augmented experts take faults
+                mu_a, var_a, mask = degrade(mu_a, var_a, mask)
             mean, v, info = dec_grbcm_from_moments(
                 mu_a, var_a, mu_c[0], var_c[0], A, iters=self.dac_iters,
-                mask=mask)
+                mask=mask, dac_fn=dac_fn)
             red["dac_residual"] = info["dac_residuals"][-1]
             if self.diagnostics:
                 red["dac_residuals"] = info["dac_residuals"]
         elif method == "nn_npae":
             mu, kA, CA = self._terms(f, Xq)
+            A_dale, readout = A, None
+            if chaos is not None:
+                mu, _, mask = degrade(mu, jnp.zeros_like(mu) + pv, mask)
+                A_dale, readout = chaos["A_live"], chaos["readout"]
             mean, v, info = dec_nn_npae_from_terms(
-                mask, mu, kA, CA, pv, A, dale_iters=self.dale_iters,
-                jitter=self.npae_jitter)
+                mask, mu, kA, CA, pv, A_dale, dale_iters=self.dale_iters,
+                jitter=self.npae_jitter, readout=readout)
             red["dale_residual"] = info["dale_residual"]
         elif method in ("npae", "npae_star"):
             mu, kA, CA = self._terms(f, Xq)
+            if chaos is not None:
+                mu, _, mask = degrade(mu, jnp.zeros_like(mu) + pv, mask)
             core = (dec_npae_from_terms if method == "npae"
                     else partial(dec_npae_star_from_terms,
                                  pm_iters=self.pm_iters))
             mean, v, info = core(mu, kA, CA, pv, A, jor_iters=self.jor_iters,
                                  dac_iters=self.dac_iters,
                                  jitter=self.npae_jitter,
-                                 with_residuals=self.diagnostics)
+                                 with_residuals=self.diagnostics,
+                                 mask=mask, dac_fn=dac_fn)
             red["dac_residual"] = info["dac_residuals"][-1]
             red["jor_residual"] = info["jor_residual"]
             if self.diagnostics:
@@ -262,15 +316,16 @@ class PredictionEngine:
 
     # -- serving entry point -------------------------------------------------
 
-    def _run(self, method, f, fa, fc, Xs):
+    def _run(self, method, f, fa, fc, Xs, chaos=None):
         # executes at TRACE time only: jit replays the compiled program on
         # cache hits without re-entering this body, so the counter advances
         # exactly once per new (method, query geometry) — the scheduler's
         # zero-recompile-after-warmup contract is asserted against it
         self._trace_count += 1
         self._traces_total.inc(engine="replicated", method=method)
-        return map_query_tiles(lambda Xq: self._tile(method, f, fa, fc, Xq),
-                               Xs, self.chunk)
+        return map_query_tiles(
+            lambda Xq: self._tile(method, f, fa, fc, Xq, chaos=chaos),
+            Xs, self.chunk)
 
     @property
     def jit_cache_misses(self) -> int:
@@ -291,21 +346,88 @@ class PredictionEngine:
             self._compiled.clear()
 
     def warm_slots(self, method: str, slots, *, input_dim: int | None = None,
-                   dtype=None):
+                   dtype=None, fault_plan=None):
         """Pre-trace `method` for every query-batch geometry in `slots`
         so a serving scheduler packing requests into those slots never
-        compiles on the request path."""
+        compiles on the request path. Pass the serving `fault_plan` to
+        also warm the degraded-consensus traces it will dispatch to."""
         D = self.fitted.Xp.shape[-1] if input_dim is None else int(input_dim)
         dt = self.fitted.Xp.dtype if dtype is None else dtype
         for s in slots:
-            out = self.predict(method, jnp.zeros((int(s), D), dt))
+            try:
+                out = self.predict(method, jnp.zeros((int(s), D), dt),
+                                   fault_plan=fault_plan)
+            except ConsensusDiverged:
+                # the degraded trace is compiled before the host-side result
+                # guard fires; a divergence on the synthetic warm batch is
+                # not a serving failure
+                continue
             jax.block_until_ready(out[0])
 
-    def predict(self, method: str, Xs):
+    def _chaos_arrays(self, plan):
+        """Derive the traced fault arrays + degradation metadata for a
+        consensus-faulty FaultPlan (host side, cached per plan).
+
+        readout = the largest connected component of live agents at the
+        final round; payload = its members that were ALSO alive at round 0
+        (only they contribute local models). Passing these as traced
+        ARGUMENTS keeps one compiled degraded program per (method,
+        geometry) shared by every plan."""
+        cached = self._chaos_cache.get(plan)
+        if cached is not None:
+            return cached
+        M = self.fitted.num_agents
+        dt = self.fitted.Xp.dtype
+        alive = plan.alive_schedule(M, self.dac_iters)      # (iters, M)
+        final = alive[-1] > 0.0
+        if not final.any():
+            raise ConsensusDiverged(
+                "fault plan drops every agent before readout")
+        labels = connected_components(self.A, alive=final)
+        uniq, counts = np.unique(labels[final], return_counts=True)
+        comp = final & (labels == uniq[np.argmax(counts)])  # ties -> lowest
+        payload = (alive[0] > 0.0) & comp
+        if not payload.any():
+            raise ConsensusDiverged(
+                "no surviving agent holds a round-0 payload")
+        # live-subgraph adjacency for DALE (nn_npae), with self-loops on
+        # EVERY zero-degree node (dead ones too): avg = (A@Q)/deg must stay
+        # finite everywhere — a single NaN row poisons the matmul (0*NaN)
+        A_live = np.asarray(self.A, dtype=np.float64) * np.outer(final, final)
+        iso = np.flatnonzero(A_live.sum(axis=1) == 0)
+        A_live[iso, iso] = 1.0
+        chaos = {
+            "alive_seq": jnp.asarray(alive, dt),
+            "readout": jnp.asarray(comp, dt),
+            "payload": jnp.asarray(payload, dt),
+            "corrupt": jnp.asarray(plan.corrupt_mask(M)),
+            "n_relay": jnp.asarray(float(payload.sum()), dt),
+            "A_live": jnp.asarray(A_live, dt),
+        }
+        edge = plan.edge_schedule(M, self.dac_iters)
+        if edge is not None:
+            chaos["edge_seq"] = jnp.asarray(edge, dt)
+        meta = {"degraded": True,
+                "alive_agents": int(final.sum()),
+                "excluded_agents": int(M - payload.sum()),
+                "n_components": int(uniq.size)}
+        self._chaos_cache[plan] = (chaos, meta)
+        return chaos, meta
+
+    def predict(self, method: str, Xs, fault_plan=None):
         """Serve one query batch -> (mean (Nt,), var (Nt,), info).
 
         info carries the worst-tile consensus residuals, and the CBNN mask
         (M, Nt) for nn_* methods.
+
+        `fault_plan` (repro.chaos.FaultPlan) injects the plan's consensus
+        faults and serves over the surviving subgraph. The result is then
+        either honestly DEGRADED — finite, computed over the largest live
+        component, flagged with info["degraded"]=True and the component
+        census — or a typed `ConsensusDiverged` (non-finite output, or a
+        consensus residual above `degraded_tol`); never silently wrong.
+        A consensus-free plan (stragglers/fail-injection only) dispatches
+        to the exact traces: bitwise identical to fault_plan=None.
         """
         if method not in self.METHODS:
             raise ValueError(f"unknown prediction method {method!r}; "
@@ -313,16 +435,52 @@ class PredictionEngine:
         if ("grbcm" in method and (self.fitted_aug is None
                                    or self.fitted_comm is None)):
             raise ValueError("grbcm methods need fitted_aug and fitted_comm")
+        chaos = meta = None
+        if fault_plan is not None and not fault_plan.consensus_free:
+            if method.startswith("cen_"):
+                raise ValueError(
+                    f"{method}: centralized references do not run consensus "
+                    f"and cannot serve a fault plan with consensus faults")
+            chaos, meta = self._chaos_arrays(fault_plan)
         run = self._compiled.get(method)
         if run is None:
             run = jax.jit(partial(self._run, method))
             self._compiled[method] = run
-        perq, red = run(self.fitted, self.fitted_aug, self.fitted_comm, Xs)
+        if chaos is None:
+            perq, red = run(self.fitted, self.fitted_aug, self.fitted_comm,
+                            Xs)
+        else:
+            perq, red = run(self.fitted, self.fitted_aug, self.fitted_comm,
+                            Xs, chaos)
         info = dict(red)
         mask_t = perq.pop("mask_t", None)
         if mask_t is not None:
             info["mask"] = mask_t.T
-        return perq["mean"], perq["var"], info
+        mean, var = perq["mean"], perq["var"]
+        if chaos is not None:
+            scrubbed = int(info.pop("scrubbed", 0))
+            # guard the NETWORK consensus residuals (DAC/DALE) — the part
+            # degradation perturbs. The per-query JOR solve is the same
+            # masked math as the exact path and its residual is
+            # data-scale-dependent; it stays reported in info, unguarded.
+            residual = max((float(info[k]) for k in
+                            ("dac_residual", "dale_residual") if k in info),
+                           default=0.0)
+            finite = (bool(np.isfinite(np.asarray(mean)).all())
+                      and bool(np.isfinite(np.asarray(var)).all()))
+            if not finite or not np.isfinite(residual) \
+                    or residual > self.degraded_tol:
+                self._diverged_total.inc(method=method)
+                raise ConsensusDiverged(
+                    f"{method}: degraded consensus did not converge "
+                    f"(residual={residual:.3e}, tol={self.degraded_tol:.1e},"
+                    f" finite={finite}) under fault plan {fault_plan!r}")
+            self._degraded_total.inc(method=method)
+            self._scrubbed_gauge.set(scrubbed)
+            self._alive_gauge.set(meta["alive_agents"])
+            info.update(meta)
+            info["scrubbed_agents"] = scrubbed
+        return mean, var, info
 
     def swap_experts(self, fitted: FittedExperts,
                      fitted_aug: FittedExperts | None = None,
@@ -375,6 +533,7 @@ class PredictionEngine:
         if fitted_comm is not None:
             self.fitted_comm = fitted_comm
         self._compiled.clear()
+        self._chaos_cache.clear()   # masks/readout are derived from A and M
 
     def posterior_means_streamed(self, Xs):
         """Per-agent streamed posterior means (M, Nt) via the fused

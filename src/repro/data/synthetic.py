@@ -29,7 +29,14 @@ def gp_sample_field(key, X, log_theta, exact_max_n: int = 4096,
     kf, kw, kb, kn = jax.random.split(key, 4)
     n, D = X.shape
     if n <= exact_max_n:
-        K = se_kernel(X, X, log_theta) + 1e-8 * jnp.eye(n, dtype=X.dtype)
+        # float32 needs a much larger diagonal shift: at a few hundred
+        # near-duplicate random inputs the SE Gram matrix is singular to
+        # float32 precision and cholesky returns silent NaN (which then
+        # poisons every downstream consumer of y); scaled by sigma_f^2 so
+        # it tracks the Gram diagonal, it acts as a nugget well below
+        # sigma_eps
+        jit = 1e-8 if X.dtype == jnp.float64 else 1e-3 * sigma_f ** 2
+        K = se_kernel(X, X, log_theta) + jit * jnp.eye(n, dtype=X.dtype)
         L = jnp.linalg.cholesky(K)
         f = L @ jax.random.normal(kf, (n,), X.dtype)
     else:

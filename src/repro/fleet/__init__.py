@@ -16,13 +16,13 @@ table from the legacy free-function surface (which remains public and
 unchanged underneath).
 """
 from .config import FleetConfig
-from .fleet import GPFleet
+from .fleet import FleetDegraded, GPFleet
 from .registry import (METHODS, TRAINERS, MethodSpec, TrainerSpec,
                        get_method, get_trainer, method_names, trainer_names,
                        validate_config)
 
 __all__ = [
-    "FleetConfig", "GPFleet",
+    "FleetConfig", "GPFleet", "FleetDegraded",
     "METHODS", "TRAINERS", "MethodSpec", "TrainerSpec",
     "get_method", "get_trainer", "method_names", "trainer_names",
     "validate_config",

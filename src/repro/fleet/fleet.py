@@ -47,7 +47,8 @@ import jax.numpy as jnp
 
 from ..checkpoint.io import restore, save_checkpoint
 from ..obs import default_registry
-from ..core.consensus import (complete_graph, cycle_graph, path_graph,
+from ..core.consensus import (complete_graph, connected_components,
+                              cycle_graph, is_connected, path_graph,
                               random_connected_graph)
 from ..core.gp import augment, communication_dataset, pack
 from ..core.online import OnlineExperts, from_batch, join, leave, observe_fleet
@@ -59,6 +60,19 @@ from .registry import get_method, get_trainer, validate_config
 
 _FLEET_MANIFEST = "fleet.json"
 _FORMAT_VERSION = 1
+
+
+class FleetDegraded(RuntimeError):
+    """A prediction came back in DEGRADED mode (dropped agents, network
+    partition, scrubbed payloads) and the caller did not opt in with
+    `predict(..., allow_degraded=True)`. The degradation census is on
+    `.info`; the (finite, flagged) result itself is on `.result`."""
+
+    def __init__(self, message: str, info: dict | None = None,
+                 result=None):
+        super().__init__(message)
+        self.info = info or {}
+        self.result = result
 
 
 def _build_graph(cfg: FleetConfig):
@@ -103,6 +117,7 @@ class GPFleet:
         self._comm_data = None         # (Xc, yc, Xa, ya) when built
         self._engine = None
         self._ingest = None
+        self._last_degraded = None     # census of the last degraded predict
 
     # -- properties ----------------------------------------------------------
 
@@ -245,16 +260,32 @@ class GPFleet:
                                 fitted_comm=self.fitted_comm,
                                 stream_mean=cfg.stream_mean)
 
-    def predict(self, Xs, method: str | None = None):
+    def predict(self, Xs, method: str | None = None, *, fault_plan=None,
+                allow_degraded: bool = False):
         """Serve one query batch -> (mean (Nt,), var (Nt,), info).
 
         `method` overrides config.method for this call (must satisfy the
         same capability constraints); `cen_*` centralized references pass
         through to the replicated engine.
+
+        `fault_plan` (repro.chaos.FaultPlan) injects the plan's consensus
+        faults: the engine serves over the surviving subgraph and flags the
+        result with info["degraded"]=True (see PredictionEngine.predict).
+        Degraded results are returned only under `allow_degraded=True`;
+        otherwise the (finite, flagged) result is wrapped in a typed
+        `FleetDegraded` so a caller can never mistake a partial-fleet
+        answer for a healthy one. Consensus divergence always raises
+        `ConsensusDiverged` regardless of `allow_degraded`.
         """
         self._require_fitted("predict")
         cfg = self.config
         method = method if method is not None else cfg.method
+        if fault_plan is not None and not fault_plan.consensus_free \
+                and cfg.sharded:
+            raise ValueError(
+                "fault plans with consensus faults serve on the replicated "
+                "engine only (ShardedEngine consensus runs on the device "
+                "ring, which has no degraded mode)")
         if not method.startswith("cen_"):
             spec = get_method(method)
             if cfg.sharded and not spec.shardable:
@@ -275,7 +306,22 @@ class GPFleet:
                     f"configured so they are built")
         if cfg.routed and method.startswith("nn_"):
             return self.engine.predict_routed(method, Xs)
-        return self.engine.predict(method, Xs)
+        if fault_plan is None:
+            return self.engine.predict(method, Xs)
+        mean, var, info = self.engine.predict(method, Xs,
+                                              fault_plan=fault_plan)
+        if info.get("degraded"):
+            self._last_degraded = {k: info[k] for k in
+                                   ("alive_agents", "excluded_agents",
+                                    "n_components", "scrubbed_agents")}
+            if not allow_degraded:
+                raise FleetDegraded(
+                    f"prediction served in degraded mode "
+                    f"({info['alive_agents']}/{self.num_agents} agents "
+                    f"alive, {info['scrubbed_agents']} scrubbed) — pass "
+                    f"allow_degraded=True to accept flagged partial-fleet "
+                    f"results", info=info, result=(mean, var))
+        return mean, var, info
 
     def shard(self, mesh=None, *, routed: bool | None = None) -> "GPFleet":
         """Move serving onto the agent-sharded engine (in place).
@@ -308,6 +354,31 @@ class GPFleet:
         """The serving engine's trace count (distinct compiled programs).
         Flat across requests => zero recompiles; 0 before first serve."""
         return 0 if self._engine is None else self._engine.jit_cache_misses
+
+    def health(self) -> dict:
+        """Point-in-time fleet health: shape, consensus-graph connectivity,
+        degraded/diverged serving totals (from the engine's `repro.obs`
+        counters), and the census of the last degraded prediction. Cheap —
+        host-side graph analysis only, no device work — and safe to poll
+        from a watchdog or a /healthz handler."""
+        labels = connected_components(self.A)
+        h = {
+            "num_agents": self.num_agents,
+            "is_fitted": self.is_fitted,
+            "sharded": self.config.sharded,
+            "graph_connected": bool(is_connected(self.A)),
+            "graph_components": int(len(set(labels.tolist()))),
+            "degraded_predictions": 0.0,
+            "diverged_predictions": 0.0,
+            "last_degraded": self._last_degraded,
+        }
+        eng = self._engine
+        if eng is not None and hasattr(eng, "_degraded_total"):
+            h["degraded_predictions"] = sum(
+                v for _, v in eng._degraded_total.collect())
+            h["diverged_predictions"] = sum(
+                v for _, v in eng._diverged_total.collect())
+        return h
 
     def metrics(self) -> dict:
         """Observability snapshot: the process-wide `repro.obs` default
@@ -439,8 +510,17 @@ class GPFleet:
                 "online": self._online_state is not None,
             },
         }
-        with open(os.path.join(ckpt_dir, _FLEET_MANIFEST), "w") as f:
+        # atomic publish: fleet.json is the load() entry point, so it is
+        # written LAST and via tmp+rename — a crash mid-save leaves either
+        # the previous complete checkpoint or a directory load() rejects,
+        # never a half-written manifest over fresh arrays
+        mpath = os.path.join(ckpt_dir, _FLEET_MANIFEST)
+        tmp = mpath + ".tmp"
+        with open(tmp, "w") as f:
             json.dump(manifest, f, indent=2, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, mpath)
         return path
 
     @staticmethod

@@ -83,12 +83,19 @@ from ..obs import Histogram, MetricsRegistry, Span, SpanLog, default_registry
 __all__ = [
     "ServingScheduler", "Tenant", "TenantStats",
     "DeadlineExceeded", "SchedulerClosed", "SchedulerSaturated",
-    "slot_ladder", "pick_slot",
+    "SchedulerStalled", "slot_ladder", "pick_slot",
 ]
 
 
 class SchedulerClosed(RuntimeError):
     """add_request after close() (or while close() is tearing down)."""
+
+
+class SchedulerStalled(RuntimeError):
+    """A dispatched slot exceeded the scheduler's stall timeout: the
+    watchdog failed its in-flight Futures, quarantined the tenant, and
+    failed the tenant's queued work so no client ever hangs on a wedged
+    predict_fn. The tenant un-quarantines if the stuck call returns."""
 
 
 class SchedulerSaturated(RuntimeError):
@@ -172,6 +179,13 @@ _STAT_COUNTERS = {
     "lapsed": ("gp_lapsed_total",
                "past-deadline requests de-prioritized but served"),
     "completed": ("gp_completed_total", "requests answered"),
+    "retried": ("gp_retried_total",
+                "slot dispatches retried after a transient failure"),
+    "isolated": ("gp_isolated_total",
+                 "requests answered by a per-rider isolation re-run after "
+                 "their shared slot failed"),
+    "stalled": ("gp_stalled_total",
+                "watchdog interventions (stalled dispatches failed)"),
 }
 # private always-on registry backing each TenantStats' local sketch (direct
 # Histogram construction: the instance is NOT registered/exported — the
@@ -280,6 +294,18 @@ class TenantStats:
         return self._get("completed")
 
     @property
+    def retried(self) -> int:
+        return self._get("retried")
+
+    @property
+    def isolated(self) -> int:
+        return self._get("isolated")
+
+    @property
+    def stalled(self) -> int:
+        return self._get("stalled")
+
+    @property
     def engine_seconds(self) -> float:
         with self._lock:
             return self._engine_seconds
@@ -332,7 +358,8 @@ class Tenant:
 
     def __init__(self, name: str, predict_fn, slots, *, queue_depth: int,
                  admission: str, deadline_policy: str, max_wait_s: float,
-                 registry: MetricsRegistry | None = None):
+                 registry: MetricsRegistry | None = None, retries: int = 2,
+                 retry_backoff_ms: float = 1.0, isolate: bool = True):
         if admission not in ("block", "reject"):
             raise ValueError(f"admission must be 'block' or 'reject', "
                              f"got {admission!r}")
@@ -349,6 +376,9 @@ class Tenant:
         self.admission = admission
         self.deadline_policy = deadline_policy
         self.max_wait_s = float(max_wait_s)
+        self.retries = int(retries)
+        self.retry_backoff_ms = float(retry_backoff_ms)
+        self.isolate = bool(isolate)
         self.stats = TenantStats(name, registry=registry)
         # scheduling state (all guarded by the scheduler's _lock)
         self.heap: list = []          # (sort_key, _Request) in-deadline work
@@ -356,6 +386,11 @@ class Tenant:
         self.carry: _Request | None = None   # partially-packed request
         self.pending_rows: int = 0    # queued (undispatched) rows
         self.oldest: float | None = None     # arrival of oldest pending
+        # fault-tolerance state (also guarded by the scheduler's _lock)
+        self.inflight = False         # a packed slot is inside predict_fn
+        self.inflight_since: float | None = None
+        self.inflight_riders: list | None = None
+        self.quarantined = False      # watchdog benched this tenant
 
     # -- queue state helpers (call with the scheduler lock held) ------------
 
@@ -406,7 +441,8 @@ class ServingScheduler:
     """
 
     def __init__(self, *, max_wait_ms: float = 2.0, autostart: bool = True,
-                 registry: MetricsRegistry | None = None, span_log=None):
+                 registry: MetricsRegistry | None = None, span_log=None,
+                 stall_timeout_ms: float | None = None):
         self.max_wait_s = float(max_wait_ms) * 1e-3
         self.registry = registry if registry is not None \
             else default_registry()
@@ -423,10 +459,28 @@ class ServingScheduler:
         self._closing = False
         self._draining = False
         self._worker: threading.Thread | None = None
+        self._worker_gen = 0          # bumped when the watchdog respawns
+        self._autostart = bool(autostart)
         if autostart:
-            self._worker = threading.Thread(target=self._worker_loop,
-                                            name="gp-scheduler", daemon=True)
-            self._worker.start()
+            self._spawn_worker_locked()
+        # stall watchdog: fails in-flight Futures of a dispatch that has
+        # been inside predict_fn longer than the timeout (see _watchdog)
+        self.stall_timeout_s = (None if stall_timeout_ms is None
+                                else float(stall_timeout_ms) * 1e-3)
+        self._wd_stop = threading.Event()
+        self._watchdog: threading.Thread | None = None
+        if self.stall_timeout_s is not None:
+            self._watchdog = threading.Thread(
+                target=self._watchdog_loop, name="gp-scheduler-watchdog",
+                daemon=True)
+            self._watchdog.start()
+
+    def _spawn_worker_locked(self):
+        self._worker_gen += 1
+        self._worker = threading.Thread(
+            target=self._worker_loop, args=(self._worker_gen,),
+            name=f"gp-scheduler-{self._worker_gen}", daemon=True)
+        self._worker.start()
 
     def _tracing(self) -> bool:
         return self.span_log is not None or self.registry.enabled
@@ -441,19 +495,28 @@ class ServingScheduler:
                    queue_depth: int = 1024, admission: str = "block",
                    deadline_policy: str = "drop",
                    max_wait_ms: float | None = None,
-                   warm_example=None) -> Tenant:
+                   warm_example=None, retries: int = 2,
+                   retry_backoff_ms: float = 1.0,
+                   isolate: bool = True) -> Tenant:
         """Register a serving target.
 
         predict_fn((S, D)) -> (mean (S,), var (S,), ...) for every S in
         `slots`. `warm_example` (a (D,) row, or (n, D) array whose first
         row is used) pre-compiles every slot geometry NOW so serving never
         traces; pass None to let the first dispatches compile lazily.
+
+        Failure policy: a slot whose predict_fn raises is retried
+        `retries` times with exponential backoff (retry_backoff_ms * 2^k);
+        if it still fails and `isolate=True`, each rider is re-run ALONE in
+        the smallest fitting slot so one poisoned request cannot fail its
+        batch-mates — only riders that fail solo get the exception.
         """
         tenant = Tenant(name, predict_fn, slots, queue_depth=queue_depth,
                         admission=admission, deadline_policy=deadline_policy,
                         max_wait_s=(self.max_wait_s if max_wait_ms is None
                                     else float(max_wait_ms) * 1e-3),
-                        registry=self.registry)
+                        registry=self.registry, retries=retries,
+                        retry_backoff_ms=retry_backoff_ms, isolate=isolate)
         with self._lock:
             if self._closing:
                 raise SchedulerClosed("scheduler is closed")
@@ -470,7 +533,9 @@ class ServingScheduler:
                   queue_depth: int = 1024, admission: str = "block",
                   deadline_policy: str = "drop",
                   max_wait_ms: float | None = None,
-                  warm: bool = True) -> Tenant:
+                  warm: bool = True, retries: int = 2,
+                  retry_backoff_ms: float = 1.0,
+                  isolate: bool = True, fault_plan=None) -> Tenant:
         """Register a fitted `GPFleet` as a tenant.
 
         Slot geometry derives from the fleet: align = engine chunk,
@@ -478,11 +543,23 @@ class ServingScheduler:
         `max_slot` here). `continuous=True` serves the quantized ladder
         (right-sized slots, the v2 behavior); `continuous=False` pins the
         single fixed geometry the v1 FrontDoor used.
+
+        `fault_plan` (repro.chaos.FaultPlan) runs the tenant under chaos:
+        consensus faults ride `GPFleet.predict(fault_plan=...,
+        allow_degraded=True)` — warm-up compiles the degraded traces, so
+        the zero-recompile contract still holds — while the plan's serving
+        faults (stragglers, injected failures) wrap the predict_fn on the
+        dispatch path AFTER warm-up (`repro.chaos.wrap_predict_fn`).
         """
         align, reg_max = fleet.slot_geometry(method)
         hi = reg_max if max_slot is None else int(max_slot)
         slots = slot_ladder(align, hi) if continuous else (hi,)
-        predict_fn = (lambda Xs: fleet.predict(Xs, method=method))
+        if fault_plan is None:
+            predict_fn = (lambda Xs: fleet.predict(Xs, method=method))
+        else:
+            predict_fn = (lambda Xs: fleet.predict(
+                Xs, method=method, fault_plan=fault_plan,
+                allow_degraded=True))
         example = None
         if warm:
             example = np.zeros((1, int(fleet.config.input_dim)),
@@ -492,7 +569,15 @@ class ServingScheduler:
                                  admission=admission,
                                  deadline_policy=deadline_policy,
                                  max_wait_ms=max_wait_ms,
-                                 warm_example=example)
+                                 warm_example=example, retries=retries,
+                                 retry_backoff_ms=retry_backoff_ms,
+                                 isolate=isolate)
+        if fault_plan is not None and not fault_plan.empty:
+            # serving faults start AFTER warm-up so registration cannot be
+            # failed or slowed by the plan's own injections
+            from ..chaos import wrap_predict_fn
+            tenant.predict_fn = wrap_predict_fn(tenant.predict_fn,
+                                                fault_plan)
         # pull-style gauge: the engine's trace count, sampled at collect
         # time — "recompiles after warmup" is this minus its post-warm value
         self.registry.gauge(
@@ -568,6 +653,11 @@ class ServingScheduler:
         with self._lock:
             if self._closing:
                 raise SchedulerClosed("scheduler is closed")
+            if t.quarantined:
+                raise SchedulerStalled(
+                    f"tenant {t.name!r} is quarantined: its predict_fn "
+                    f"stalled past the watchdog timeout and has not "
+                    f"returned")
             while t.pending_rows + Xq.shape[0] > t.queue_depth:
                 if t.admission == "reject":
                     t.stats.count("rejected")
@@ -605,6 +695,11 @@ class ServingScheduler:
         for i in range(n):
             name = self._order[(self._rr + i) % n]
             t = self._tenants[name]
+            if t.inflight or t.quarantined:
+                # inflight: a (possibly zombie) thread is already inside
+                # this tenant's predict_fn; quarantined: the watchdog
+                # benched it until that call returns
+                continue
             ok = t._has_pending() if (force or self._draining) \
                 else t._dispatchable(now)
             if ok:
@@ -671,6 +766,12 @@ class ServingScheduler:
         with self._lock:
             t = self._next_tenant_locked(now, force)
             plan = None if t is None else self._pack_locked(t, now, dropped)
+            if plan is not None:
+                # mark in-flight UNDER the pack lock so the watchdog sees
+                # the dispatch the moment it can exist
+                t.inflight = True
+                t.inflight_since = time.perf_counter()
+                t.inflight_riders = list(plan[0])
         # futures resolve OUTSIDE the lock: done-callbacks may re-enter
         # (submit a follow-up request) without deadlocking
         for req in dropped:
@@ -687,49 +788,41 @@ class ServingScheduler:
         self._execute(t, *plan, t_pack0=now)
         return True
 
-    def _execute(self, t: Tenant, riders, slot: int, *,
-                 t_pack0: float | None = None):
-        """Run one packed slot through the tenant's predict_fn and fan the
-        answers back out (called WITHOUT the lock)."""
-        if t_pack0 is None:
-            t_pack0 = time.perf_counter()
-        parts = [req.Xq[a:a + k] for req, a, k in riders]
-        rows = sum(k for _, _, k in riders)
-        batch = np.concatenate(parts, axis=0)
-        if rows < slot:
-            # edge-replicate: pad rows are a served workload, never X=0
-            batch = np.concatenate(
-                [batch, np.repeat(batch[-1:], slot - rows, axis=0)])
-        t0 = time.perf_counter()
+    def _predict_slot(self, t: Tenant, batch, rows: int, retries: int):
+        """Run one slot batch through predict_fn with retry-on-failure
+        (exponential backoff). Returns host arrays (mean, var, t_disp,
+        t_dev); raises the LAST exception once retries are exhausted.
+        device->host transfer stays inside the guard: deferred runtime
+        errors surface here, failing the dispatch and not the worker."""
+        attempt = 0
+        while True:
+            try:
+                out = t.predict_fn(jnp.asarray(batch))
+                mean, var = out[0], out[1]
+                t_disp = time.perf_counter()   # async dispatch returned
+                jax.block_until_ready(mean)
+                t_dev = time.perf_counter()
+                return (np.asarray(mean)[:rows], np.asarray(var)[:rows],
+                        t_disp, t_dev)
+            except Exception:
+                if attempt >= retries:
+                    raise
+                t.stats.count("retried")
+                time.sleep(t.retry_backoff_ms * (2.0 ** attempt) * 1e-3)
+                attempt += 1
+
+    def _fail_riders(self, t: Tenant, riders, exc):
         for req, _, _ in riders:
             if req.span is not None:
-                # a multi-slot request re-enters "queue" after each slot's
-                # stitch, so the stages stay contiguous across slots
-                req.span.advance("queue", t_pack0)
-                req.span.advance("pack", t0)
-        try:
-            out = t.predict_fn(jnp.asarray(batch))
-            mean, var = out[0], out[1]
-            t_disp = time.perf_counter()       # async dispatch returned
-            jax.block_until_ready(mean)
-            t_dev = time.perf_counter()
-            dt = t_dev - t0
-            for req, _, _ in riders:
-                if req.span is not None:
-                    req.span.advance("dispatch", t_disp)
-                    req.span.advance("device", t_dev)
-            # device->host can surface deferred runtime errors; keep it in
-            # the guard so a failure fails the riders, not the worker
-            mean = np.asarray(mean)[:rows]
-            var = np.asarray(var)[:rows]
-        except Exception as exc:       # fail every rider, not just one
-            for req, _, _ in riders:
-                if req.span is not None:
-                    req.span.advance("stitch")
-                    self._emit(req.span.event("error", rows=req.n))
-                if not req.fut.cancelled():
-                    req.fut.set_exception(exc)
-            return
+                req.span.advance("stitch")
+                self._emit(req.span.event("error", rows=req.n))
+            if not req.fut.done():     # done(): watchdog may have beaten us
+                req.fut.set_exception(exc)
+
+    def _deliver(self, t: Tenant, riders, mean, var, slot: int, dt: float):
+        """Fan a served slot's answers back out to its riders and account
+        the dispatch (called WITHOUT the lock)."""
+        rows = sum(k for _, _, k in riders)
         off = 0
         done = time.perf_counter()
         for req, _, k in riders:
@@ -746,7 +839,7 @@ class ServingScheduler:
                         "ok", rows=req.n, slots=len(req.parts)))
                 else:
                     t.stats.record_latency(done - req.arrival)
-                if not req.fut.cancelled():
+                if not req.fut.done():
                     req.fut.set_result((m, v))
             elif req.span is not None:
                 req.span.advance("stitch")     # next slot waits in "queue"
@@ -756,17 +849,87 @@ class ServingScheduler:
         t.stats.add_engine_seconds(dt)
         t.stats.update_gauges()
 
+    def _isolate_riders(self, t: Tenant, riders, exc):
+        """Per-rider failure isolation: the shared slot failed after
+        retries, so re-run each rider ALONE (smallest fitting slot, single
+        attempt). Healthy riders get answers; only the poisoned one(s)
+        get the exception."""
+        for rider in riders:
+            req, a, k = rider
+            sub = req.Xq[a:a + k]
+            slot = next((s for s in t.slots if s >= k), t.slots[-1])
+            batch = sub if k == slot else np.concatenate(
+                [sub, np.repeat(sub[-1:], slot - k, axis=0)])
+            t0 = time.perf_counter()
+            try:
+                mean, var, _, t_dev = self._predict_slot(t, batch, k, 0)
+            except Exception as sub_exc:
+                self._fail_riders(t, [rider], sub_exc)
+            else:
+                t.stats.count("isolated")
+                self._deliver(t, [rider], mean, var, slot, t_dev - t0)
+
+    def _execute(self, t: Tenant, riders, slot: int, *,
+                 t_pack0: float | None = None):
+        """Run one packed slot through the tenant's predict_fn and fan the
+        answers back out (called WITHOUT the lock)."""
+        if t_pack0 is None:
+            t_pack0 = time.perf_counter()
+        try:
+            parts = [req.Xq[a:a + k] for req, a, k in riders]
+            rows = sum(k for _, _, k in riders)
+            batch = np.concatenate(parts, axis=0)
+            if rows < slot:
+                # edge-replicate: pad rows are a served workload, never X=0
+                batch = np.concatenate(
+                    [batch, np.repeat(batch[-1:], slot - rows, axis=0)])
+            t0 = time.perf_counter()
+            for req, _, _ in riders:
+                if req.span is not None:
+                    # a multi-slot request re-enters "queue" after each
+                    # slot's stitch, so stages stay contiguous across slots
+                    req.span.advance("queue", t_pack0)
+                    req.span.advance("pack", t0)
+            try:
+                mean, var, t_disp, t_dev = self._predict_slot(
+                    t, batch, rows, t.retries)
+            except Exception as exc:
+                if t.isolate and len(riders) > 1:
+                    self._isolate_riders(t, riders, exc)
+                else:
+                    self._fail_riders(t, riders, exc)
+                return
+            for req, _, _ in riders:
+                if req.span is not None:
+                    req.span.advance("dispatch", t_disp)
+                    req.span.advance("device", t_dev)
+            self._deliver(t, riders, mean, var, slot, t_dev - t0)
+        finally:
+            with self._lock:
+                t.inflight = False
+                t.inflight_since = None
+                t.inflight_riders = None
+                if t.quarantined:
+                    # the stalled call came back (its riders were already
+                    # failed by the watchdog): the tenant can serve again
+                    t.quarantined = False
+                self._work.notify_all()
+
     # -- worker / lifecycle --------------------------------------------------
 
-    def _worker_loop(self):
+    def _worker_loop(self, gen: int | None = None):
         while True:
             with self._lock:
                 if self._closing:
                     return
+                if gen is not None and gen != self._worker_gen:
+                    return     # superseded by a watchdog-spawned worker
                 now = time.perf_counter()
                 timeout = None
                 ready = False
                 for t in self._tenants.values():
+                    if t.inflight or t.quarantined:
+                        continue
                     if t._dispatchable(now):
                         ready = True
                         break
@@ -779,16 +942,94 @@ class ServingScheduler:
                     self._work.wait(timeout=timeout)
                     if self._closing:
                         return
+                    if gen is not None and gen != self._worker_gen:
+                        return
             self.step()
+
+    def _watchdog_loop(self):
+        """Fail the Futures of any dispatch stuck inside predict_fn past
+        `stall_timeout_s`, quarantine the tenant (until the stuck call
+        returns), fail its queued work, and respawn the worker so OTHER
+        tenants keep serving. The stuck thread itself cannot be killed —
+        when it eventually returns, `_execute`'s `fut.done()` guards make
+        its late answers no-ops."""
+        poll = max(self.stall_timeout_s / 4.0, 1e-3)
+        while not self._wd_stop.wait(poll):
+            now = time.perf_counter()
+            stalled = []
+            with self._lock:
+                if self._closing:
+                    return
+                for t in self._tenants.values():
+                    if not (t.inflight and not t.quarantined
+                            and t.inflight_since is not None):
+                        continue
+                    age = now - t.inflight_since
+                    if age <= self.stall_timeout_s:
+                        continue
+                    t.quarantined = True
+                    riders = list(t.inflight_riders or [])
+                    queued = []
+                    if t.carry is not None:
+                        queued.append(t.carry)
+                        t.carry = None
+                    queued += [r for _, r in t.heap]
+                    queued += list(t.lapsed)
+                    t.heap.clear()
+                    t.lapsed.clear()
+                    t.pending_rows = 0
+                    t.oldest = None
+                    stalled.append((t, riders, queued, age))
+                if stalled:
+                    self._space.notify_all()
+                    respawn = (self._worker is not None
+                               and not self._closing)
+                    if respawn:
+                        self._spawn_worker_locked()
+            for t, riders, queued, age in stalled:
+                t.stats.count("stalled")
+                exc = SchedulerStalled(
+                    f"tenant {t.name!r} dispatch stalled for "
+                    f"{age * 1e3:.0f} ms (> stall_timeout "
+                    f"{self.stall_timeout_s * 1e3:.0f} ms); in-flight and "
+                    f"queued requests failed, tenant quarantined")
+                self._fail_riders(t, riders, exc)
+                for req in queued:
+                    if req.span is not None:
+                        req.span.advance("queue")
+                        self._emit(req.span.event("stalled", rows=req.n))
+                    if not req.fut.done():
+                        req.fut.set_exception(exc)
 
     def pending(self) -> int:
         """Total undispatched query rows across tenants."""
         with self._lock:
             return sum(t.pending_rows for t in self._tenants.values())
 
-    def close(self, *, drain: bool = True):
-        """Stop accepting requests. drain=True (default) serves everything
-        pending first; drain=False cancels every queued Future."""
+    def _sweep_leftovers_locked(self) -> list:
+        """Remove and return every queued request (call with _lock held)."""
+        leftovers = []
+        for t in self._tenants.values():
+            if t.carry is not None:
+                leftovers.append(t.carry)
+                t.carry = None
+            leftovers += [r for _, r in t.heap]
+            leftovers += list(t.lapsed)
+            t.heap.clear()
+            t.lapsed.clear()
+            t.pending_rows = 0
+            t.oldest = None
+        return leftovers
+
+    def close(self, *, drain: bool = True, timeout: float | None = 30.0):
+        """Stop accepting requests — BOUNDED: returns within ~`timeout`
+        seconds even with a wedged predict_fn or a quarantined tenant.
+
+        drain=True (default) serves everything pending first; whatever is
+        still queued at the deadline (stuck tenants, timeout hit) is
+        failed with `SchedulerClosed` — no Future is ever left hanging.
+        drain=False cancels every queued Future immediately.
+        `timeout=None` restores the unbounded v1 wait."""
         with self._lock:
             if self._closing:
                 return
@@ -796,31 +1037,46 @@ class ServingScheduler:
             self._draining = drain
             self._work.notify_all()
             self._space.notify_all()
+        deadline = None if timeout is None \
+            else time.perf_counter() + float(timeout)
+        self._wd_stop.set()
+        if self._watchdog is not None:
+            self._watchdog.join(timeout=None if deadline is None
+                                else max(0.0, deadline - time.perf_counter()))
         if self._worker is not None:
-            self._worker.join()
+            self._worker.join(timeout=None if deadline is None
+                              else max(0.0, deadline - time.perf_counter()))
         if drain:
-            while self.step(force=True):
-                pass
+            while deadline is None or time.perf_counter() < deadline:
+                if not self.step(force=True):
+                    break
+            with self._lock:
+                leftovers = self._sweep_leftovers_locked()
+                # anything still in-flight here belongs to a thread that
+                # did not come back before the deadline: fail its riders
+                # too (the fut.done() guards turn a late answer into a
+                # no-op) so close() never strands a Future
+                for t in self._tenants.values():
+                    if t.inflight and t.inflight_riders:
+                        leftovers += [req for req, _, _ in
+                                      t.inflight_riders]
+            for req in leftovers:
+                if not req.fut.done():
+                    req.fut.set_exception(SchedulerClosed(
+                        "scheduler close(drain=True) could not serve this "
+                        "request before the close timeout (stalled or "
+                        "quarantined tenant)"))
         else:
             with self._lock:
-                leftovers = []
-                for t in self._tenants.values():
-                    if t.carry is not None:
-                        leftovers.append(t.carry)
-                        t.carry = None
-                    leftovers += [r for _, r in t.heap]
-                    leftovers += list(t.lapsed)
-                    t.heap.clear()
-                    t.lapsed.clear()
-                    t.pending_rows = 0
-                    t.oldest = None
+                leftovers = self._sweep_leftovers_locked()
             for req in leftovers:
                 # a partially-served request cannot be cancelled (its
                 # Future may already have riders waiting on streamed rows
                 # that will never come) — fail it explicitly instead
                 if req.off > 0:
-                    req.fut.set_exception(SchedulerClosed(
-                        "scheduler closed mid-request (drain=False)"))
+                    if not req.fut.done():
+                        req.fut.set_exception(SchedulerClosed(
+                            "scheduler closed mid-request (drain=False)"))
                 else:
                     req.fut.cancel()
         if self._own_span_log and self.span_log is not None:

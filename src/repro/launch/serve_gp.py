@@ -203,13 +203,54 @@ def _tenant_fleet(args, key, spec: str, ap):
     return fleet, method
 
 
+def build_fault_plan(args, ap):
+    """--fault-* flags -> a seeded `repro.chaos.FaultPlan` (None when no
+    fault flag is set). Dropout specs are AGENT:AT[:UNTIL] in consensus
+    rounds (AT=0 models an agent dead before the prediction starts)."""
+    from ..chaos import Dropout, FaultPlan
+    dropouts = []
+    for spec in args.fault_dropout or ():
+        parts = spec.split(":")
+        if not 1 <= len(parts) <= 3:
+            ap.error(f"--fault-dropout wants AGENT[:AT[:UNTIL]], "
+                     f"got {spec!r}")
+        try:
+            dropouts.append(Dropout(
+                int(parts[0]),
+                at=int(parts[1]) if len(parts) > 1 else 0,
+                until=int(parts[2]) if len(parts) > 2 else None))
+        except ValueError:
+            ap.error(f"--fault-dropout fields must be integers, "
+                     f"got {spec!r}")
+    try:
+        plan = FaultPlan(seed=args.fault_seed,
+                         dropouts=tuple(dropouts),
+                         edge_loss=args.fault_edge_loss,
+                         nan_agents=tuple(args.fault_nan_agent or ()),
+                         straggle_every=args.fault_straggle_every,
+                         straggle_ms=args.fault_straggle_ms,
+                         fail_every=args.fault_fail_every)
+    except ValueError as e:
+        ap.error(str(e))
+    return None if plan.empty else plan
+
+
 def serve_scheduler(args, fleet: GPFleet, method, key, ap):
     """Serve through the request-level `ServingScheduler`: every --tenant
     is a resident fleet with its own compiled programs, interleaved
     round-robin in ONE process; per-tenant p50/p99 and the zero-recompile
-    check are reported at exit."""
+    check are reported at exit.
+
+    With --fault-* flags the whole run goes through a seeded
+    `repro.chaos.FaultPlan`: consensus faults serve degraded (flagged)
+    predictions, serving faults (stragglers / injected failures) exercise
+    the scheduler's retry, isolation, and watchdog paths. The exit
+    contract under chaos is: every Future resolves (zero hung), failures
+    are TYPED, and serving still adds zero traces."""
+    from concurrent.futures import TimeoutError as FutureTimeout
     from .scheduler import (DeadlineExceeded, SchedulerSaturated,
-                            ServingScheduler)
+                            SchedulerStalled, ServingScheduler)
+    plan = build_fault_plan(args, ap)
     if args.tenant:
         tenants: dict = {}
         for item in args.tenant:
@@ -224,12 +265,14 @@ def serve_scheduler(args, fleet: GPFleet, method, key, ap):
         tenants = {"default": (fleet, method)}
 
     sched = ServingScheduler(max_wait_ms=args.max_wait_ms,
-                             span_log=args.trace_log)
+                             span_log=args.trace_log,
+                             stall_timeout_ms=args.stall_timeout_ms)
     admission = "reject" if args.loadgen else "block"
     for name, (fl, m) in tenants.items():
         sched.add_fleet(name, fl, method=m, max_slot=args.batch,
                         admission=admission,
-                        deadline_policy=args.deadline_policy)
+                        deadline_policy=args.deadline_policy,
+                        fault_plan=plan)
     # registration warmed every slot; serving must add zero traces
     misses0 = {n: fl.jit_cache_misses for n, (fl, _) in tenants.items()}
 
@@ -261,6 +304,8 @@ def serve_scheduler(args, fleet: GPFleet, method, key, ap):
                     deadline_ms=args.deadline_ms))
             except SchedulerSaturated:
                 rejected += 1
+            except SchedulerStalled:
+                rejected += 1      # tenant quarantined by the watchdog
     else:
         for i in range(args.requests):
             name = names[i % len(names)]
@@ -269,13 +314,17 @@ def serve_scheduler(args, fleet: GPFleet, method, key, ap):
             futs.append(sched.add_request(Xq, tenant=name,
                                           priority=args.priority,
                                           deadline_ms=args.deadline_ms))
-    served = dropped = 0
+    served = dropped = failed = hung = 0
     for f in futs:
         try:
             f.result(timeout=600)
             served += 1
         except DeadlineExceeded:
             dropped += 1
+        except FutureTimeout:
+            hung += 1              # a Future that never resolved: the bug
+        except Exception:
+            failed += 1            # typed failure (injected/stalled/chaos)
     sched.close()
     dt = time.perf_counter() - t0
     drive = (f"open-loop Poisson {args.loadgen:.0f} req/s/tenant x "
@@ -283,7 +332,10 @@ def serve_scheduler(args, fleet: GPFleet, method, key, ap):
              else f"{args.requests} requests")
     print(f"scheduler: {len(tenants)} tenant(s), {drive} -> "
           f"{served} served / {dropped} past-deadline / {rejected} rejected "
-          f"in {dt*1e3:.1f} ms")
+          f"/ {failed} failed / {hung} hung in {dt*1e3:.1f} ms")
+    assert hung == 0, f"{hung} futures never resolved"
+    if plan is not None:
+        print(f"fault plan: {plan}")
     for name, (fl, m) in tenants.items():
         st = sched.tenant_stats[name]
         p50, p99 = st.latency_ms(50, 99)
@@ -292,6 +344,8 @@ def serve_scheduler(args, fleet: GPFleet, method, key, ap):
               f"{st.batches} slots, padding {100*st.padding_fraction:.1f}%, "
               f"p50 {p50:.2f} ms, p99 {p99:.2f} ms, dropped {st.dropped}, "
               f"lapsed {st.lapsed}, rejected {st.rejected}, "
+              f"retried {st.retried}, isolated {st.isolated}, "
+              f"stalled {st.stalled}, "
               f"engine busy {st.engine_seconds*1e3:.1f} ms, "
               f"{recompiles} recompiles after warmup")
     bad = [n for n, (fl, _) in tenants.items()
@@ -433,6 +487,33 @@ def main(argv=None):
     ap.add_argument("--trace-log", default=None, metavar="PATH",
                     help="scheduler mode: append one JSONL span event per "
                          "request (per-stage timings) to PATH")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="chaos: seed for the replayable FaultPlan RNG "
+                         "(edge loss draws)")
+    ap.add_argument("--fault-dropout", action="append", default=None,
+                    metavar="AGENT[:AT[:UNTIL]]",
+                    help="chaos: drop AGENT at consensus round AT "
+                         "(default 0), rejoining at UNTIL (default: never); "
+                         "repeatable")
+    ap.add_argument("--fault-edge-loss", type=float, default=0.0,
+                    help="chaos: per-round probability each live edge "
+                         "silently drops its message")
+    ap.add_argument("--fault-nan-agent", action="append", type=int,
+                    default=None, metavar="AGENT",
+                    help="chaos: AGENT emits NaN payloads (scrubbed by the "
+                         "degraded engine); repeatable")
+    ap.add_argument("--fault-straggle-every", type=int, default=0,
+                    metavar="N",
+                    help="chaos: every Nth scheduler dispatch sleeps "
+                         "--fault-straggle-ms before the engine call")
+    ap.add_argument("--fault-straggle-ms", type=float, default=0.0)
+    ap.add_argument("--fault-fail-every", type=int, default=0, metavar="N",
+                    help="chaos: every Nth scheduler dispatch raises "
+                         "FaultInjected (exercises retry/isolation)")
+    ap.add_argument("--stall-timeout-ms", type=float, default=None,
+                    help="scheduler watchdog: fail in-flight futures of a "
+                         "dispatch stalled longer than this with "
+                         "SchedulerStalled and quarantine the tenant")
     ap.add_argument("--compare-uncached", action="store_true")
     ap.add_argument("--online", action="store_true",
                     help="interleave observe and predict streams (sliding-"
@@ -457,6 +538,13 @@ def main(argv=None):
                  "--scheduler")
     if args.trace_log and not args.scheduler:
         ap.error("--trace-log belongs to scheduler serving; add --scheduler")
+    chaos_flags = (args.fault_dropout or args.fault_nan_agent
+                   or args.fault_edge_loss or args.fault_straggle_every
+                   or args.fault_fail_every
+                   or args.stall_timeout_ms is not None)
+    if chaos_flags and not args.scheduler:
+        ap.error("--fault-*/--stall-timeout-ms belong to scheduler "
+                 "serving; add --scheduler")
 
     server = None
     if args.metrics_port is not None:

@@ -1,0 +1,342 @@
+"""Chaos engineering: fault plans, degraded-mode consensus, and the
+engine/fleet contracts under injected faults.
+
+The acceptance bar (ISSUE 8): under a seeded FaultPlan with agents
+dropping mid-prediction, every DAC-family method returns finite,
+degradation-flagged results over the surviving component or raises a
+typed error — no NaN, no silent wrongness — and an empty/consensus-free
+plan leaves served results BITWISE unchanged.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.chaos import (Dropout, FaultInjected, FaultPlan,
+                         membership_events, wrap_predict_fn)
+from repro.core.consensus import (ConsensusDiverged, complete_graph,
+                                  connected_components, dac, dac_masked,
+                                  dac_masked_sums, path_graph,
+                                  random_connected_graph)
+from repro.core.gp import pack
+from repro.core.prediction.engine import PredictionEngine, fit_experts
+
+M = 8
+METHODS = ["poe", "gpoe", "bcm", "rbcm", "grbcm", "npae", "npae_star",
+           "nn_poe", "nn_gpoe", "nn_bcm", "nn_rbcm", "nn_grbcm", "nn_npae"]
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: schedules, determinism, classification
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_classification():
+    assert FaultPlan().empty and FaultPlan().consensus_free
+    timing = FaultPlan(straggle_every=3, straggle_ms=5.0, fail_every=7)
+    assert timing.consensus_free and not timing.empty
+    for plan in (FaultPlan(dropouts=(Dropout(1),)),
+                 FaultPlan(edge_loss=0.1),
+                 FaultPlan(nan_agents=(2,))):
+        assert not plan.consensus_free and not plan.empty
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(edge_loss=1.0)
+    with pytest.raises(ValueError):
+        FaultPlan(fail_every=-1)
+    with pytest.raises(ValueError):
+        FaultPlan(dropouts=(Dropout(9),)).alive_schedule(M, 10)
+    with pytest.raises(ValueError):
+        FaultPlan(nan_agents=(-1,)).corrupt_mask(M)
+
+
+def test_alive_schedule_windows():
+    plan = FaultPlan(dropouts=(Dropout(1, at=0), Dropout(3, at=4, until=7)))
+    alive = plan.alive_schedule(M, 10)
+    assert alive.shape == (10, M)
+    assert (alive[:, 1] == 0).all()                  # dead for the whole run
+    assert (alive[:4, 3] == 1).all()                 # alive before `at`
+    assert (alive[4:7, 3] == 0).all()                # dropped window
+    assert (alive[7:, 3] == 1).all()                 # rejoined at `until`
+    final = plan.final_alive(M, 10)
+    assert not final[1] and final[3] and final.sum() == M - 1
+
+
+def test_edge_schedule_seeded_and_symmetric():
+    plan = FaultPlan(seed=11, edge_loss=0.3)
+    e1 = plan.edge_schedule(M, 20)
+    e2 = FaultPlan(seed=11, edge_loss=0.3).edge_schedule(M, 20)
+    np.testing.assert_array_equal(e1, e2)            # replayable
+    assert (e1 == np.transpose(e1, (0, 2, 1))).all()  # symmetric loss
+    assert (np.diagonal(e1, axis1=1, axis2=2) == 0).all()
+    e3 = FaultPlan(seed=12, edge_loss=0.3).edge_schedule(M, 20)
+    assert not np.array_equal(e1, e3)                # seed actually matters
+    assert FaultPlan(seed=11).edge_schedule(M, 20) is None
+
+
+def test_wrap_predict_fn_faults_are_deterministic():
+    naps = []
+    wrapped = wrap_predict_fn(lambda Xs: Xs + 1,
+                              FaultPlan(straggle_every=2, straggle_ms=4.0,
+                                        fail_every=3),
+                              sleep=naps.append)
+    out = []
+    for i in range(1, 7):
+        try:
+            wrapped(i)
+            out.append("ok")
+        except FaultInjected:
+            out.append("fail")
+    # 1-based call index: sleeps on 2, 4, 6; raises on 3, 6 — and the raise
+    # happens BEFORE the sleep, so call 6 fails without napping
+    assert out == ["ok", "ok", "fail", "ok", "ok", "fail"]
+    assert naps == [4e-3, 4e-3]
+    assert wrapped.calls["n"] == 6
+
+
+def test_wrap_predict_fn_counter_is_thread_safe():
+    plan = FaultPlan(fail_every=2)
+    wrapped = wrap_predict_fn(lambda Xs: Xs, plan)
+    failures = []
+
+    def hammer():
+        for _ in range(50):
+            try:
+                wrapped(0)
+            except FaultInjected:
+                failures.append(1)
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert wrapped.calls["n"] == 200 and len(failures) == 100
+
+
+def test_membership_events():
+    plan = FaultPlan(dropouts=(Dropout(2, at=5, until=8), Dropout(0, at=1)))
+    assert membership_events(plan, M, 10) == [
+        (1, "leave", 0), (5, "leave", 2), (8, "rejoin", 2)]
+    # events past the horizon are clipped
+    assert membership_events(plan, M, 3) == [(1, "leave", 0)]
+
+
+# ---------------------------------------------------------------------------
+# Degraded consensus numerics
+# ---------------------------------------------------------------------------
+
+def test_connected_components_with_liveness():
+    A = path_graph(6)
+    labels = connected_components(A)
+    assert (np.asarray(labels) == 0).all()
+    alive = np.ones(6, bool)
+    alive[2] = False                       # path splits at the dead node
+    labels = np.asarray(connected_components(A, alive=jnp.asarray(alive)))
+    assert labels[0] == labels[1]
+    assert labels[3] == labels[4] == labels[5]
+    assert labels[0] != labels[3]
+
+
+def test_dac_masked_all_alive_matches_dac():
+    rng = np.random.default_rng(0)
+    A = random_connected_graph(M, 0.4, seed=1)
+    w0 = jnp.asarray(rng.standard_normal((M, 3)))
+    alive = jnp.ones((300, M))
+    w_m, _ = dac_masked(w0, A, alive)
+    w_e, _ = dac(w0, A, 300)
+    np.testing.assert_allclose(np.asarray(w_m), np.asarray(w_e), atol=1e-9)
+
+
+def test_dac_masked_sums_round0_dropout_is_exact():
+    """Dead-from-round-0 agents: the surviving component's readout equals
+    the exact sum over its members (conservation of the masked update)."""
+    rng = np.random.default_rng(1)
+    A = complete_graph(M)
+    w0 = jnp.asarray(rng.standard_normal((M, 2)))
+    plan = FaultPlan(dropouts=(Dropout(2, at=0),))
+    alive = jnp.asarray(plan.alive_schedule(M, 500))
+    readout = jnp.asarray((plan.final_alive(M, 500)).astype(float))
+    sums, res = dac_masked_sums(w0, A, alive, readout, jnp.asarray(7.0))
+    ref = np.asarray(w0)[np.arange(M) != 2].sum(axis=0)
+    np.testing.assert_allclose(np.asarray(sums), ref, atol=1e-6)
+    assert float(res[-1]) < 1e-7
+
+
+def test_dac_masked_freezes_dead_agents():
+    rng = np.random.default_rng(2)
+    A = complete_graph(M)
+    w0 = jnp.asarray(rng.standard_normal((M,)))
+    alive = jnp.asarray(FaultPlan(dropouts=(Dropout(4, at=10),))
+                        .alive_schedule(M, 200))
+    w, _ = dac_masked(w0, A, alive)
+    # a dead agent holds the state it had at dropout, not the consensus
+    w10, _ = dac_masked(w0, A, alive[:10])
+    assert np.isclose(float(w[4]), float(w10[4]))
+    live = np.asarray(w)[np.arange(M) != 4]
+    assert np.ptp(live) < 1e-6             # survivors still reach consensus
+
+
+# ---------------------------------------------------------------------------
+# Engine under fault plans (the acceptance scenario)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine():
+    rng = np.random.default_rng(0)
+    Ni, D = 24, 1
+    X = rng.uniform(-3, 3, (M, Ni, D))
+    y = np.sin(X.sum(-1)) + 0.05 * rng.standard_normal((M, Ni))
+    log_theta = pack(np.array([0.7]), 1.0, 0.1)
+    A = random_connected_graph(M, 0.4, seed=1)
+    f = fit_experts(log_theta, jnp.asarray(X), jnp.asarray(y))
+    Xc = rng.uniform(-3, 3, (Ni, D))
+    yc = np.sin(Xc.sum(-1)) + 0.05 * rng.standard_normal(Ni)
+    Xa = np.concatenate([np.broadcast_to(Xc, (M, Ni, D)), X], axis=1)
+    ya = np.concatenate([np.broadcast_to(yc, (M, Ni)), y], axis=1)
+    fa = fit_experts(log_theta, jnp.asarray(Xa), jnp.asarray(ya))
+    fc = fit_experts(log_theta, jnp.asarray(Xc)[None], jnp.asarray(yc)[None])
+    eng = PredictionEngine(f, A, chunk=16, dac_iters=600, fitted_aug=fa,
+                           fitted_comm=fc)
+    Xs = jnp.asarray(rng.uniform(-3, 3, (37, D)))
+    return eng, Xs
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_consensus_free_plan_is_bitwise_identical(engine, method):
+    eng, Xs = engine
+    m0, v0, _ = eng.predict(method, Xs)
+    m1, v1, info = eng.predict(method, Xs, fault_plan=FaultPlan(
+        straggle_every=2, straggle_ms=1.0, fail_every=5))
+    assert np.array_equal(np.asarray(m0), np.asarray(m1))
+    assert np.array_equal(np.asarray(v0), np.asarray(v1))
+    assert "degraded" not in info
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_dropout_serves_finite_and_flagged(engine, method):
+    """25% of agents drop (one before, one mid-prediction), one agent
+    emits NaN payloads, 5% message loss — every method still serves
+    finite moments with the degradation surface filled in."""
+    eng, Xs = engine
+    plan = FaultPlan(seed=7, dropouts=(Dropout(1, at=0), Dropout(3, at=240)),
+                     nan_agents=(5,), edge_loss=0.05)
+    mu, var, info = eng.predict(method, Xs, fault_plan=plan)
+    assert np.isfinite(np.asarray(mu)).all()
+    assert np.isfinite(np.asarray(var)).all()
+    assert info["degraded"] is True
+    assert info["alive_agents"] == M - 2
+    assert info["scrubbed_agents"] >= 1          # the NaN agent was caught
+    residual = info.get("dac_residual", info.get("dale_residual"))
+    assert float(residual) < 1e-2
+
+
+def test_round0_dropout_equals_exact_masked_aggregation(engine):
+    """An agent dead before the prediction starts is EXACT exclusion, not
+    an estimate: the degraded readout matches the masked centralized-
+    equivalent aggregation over the survivors (float32 consensus tol)."""
+    from repro.core.prediction.decentralized import dec_gpoe_from_moments
+    from repro.core.prediction.local import local_moments_cached
+    eng, Xs = engine
+    f = eng.fitted
+    mu, _, info = eng.predict("gpoe", Xs,
+                              fault_plan=FaultPlan(dropouts=(Dropout(2),)))
+    assert info["degraded"] is True and info["excluded_agents"] == 1
+    alive = np.ones(M, bool)
+    alive[2] = False
+    mu_l, var_l = local_moments_cached(f.log_theta, f.Xp, f.L, f.alpha, Xs)
+    mref, _, _ = dec_gpoe_from_moments(
+        mu_l, var_l, f.prior_var, eng.A, iters=600,
+        mask=jnp.asarray(alive, mu_l.dtype)[:, None])
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mref), atol=1e-4)
+
+
+def test_partition_serves_largest_component(engine):
+    """A path graph losing an articulation agent splits; the engine must
+    serve the LARGEST surviving component and say so — never silently
+    average across a partition."""
+    rng = np.random.default_rng(3)
+    f = fit_experts(pack(np.array([0.7]), 1.0, 0.1),
+                    jnp.asarray(rng.uniform(-3, 3, (M, 24, 1))),
+                    jnp.asarray(rng.standard_normal((M, 24))))
+    eng = PredictionEngine(f, path_graph(M), chunk=16, dac_iters=600)
+    Xs = jnp.asarray(rng.uniform(-3, 3, (11, 1)))
+    mu, var, info = eng.predict("rbcm", Xs,
+                                fault_plan=FaultPlan(dropouts=(Dropout(1),)))
+    assert np.isfinite(np.asarray(mu)).all()
+    assert np.isfinite(np.asarray(var)).all()
+    assert info["n_components"] == 2
+    # agent 0 is cut off from the main component: excluded though alive
+    assert info["alive_agents"] == M - 1
+    assert info["excluded_agents"] == 2
+
+
+def test_cen_methods_reject_consensus_faults(engine):
+    eng, Xs = engine
+    with pytest.raises(ValueError):
+        eng.predict("cen_poe", Xs,
+                    fault_plan=FaultPlan(dropouts=(Dropout(1),)))
+
+
+def test_total_dropout_raises_typed_error(engine):
+    eng, Xs = engine
+    with pytest.raises(ConsensusDiverged):
+        eng.predict("poe", Xs, fault_plan=FaultPlan(
+            dropouts=tuple(Dropout(i) for i in range(M))))
+
+
+def test_fault_plans_share_compiled_programs(engine):
+    """Chaos schedules enter the trace as ARGUMENTS, not constants: a
+    structurally identical second plan must reuse the compiled program
+    (the serving scheduler's zero-recompile contract extends to chaos)."""
+    eng, Xs = engine
+    eng.predict("poe", Xs, fault_plan=FaultPlan(
+        seed=7, dropouts=(Dropout(1),), nan_agents=(5,), edge_loss=0.05))
+    n0 = eng.jit_cache_misses
+    eng.predict("poe", Xs, fault_plan=FaultPlan(
+        seed=9, dropouts=(Dropout(4, at=50),), nan_agents=(0,),
+        edge_loss=0.05))
+    assert eng.jit_cache_misses == n0
+
+
+# ---------------------------------------------------------------------------
+# Fleet facade: typed degradation, health
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fleet():
+    from repro.fleet import FleetConfig, GPFleet
+    rng = np.random.default_rng(5)
+    Xp = jnp.asarray(rng.uniform(-3, 3, (M, 24, 1)))
+    yp = jnp.asarray(np.sin(np.asarray(Xp).sum(-1))
+                     + 0.05 * rng.standard_normal((M, 24)))
+    cfg = FleetConfig(num_agents=M, method="rbcm", chunk=16, dac_iters=600,
+                      input_dim=1, theta0=(0.7, 1.0, 0.1))
+    return GPFleet(cfg).fit(Xp, yp, key=jax.random.PRNGKey(0), train=False)
+
+
+def test_fleet_degraded_is_opt_in(fleet):
+    from repro.fleet import FleetDegraded
+    Xs = jnp.linspace(-3, 3, 9)[:, None]
+    plan = FaultPlan(dropouts=(Dropout(1),))
+    with pytest.raises(FleetDegraded) as exc:
+        fleet.predict(Xs, fault_plan=plan)
+    assert exc.value.info["degraded"] is True
+    assert exc.value.result is not None          # the answer rides along
+    mu, var, info = fleet.predict(Xs, fault_plan=plan, allow_degraded=True)
+    assert np.isfinite(np.asarray(mu)).all()
+    assert info["degraded"] is True
+
+
+def test_fleet_health_surface(fleet):
+    Xs = jnp.linspace(-3, 3, 9)[:, None]
+    fleet.predict(Xs, fault_plan=FaultPlan(dropouts=(Dropout(1),)),
+                  allow_degraded=True)
+    h = fleet.health()
+    assert h["num_agents"] == M and h["is_fitted"]
+    assert h["graph_connected"] is True
+    assert h["degraded_predictions"] >= 1
+    assert h["last_degraded"]["alive_agents"] == M - 1

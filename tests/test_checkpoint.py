@@ -113,3 +113,74 @@ def test_load_checkpoint_back_compat(tmp_path):
     out = load_checkpoint(str(tmp_path), 0, tree)
     np.testing.assert_array_equal(np.asarray(out["w"]),
                                   np.asarray(tree["w"]))
+
+
+# ---------------------------------------------------------------------------
+# atomic publication: temp + fsync + rename, arrays before manifest
+# ---------------------------------------------------------------------------
+
+def test_save_leaves_no_temp_files(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    save_checkpoint(str(tmp_path), 2, _tree())
+    stray = [f for f in os.listdir(tmp_path) if ".tmp" in f]
+    assert stray == []
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_latest_step_ignores_temp_names(tmp_path):
+    """A crash can strand a temp file; step discovery must never count it
+    (np.savez names temps `step_XXXXXXXX.npz.tmp.npz`)."""
+    save_checkpoint(str(tmp_path), 3, _tree())
+    (tmp_path / "step_00000009.npz.tmp.npz").write_bytes(b"torn write")
+    (tmp_path / "manifest.json.tmp").write_text("{")
+    assert latest_step(str(tmp_path)) == 3
+    restore(str(tmp_path), _template(_tree()))    # still loads cleanly
+
+
+def test_crash_before_manifest_keeps_previous_checkpoint(tmp_path,
+                                                         monkeypatch):
+    """Arrays land before the manifest: dying between the two leaves the
+    PREVIOUS manifest intact, so every observable state is loadable."""
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 1, tree)
+    manifest_before = (tmp_path / "manifest.json").read_text()
+
+    real_replace = os.replace
+
+    def exploding_replace(src, dst):
+        if str(dst).endswith("manifest.json"):
+            raise OSError("simulated crash before manifest publish")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", exploding_replace)
+    with pytest.raises(OSError, match="simulated crash"):
+        save_checkpoint(str(tmp_path), 2, tree)
+    monkeypatch.setattr(os, "replace", real_replace)
+    # the old manifest is untouched and still describes a loadable step
+    assert (tmp_path / "manifest.json").read_text() == manifest_before
+    assert json.loads(manifest_before)["step"] == 1
+    out = restore(str(tmp_path), _template(tree), step=1)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_crash_during_array_write_keeps_previous_array_file(tmp_path,
+                                                            monkeypatch):
+    """Dying mid-rename of the .npz leaves the previous step's file whole
+    (rename is atomic): restore of the old step still works."""
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 5, tree)
+
+    real_replace = os.replace
+
+    def exploding_replace(src, dst):
+        if str(dst).endswith(".npz"):
+            raise OSError("simulated crash during array publish")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", exploding_replace)
+    with pytest.raises(OSError, match="simulated crash"):
+        save_checkpoint(str(tmp_path), 6, tree)
+    monkeypatch.setattr(os, "replace", real_replace)
+    assert latest_step(str(tmp_path)) == 5
+    restore(str(tmp_path), _template(tree))

@@ -173,3 +173,81 @@ def test_dec_nn_npae_dale(setup):
     # assert it is bounded and the variance is sane
     assert rmse(m, m_ref) < 0.5
     assert np.all(np.asarray(v) > 0)
+
+
+# ---------------------------------------------------------------------------
+# Degenerate inputs: every method must stay finite (robustness floor).
+# Real fleets hit these constantly — sensors resampling the same location
+# (duplicate rows), calm periods (zero-variance windows), fleets reduced to
+# one survivor (single-agent graph) — and a silent NaN here poisons every
+# downstream consensus consumer.
+# ---------------------------------------------------------------------------
+
+ALL_METHODS = ["poe", "gpoe", "bcm", "rbcm", "grbcm", "npae", "npae_star",
+               "nn_poe", "nn_gpoe", "nn_bcm", "nn_rbcm", "nn_grbcm",
+               "nn_npae"]
+
+
+def _engine_from(X, y, num_agents):
+    """A PredictionEngine (with grbcm experts) over explicit raw data."""
+    from repro.core.consensus import random_connected_graph
+    from repro.core.prediction.engine import PredictionEngine, fit_experts
+    rng = np.random.default_rng(99)
+    Ni, D = X.shape[1], X.shape[2]
+    A = (jnp.zeros((1, 1)) if num_agents == 1
+         else random_connected_graph(num_agents, 0.4, seed=2))
+    f = fit_experts(TRUE_LT, jnp.asarray(X), jnp.asarray(y))
+    Xc = rng.uniform(-1, 1, (Ni, D))
+    yc = rng.standard_normal(Ni) * 0.1
+    Xa = np.concatenate([np.broadcast_to(Xc, (num_agents, Ni, D)), X],
+                        axis=1)
+    ya = np.concatenate([np.broadcast_to(yc, (num_agents, Ni)), y], axis=1)
+    fa = fit_experts(TRUE_LT, jnp.asarray(Xa), jnp.asarray(ya))
+    fc = fit_experts(TRUE_LT, jnp.asarray(Xc)[None], jnp.asarray(yc)[None])
+    return PredictionEngine(f, A, chunk=16, dac_iters=300, fitted_aug=fa,
+                            fitted_comm=fc)
+
+
+def _assert_finite(eng, method, Xs):
+    mu, var, _ = eng.predict(method, Xs)
+    assert np.isfinite(np.asarray(mu)).all(), method
+    assert np.isfinite(np.asarray(var)).all(), method
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_duplicate_inputs_stay_finite(method):
+    """Every agent's window holds the SAME point repeated (plus noise-free
+    duplicated queries): the noise term must keep factorization and
+    aggregation finite."""
+    rng = np.random.default_rng(4)
+    base = rng.uniform(-1, 1, (M, 1, 2))
+    X = np.repeat(base, 12, axis=1)            # 12 identical rows per agent
+    y = rng.standard_normal((M, 12)) * 0.1
+    eng = _engine_from(X, y, M)
+    Xs = jnp.asarray(np.repeat(base[0], 5, axis=0))   # duplicated queries
+    _assert_finite(eng, method, Xs)
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_zero_variance_window_stays_finite(method):
+    """Constant targets (a becalmed sensor): zero sample variance in y must
+    not produce NaN moments or weights (rBCM's entropy beta is the usual
+    casualty)."""
+    rng = np.random.default_rng(5)
+    X = rng.uniform(-1, 1, (M, 12, 2))
+    y = np.zeros((M, 12))
+    eng = _engine_from(X, y, M)
+    Xs = jnp.asarray(rng.uniform(-1, 1, (7, 2)))
+    _assert_finite(eng, method, Xs)
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_single_agent_graph_stays_finite(method):
+    """A fleet of ONE (everyone else churned out): consensus degenerates to
+    the local expert — degree-0 guards must keep DAC/JOR/DALE finite."""
+    rng = np.random.default_rng(6)
+    X = rng.uniform(-1, 1, (1, 16, 2))
+    y = np.sin(X.sum(-1)) + 0.05 * rng.standard_normal((1, 16))
+    eng = _engine_from(X, y, 1)
+    Xs = jnp.asarray(rng.uniform(-1, 1, (7, 2)))
+    _assert_finite(eng, method, Xs)

@@ -470,3 +470,145 @@ def test_fleet_slot_geometry(two_fleets):
     # NPAE's per-query (M, M) solves cap its slot ceiling below the default
     from repro.fleet import get_method
     assert get_method("npae").max_slot < get_method("rbcm").max_slot
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: retries, per-rider isolation, stall watchdog, bounded close
+# ---------------------------------------------------------------------------
+
+def test_retry_recovers_transient_failure():
+    calls = {"n": 0}
+
+    def flaky(Xs):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise RuntimeError("transient")
+        return echo_predict(Xs)
+
+    sched = manual_sched()
+    sched.add_tenant("t", flaky, slots=(4,), retries=2,
+                     retry_backoff_ms=0.1)
+    fut = sched.add_request(np.ones((3, 2)))
+    sched.step(force=True)
+    mean, _ = fut.result(timeout=0)
+    np.testing.assert_allclose(mean, np.full(3, 2.0), atol=1e-12)
+    assert sched.stats.retried == 2
+    sched.close()
+
+
+def test_retries_exhausted_surface_last_exception():
+    def boom(_):
+        raise RuntimeError("permanent")
+
+    sched = manual_sched()
+    sched.add_tenant("t", boom, slots=(4,), retries=1,
+                     retry_backoff_ms=0.1, isolate=False)
+    fut = sched.add_request(np.zeros((2, 2)))
+    sched.step(force=True)
+    with pytest.raises(RuntimeError, match="permanent"):
+        fut.result(timeout=0)
+    assert sched.stats.retried == 1
+    sched.close()
+
+
+def test_isolation_fails_only_the_poisoned_rider():
+    """Two requests share a slot; one carries a poisoned row. The shared
+    dispatch fails, isolation re-runs each rider alone, and only the
+    poisoned request sees the exception."""
+    def picky(Xs):
+        if np.any(np.asarray(Xs) >= 999.0):
+            raise RuntimeError("poisoned payload")
+        return echo_predict(Xs)
+
+    sched = manual_sched()
+    sched.add_tenant("t", picky, slots=(8,), retries=0,
+                     retry_backoff_ms=0.1, isolate=True)
+    good = sched.add_request(np.ones((2, 2)))
+    bad = sched.add_request(np.full((2, 2), 999.0))
+    sched.step(force=True)                 # both packed into one 8-slot
+    mean, _ = good.result(timeout=0)
+    np.testing.assert_allclose(mean, np.full(2, 2.0), atol=1e-12)
+    with pytest.raises(RuntimeError, match="poisoned"):
+        bad.result(timeout=0)
+    assert sched.stats.isolated == 1       # the healthy rider's solo run
+    sched.close()
+
+
+def test_isolate_false_fails_the_whole_slot():
+    def picky(Xs):
+        if np.any(np.asarray(Xs) >= 999.0):
+            raise RuntimeError("poisoned payload")
+        return echo_predict(Xs)
+
+    sched = manual_sched()
+    sched.add_tenant("t", picky, slots=(8,), retries=0, isolate=False)
+    good = sched.add_request(np.ones((2, 2)))
+    bad = sched.add_request(np.full((2, 2), 999.0))
+    sched.step(force=True)
+    for fut in (good, bad):
+        with pytest.raises(RuntimeError, match="poisoned"):
+            fut.result(timeout=0)
+    sched.close()
+
+
+def test_watchdog_fails_stalled_dispatch_and_recovers():
+    """A dispatch wedged inside predict_fn past the stall timeout: the
+    watchdog fails its riders with SchedulerStalled, quarantines the
+    tenant (admission rejects), respawns the worker — and when the stuck
+    call finally returns, the tenant serves again."""
+    from repro.launch.scheduler import SchedulerStalled
+    release = threading.Event()
+    wedged = {"on": True}
+
+    def sticky(Xs):
+        if wedged["on"]:
+            release.wait(timeout=30)
+        return echo_predict(Xs)
+
+    sched = ServingScheduler(max_wait_ms=0.5, stall_timeout_ms=60)
+    sched.add_tenant("t", sticky, slots=(4,))
+    fut = sched.add_request(np.ones((2, 2)))
+    with pytest.raises(SchedulerStalled):
+        fut.result(timeout=30)             # watchdog fired
+    assert sched.stats.stalled == 1
+    # quarantined while the stuck thread is still inside predict_fn
+    with pytest.raises(SchedulerStalled, match="quarantined"):
+        sched.add_request(np.ones((1, 2)))
+    wedged["on"] = False
+    release.set()                          # stuck call returns -> recovery
+    deadline = time.perf_counter() + 30
+    while time.perf_counter() < deadline:
+        try:
+            fut2 = sched.add_request(np.ones((3, 2)))
+            break
+        except SchedulerStalled:
+            time.sleep(0.01)
+    mean, _ = fut2.result(timeout=30)
+    np.testing.assert_allclose(mean, np.full(3, 2.0), atol=1e-12)
+    sched.close()
+
+
+def test_close_is_bounded_with_wedged_tenant():
+    """close(drain=True, timeout=) must return even when a dispatch never
+    comes back — the in-flight rider is failed, not stranded."""
+    release = threading.Event()
+
+    def stuck(Xs):
+        release.wait(timeout=60)
+        return echo_predict(Xs)
+
+    sched = ServingScheduler(max_wait_ms=0.5)
+    sched.add_tenant("t", stuck, slots=(4,))
+    fut = sched.add_request(np.ones((2, 2)))
+    deadline = time.perf_counter() + 10    # wait until it is in flight
+    while time.perf_counter() < deadline:
+        with sched._lock:
+            if sched._tenants["t"].inflight:
+                break
+        time.sleep(0.005)
+    t0 = time.perf_counter()
+    sched.close(drain=True, timeout=1.0)
+    assert time.perf_counter() - t0 < 8.0
+    with pytest.raises(SchedulerClosed):
+        fut.result(timeout=0)
+    release.set()                          # let the wedged thread exit

@@ -23,7 +23,7 @@ import sys
 
 FROZEN = {
     "repro.fleet": [
-        "FleetConfig", "GPFleet",
+        "FleetConfig", "GPFleet", "FleetDegraded",
         "METHODS", "TRAINERS", "MethodSpec", "TrainerSpec",
         "get_method", "get_trainer", "method_names", "trainer_names",
         "validate_config",
@@ -52,7 +52,12 @@ FROZEN = {
     "repro.launch.scheduler": [
         "ServingScheduler", "Tenant", "TenantStats",
         "DeadlineExceeded", "SchedulerClosed", "SchedulerSaturated",
+        "SchedulerStalled",
         "slot_ladder", "pick_slot",
+    ],
+    "repro.chaos": [
+        "FaultPlan", "Dropout", "FaultInjected",
+        "wrap_predict_fn", "membership_events",
     ],
     "repro.launch.frontdoor": [
         "FrontDoor", "FrontDoorStats",
