@@ -1,0 +1,72 @@
+"""Closed-loop scenario benchmark: accuracy-over-time + serving health.
+
+Runs one `repro.scenario` mission (default: the "chaos" preset — dropout/
+rejoin, degraded-consensus edge loss, stragglers, injected failures) and
+lands its full `ScenarioResult` in BENCH_scenario.json:
+
+  scenario.curves      RMSE / NLL vs the noiseless latent field,
+                       fleet-size and degraded-batch-fraction over steps
+  scenario.drift       eval NLL after each ADMM drift-retrain epoch
+  scenario.serving     submitted/completed/dropped/failed + p50/p99
+  scenario.invariants  hung futures, recompile steps, membership
+                       timeline, replay digest
+
+The artifact is schema-checked (`repro.scenario.validate_bench`) before it
+is written — the CI smoke job re-checks it and asserts zero hung futures.
+
+  PYTHONPATH=src python -m benchmarks.bench_scenario [--scenario NAME]
+  PYTHONPATH=src python -m benchmarks.run --only scenario [--smoke]
+"""
+from __future__ import annotations
+
+import json
+
+from repro.scenario import ScenarioConfig, preset, run_scenario, \
+    validate_bench
+
+from .envtags import bench_tags, merge_json
+
+
+def run(csv=print, *, smoke: bool = False, scenario: str | None = None,
+        json_path: str = "BENCH_scenario.json"):
+    """Run one mission and write the scenario section of `json_path`.
+
+    `scenario` is a preset name (repro.scenario.preset) or a path to a
+    ScenarioConfig JSON file; `smoke` forces the seconds-scale "smoke"
+    preset unless a scenario was named explicitly.
+    """
+    if scenario is None:
+        scenario = "smoke" if smoke else "chaos"
+    if scenario.endswith(".json"):
+        with open(scenario) as fh:
+            cfg = ScenarioConfig.from_json(fh.read())
+    else:
+        cfg = preset(scenario)
+    csv(f"# scenario={scenario} agents={cfg.num_agents} graph={cfg.graph} "
+        f"steps={cfg.steps} seed={cfg.seed}")
+    result = run_scenario(cfg, csv=csv)
+    out = result.to_bench()
+    out.update(bench_tags("scheduler"))
+    validate_bench({"scenario": out})
+    merge_json(json_path, {"scenario": out})
+    csv(f"# wrote {json_path} (scenario section): "
+        f"rmse {out['curves']['rmse'][0]:.3f}->{out['curves']['rmse'][-1]:.3f}"
+        f", hung_futures={out['invariants']['hung_futures']}, "
+        f"recompile_steps={out['invariants']['recompile_steps']}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default=None,
+                    help="preset name (smoke|mission|chaos) or a "
+                         "ScenarioConfig JSON path (default: chaos)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default="BENCH_scenario.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke, scenario=args.scenario, json_path=args.json)

@@ -27,18 +27,20 @@ import numpy as np
 
 from repro.launch.scheduler import DeadlineExceeded, SchedulerSaturated
 
-__all__ = ["TenantLoad", "LoadResult", "run_load"]
+__all__ = ["TenantLoad", "LoadResult", "poisson_timeline", "run_load"]
 
 
 @dataclass
 class TenantLoad:
     """One tenant's offered load: `rate` requests/s, sizes ~ U[1,
-    max_rows] (mean (max_rows + 1) / 2 rows per request)."""
+    max_rows] (mean (max_rows + 1) / 2 rows per request). `seed`
+    overrides the run-level seed for THIS tenant's timeline."""
     name: str
     rate: float
     max_rows: int = 47
     priority: int = 0
     deadline_ms: float | None = None
+    seed: int | None = None
 
 
 @dataclass
@@ -58,30 +60,50 @@ class LoadResult:
     p99_ms: float = float("nan")
 
 
-def run_load(sched, loads, duration: float, *, input_dim: int = 2,
-             dtype=np.float64, lo: float = 0.0, hi: float = 2.0,
-             seed: int = 0, result_timeout: float = 600.0
-             ) -> dict[str, LoadResult]:
-    """Drive `sched` with the merged per-tenant Poisson timelines for
-    `duration` seconds of arrivals, wait for every accepted Future, and
-    return {tenant: LoadResult}.
+def poisson_timeline(loads, duration: float, *, input_dim: int = 2,
+                     dtype=np.float64, lo: float = 0.0, hi: float = 2.0,
+                     seed: int = 0) -> list:
+    """The merged arrival timeline as pure data: [(arrival_s, TenantLoad,
+    Xq), ...] sorted by arrival time.
 
-    The query DTYPE must match the fleets' fitted dtype — a mismatched
-    dtype is a new jit-cache geometry per slot, which would corrupt both
-    the latencies and the zero-recompile story.
+    Each tenant's stream draws from its OWN generator seeded by
+    (seed-or-load.seed, tenant name), so a timeline is a pure function of
+    the load configs: the same seed replays the same arrivals bit for bit
+    (tests/test_scenario.py regression-tests this), and adding a tenant to
+    the run never perturbs another tenant's schedule.
     """
-    rng = np.random.default_rng(seed)
     events = []                      # (arrival_s, TenantLoad, Xq)
-    offered_rows = {load.name: 0 for load in loads}
     for load in loads:
+        base = seed if load.seed is None else load.seed
+        rng = np.random.default_rng([int(base), *load.name.encode()])
         t = rng.exponential(1.0 / load.rate)
         while t < duration:
             n = int(rng.integers(1, load.max_rows + 1))
             Xq = rng.uniform(lo, hi, (n, input_dim)).astype(dtype)
             events.append((t, load, Xq))
-            offered_rows[load.name] += n
             t += rng.exponential(1.0 / load.rate)
     events.sort(key=lambda e: e[0])
+    return events
+
+
+def run_load(sched, loads, duration: float, *, input_dim: int = 2,
+             dtype=np.float64, lo: float = 0.0, hi: float = 2.0,
+             seed: int = 0, result_timeout: float = 600.0
+             ) -> dict[str, LoadResult]:
+    """Drive `sched` with the merged per-tenant Poisson timelines for
+    `duration` seconds of arrivals (`poisson_timeline(seed=...)`:
+    replayable), wait for every accepted Future, and return
+    {tenant: LoadResult}.
+
+    The query DTYPE must match the fleets' fitted dtype — a mismatched
+    dtype is a new jit-cache geometry per slot, which would corrupt both
+    the latencies and the zero-recompile story.
+    """
+    events = poisson_timeline(loads, duration, input_dim=input_dim,
+                              dtype=dtype, lo=lo, hi=hi, seed=seed)
+    offered_rows = {load.name: 0 for load in loads}
+    for _, load, Xq in events:
+        offered_rows[load.name] += Xq.shape[0]
 
     results = {
         load.name: LoadResult(load.name, offered_rps=load.rate,

@@ -32,16 +32,20 @@ def main() -> None:
                          "regimes; scheduler: short saturation sweep)")
     ap.add_argument("--only", default="all",
                     choices=["all", "training", "prediction", "serving",
-                             "sharded", "scheduler", "online", "roofline",
-                             "kernels"])
+                             "sharded", "scheduler", "scenario", "online",
+                             "roofline", "kernels"])
+    ap.add_argument("--scenario", default=None,
+                    help="scenario section: preset name (smoke|mission|"
+                         "chaos) or ScenarioConfig JSON path (default: "
+                         "chaos, or smoke under --smoke)")
     args = ap.parse_args()
     if args.smoke and args.only not in ("all", "training", "sharded",
-                                        "scheduler"):
+                                        "scheduler", "scenario"):
         # fail loudly: a CI step combining these would otherwise stay green
         # while executing nothing
         raise SystemExit(f"--smoke: section {args.only!r} has no "
-                         "seconds-scale mode; use --only training, sharded "
-                         "or scheduler (or all)")
+                         "seconds-scale mode; use --only training, sharded, "
+                         "scheduler or scenario (or all)")
 
     out = sys.stdout
     def csv(line):
@@ -70,6 +74,13 @@ def main() -> None:
         csv("# === request-level scheduler (continuous batching vs v1 "
             "front door) ===")
         bench_prediction.run_scheduler(csv=csv, smoke=args.smoke)
+
+    if args.only in ("all", "scenario"):
+        from . import bench_scenario
+        csv("# === closed-loop multi-robot scenario (accuracy over time, "
+            "chaos) ===")
+        bench_scenario.run(csv=csv, smoke=args.smoke,
+                           scenario=args.scenario)
 
     if args.smoke:
         # no other section has a seconds-scale mode yet; refuse to

@@ -51,7 +51,8 @@ from ..core.consensus import (complete_graph, connected_components,
                               cycle_graph, is_connected, path_graph,
                               random_connected_graph)
 from ..core.gp import augment, communication_dataset, pack
-from ..core.online import OnlineExperts, from_batch, join, leave, observe_fleet
+from ..core.online import (OnlineExperts, from_batch, join, leave,
+                           observe_fleet, refit)
 from ..core.prediction import (FittedExperts, PredictionEngine, ShardedEngine,
                                fit_experts)
 from ..launch.scheduler import ServingScheduler
@@ -440,6 +441,46 @@ class GPFleet:
         if self._engine is not None:
             self._engine.swap_experts(self.fitted)
         return self
+
+    def drift(self, *, grad_fn=None, iters: int | None = None) -> dict:
+        """Re-run the configured decentralized trainer on the LIVE sliding
+        windows and hot-swap the retrained factors into the serving engine
+        — the drift-adaptation loop: stream with `observe`, periodically
+        `drift` so the hyperparameters track the data the windows hold now.
+
+        Training uses the filled window prefix shared by every agent
+        (`min(window_counts)` observations; sentinel slots never enter the
+        likelihood), warm-starts from the current consensus theta, and
+        `iters` caps this epoch's ADMM budget (default config.admm_iters).
+        The refreshed window factors are refit at the new theta and swapped
+        in place (`swap_experts`): same shapes, ZERO recompiles — serving
+        never retraces across a drift epoch. Returns the trainer info dict.
+        """
+        state = self._require_online("drift")
+        n = int(jnp.min(state.count))
+        if n < 2:
+            raise RuntimeError(
+                f"drift needs >= 2 observations in every agent's window "
+                f"(min count is {n}) — stream more data with observe() "
+                f"first")
+        spec = get_trainer(self.config.trainer)
+        if spec.needs_augmented_data:
+            raise ValueError(
+                f"trainer {self.config.trainer!r} needs augmented/"
+                f"communication datasets, which sliding windows do not "
+                f"carry — streaming fleets drift with a plain-data trainer")
+        cfg = self.config if iters is None \
+            else self.config.replace(admm_iters=int(iters))
+        Xt, yt = state.Xw[:, :n], state.yw[:, :n]
+        self.log_theta, self.thetas, info = spec.run(
+            cfg, self.log_theta, Xt, yt, self.A, mesh=self.mesh,
+            grad_fn=grad_fn)
+        self._online_state = refit(state._replace(
+            log_theta=self.log_theta.astype(state.log_theta.dtype)))
+        self.fitted = self._online_state.to_fitted()
+        if self._engine is not None:
+            self._engine.swap_experts(self.fitted)
+        return info
 
     def join(self, X_new=None, y_new=None, neighbors=None) -> "GPFleet":
         """One agent joins the streaming fleet (window seeded from X_new /

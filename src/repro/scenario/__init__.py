@@ -1,0 +1,22 @@
+"""Closed-loop multi-robot scenario harness (replayable integration pack).
+
+One seed-complete, JSON round-trippable `ScenarioConfig` describes a full
+mission — M agents traversing a latent sampled field, streaming window
+observations, drift-retraining with decentralized ADMM, answering routed
+queries through the serving scheduler, absorbing a seeded chaos plan —
+and `run_scenario` replays it bit-identically (same config => same
+`ScenarioResult.replay_digest()`). The same config ships three ways:
+`examples/multi_robot_mission.py`, `benchmarks/bench_scenario.py`
+(BENCH_scenario.json), and the `tests/test_scenario.py` invariant pack.
+See docs/scenario.md.
+"""
+from .config import ScenarioConfig, preset
+from .driver import ScenarioResult, run_scenario, validate_bench
+from .field import LatentField, make_field
+from .trajectories import agent_paths
+
+__all__ = [
+    "ScenarioConfig", "preset",
+    "ScenarioResult", "run_scenario", "validate_bench",
+    "LatentField", "make_field", "agent_paths",
+]

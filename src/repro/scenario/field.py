@@ -1,0 +1,60 @@
+"""The latent ground-truth field a mission traverses.
+
+One seeded random-Fourier-feature draw from the GP prior, kept as a
+CONTINUOUS function instead of a gridded sample: the driver evaluates the
+same draw at trajectory positions (observations), at held-out eval points
+(the accuracy-over-time curves compare predictions against the noiseless
+latent f), and at any replayed position bit-identically. Same RFF
+construction as `repro.data.synthetic.gp_sample_field`'s large-N branch —
+for the SE kernel the spectral density is Gaussian with std sqrt(2)/l per
+dimension — but with the weights held so f can be re-evaluated anywhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.gp.kernel import pack, unpack
+
+
+class LatentField:
+    """f ~ GP(0, k_SE(theta)) via F random Fourier features; `observe`
+    adds the field's N(0, sigma_eps^2) sensor noise."""
+
+    def __init__(self, key, log_theta, features: int = 256, dtype=None):
+        if dtype is None:   # widest available float (x64 when enabled)
+            dtype = jnp.zeros(0).dtype if not jax.config.jax_enable_x64 \
+                else jnp.float64
+        log_theta = jnp.asarray(log_theta, dtype)
+        ls, sigma_f, sigma_eps = unpack(log_theta)
+        D = ls.shape[0]
+        kw, kb, kf = jax.random.split(key, 3)
+        self.log_theta = log_theta
+        self.sigma_f = sigma_f
+        self.sigma_eps = sigma_eps
+        self.W = jax.random.normal(kw, (features, D), dtype) \
+            * (jnp.sqrt(2.0) / ls)[None, :]
+        self.b = jax.random.uniform(kb, (features,), dtype, 0.0,
+                                    2.0 * jnp.pi)
+        self.w = jax.random.normal(kf, (features,), dtype)
+
+    def f(self, X) -> jax.Array:
+        """Noiseless latent field at X (n, D) -> (n,)."""
+        X = jnp.asarray(X, self.W.dtype)
+        F = self.W.shape[0]
+        phi = jnp.sqrt(2.0 / F) * jnp.cos(X @ self.W.T + self.b[None, :])
+        return self.sigma_f * (phi @ self.w)
+
+    def observe(self, key, X) -> jax.Array:
+        """Noisy sensor reading y = f(X) + N(0, sigma_eps^2)."""
+        fx = self.f(X)
+        return fx + self.sigma_eps * jax.random.normal(key, fx.shape,
+                                                       fx.dtype)
+
+
+def make_field(cfg) -> LatentField:
+    """The scenario's field: one draw, derived from cfg.seed alone."""
+    lt = pack(list(cfg.field_theta[:-2]), cfg.field_theta[-2],
+              cfg.field_theta[-1])
+    return LatentField(jax.random.fold_in(jax.random.PRNGKey(cfg.seed), 0),
+                       lt, features=cfg.field_features)

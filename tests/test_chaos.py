@@ -340,3 +340,74 @@ def test_fleet_health_surface(fleet):
     assert h["graph_connected"] is True
     assert h["degraded_predictions"] >= 1
     assert h["last_degraded"]["alive_agents"] == M - 1
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan schedules: property tests (seed-replay + at/until semantics)
+# ---------------------------------------------------------------------------
+
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**16 - 1), st.integers(2, 9), st.integers(0, 10),
+       st.integers(1, 8), st.booleans())
+def test_dropout_schedule_semantics_property(seed, m, at, dur, unbounded):
+    """alive_schedule honors at (inclusive) / until (exclusive) exactly,
+    touches no other agent, and replays from the plan alone."""
+    agent = seed % m
+    until = None if unbounded else at + dur
+    plan = FaultPlan(seed=seed, dropouts=(Dropout(agent, at, until),))
+    iters = 12
+    alive = plan.alive_schedule(m, iters)
+    assert alive.shape == (iters, m)
+    for t in range(iters):
+        dead = at <= t and (until is None or t < until)
+        assert alive[t, agent] == (0.0 if dead else 1.0)
+    assert np.all(np.delete(alive, agent, axis=1) == 1.0)
+    again = FaultPlan(seed=seed, dropouts=(Dropout(agent, at, until),))
+    assert np.array_equal(alive, again.alive_schedule(m, iters))
+    fa = plan.final_alive(m, iters)
+    assert fa[agent] == bool(alive[-1, agent])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**16 - 1), st.integers(2, 8),
+       st.floats(0.05, 0.5), st.integers(1, 10))
+def test_edge_schedule_replay_property(seed, m, p, iters):
+    """Same seed => bitwise-identical edge masks; masks are symmetric,
+    hollow, and 0/1."""
+    e1 = FaultPlan(seed=seed, edge_loss=p).edge_schedule(m, iters)
+    e2 = FaultPlan(seed=seed, edge_loss=p).edge_schedule(m, iters)
+    assert e1.shape == (iters, m, m)
+    assert np.array_equal(e1, e2)
+    assert np.array_equal(e1, np.transpose(e1, (0, 2, 1)))
+    assert np.all(np.diagonal(e1, axis1=1, axis2=2) == 0.0)
+    assert set(np.unique(e1)) <= {0.0, 1.0}
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**16 - 1), st.integers(3, 9), st.integers(0, 10),
+       st.integers(1, 6), st.booleans(), st.integers(4, 12))
+def test_membership_events_match_alive_schedule_property(
+        seed, m, at, dur, unbounded, steps):
+    """Replaying membership_events as a leave/rejoin tape reconstructs
+    alive_schedule at fleet-step granularity, event for event."""
+    agent = (seed * 7 + 3) % m
+    until = None if unbounded else at + dur
+    plan = FaultPlan(seed=seed, dropouts=(Dropout(agent, at, until),))
+    events = membership_events(plan, m, steps)
+    assert events == sorted(events)
+    alive = np.ones((steps, m))
+    dead: set = set()
+    by_step: dict = {}
+    for s, kind, a in events:
+        assert 0 <= s < steps
+        by_step.setdefault(s, []).append((kind, a))
+    for t in range(steps):
+        for kind, a in by_step.get(t, []):
+            (dead.add if kind == "leave" else dead.discard)(a)
+        for a in dead:
+            alive[t, a] = 0.0
+    assert np.array_equal(alive, plan.alive_schedule(m, steps))

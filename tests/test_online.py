@@ -369,3 +369,81 @@ def test_stripe_partition_warns_on_dropped_points():
         warnings.simplefilter("error")         # exact split: no warning
         Xp, yp = stripe_partition(X[:9], y[:9], 3)
     assert Xp.shape == (3, 3, 2)
+
+
+# ---------------------------------------------------------------------------
+# randomized membership interleavings + mid-stream persistence (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+from repro.fleet import FleetConfig, GPFleet  # noqa: E402
+
+
+def _stream_fleet(seed=0, num_agents=4):
+    cfg = FleetConfig(num_agents=num_agents, input_dim=2, online=True,
+                      window=8, chunk=4, dac_iters=30, method="rbcm",
+                      theta0=(0.8, 0.8, 1.0, 0.2))
+    rng = np.random.default_rng(seed)
+    Xp = rng.uniform(0.0, 1.0, (num_agents, 5, 2))
+    yp = rng.standard_normal((num_agents, 5))
+    return GPFleet(cfg).fit(Xp, yp, train=False), rng
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_randomized_membership_interleaving_stays_healthy(seed):
+    """Any observe/leave/join/predict interleaving leaves the consensus
+    graph connected and every prediction finite with positive variance."""
+    fleet, rng = _stream_fleet(seed)
+    Xs = rng.uniform(0.0, 1.0, (6, 2))
+    for _ in range(10):
+        m = fleet.num_agents
+        op = rng.choice(["observe", "observe", "leave", "join", "predict"])
+        if op == "observe":
+            fleet.observe(rng.uniform(0.0, 1.0, (m, 2)),
+                          rng.standard_normal(m))
+        elif op == "leave" and m > 2:
+            fleet.leave(int(rng.integers(m)))
+        elif op == "join" and m < 6:
+            fleet.join(rng.uniform(0.0, 1.0, (3, 2)),
+                       rng.standard_normal(3))
+        elif op == "predict":
+            mean, var, _ = fleet.predict(Xs)
+            assert np.isfinite(np.asarray(mean)).all()
+            assert np.isfinite(np.asarray(var)).all()
+            assert (np.asarray(var) > 0.0).all()
+        assert is_connected(fleet.A)
+        assert fleet.num_agents == fleet._online_state.num_agents
+    mean, var, _ = fleet.predict(Xs)
+    assert np.isfinite(np.asarray(mean)).all()
+    h = fleet.health()
+    assert h["graph_connected"] and h["graph_components"] == 1
+
+
+def test_save_load_mid_stream_is_bitwise(tmp_path):
+    """save() -> load() in the middle of a stream round-trips the window
+    state bit for bit, and the loaded fleet continues the stream with
+    bitwise-identical served predictions."""
+    fleet, rng = _stream_fleet(3)
+    for _ in range(4):
+        fleet.observe(rng.uniform(0.0, 1.0, (4, 2)),
+                      rng.standard_normal(4))
+    Xs = rng.uniform(0.0, 1.0, (6, 2))
+    mean0, var0, _ = fleet.predict(Xs)
+
+    fleet.save(str(tmp_path))
+    loaded = GPFleet.load(str(tmp_path))
+    a, b = fleet._online_state, loaded._online_state
+    for field in ("log_theta", "Xw", "yw", "L", "alpha", "count", "jitter"):
+        assert np.array_equal(np.asarray(getattr(a, field)),
+                              np.asarray(getattr(b, field))), field
+    mean1, var1, _ = loaded.predict(Xs)
+    assert np.array_equal(np.asarray(mean0), np.asarray(mean1))
+    assert np.array_equal(np.asarray(var0), np.asarray(var1))
+
+    # continue the stream on BOTH fleets with the same data: still bitwise
+    xs, ys = rng.uniform(0.0, 1.0, (4, 2)), rng.standard_normal(4)
+    fleet.observe(xs, ys)
+    loaded.observe(xs, ys)
+    m2, v2, _ = fleet.predict(Xs)
+    m3, v3, _ = loaded.predict(Xs)
+    assert np.array_equal(np.asarray(m2), np.asarray(m3))
+    assert np.array_equal(np.asarray(v2), np.asarray(v3))

@@ -1,0 +1,262 @@
+"""Closed-loop multi-robot scenario harness: the replayable integration
+pack (ISSUE 9 acceptance).
+
+The `@pytest.mark.scenario` missions run a full closed loop — observe ->
+drift-retrain -> routed predict -> chaos -> recover — across a seed x
+topology matrix and assert end-state invariants:
+
+  - no hung futures, every submitted request accounted for;
+  - zero recompiles after warm-up on a clean mission, and under chaos
+    recompiles ONLY at membership-change steps (leave/join retrace — the
+    fleet changed shape; everything else hot-swaps);
+  - health census matches the injected fault plan (alive curve follows
+    the dropout window, fleet size and connectivity restored);
+  - accuracy-over-time improves and drift-epoch NLL is monotone within
+    tolerance (gpoe aggregation: rBCM's precision-summing is NLL-unstable
+    on sparse coverage — see the mission preset note in scenario/config);
+  - bit-identical replay: same config => same `replay_digest()`.
+
+The unmarked tests are the fast tier-1 subset: config round-trip and
+validation, trajectory/field determinism, bench-schema checking, and the
+loadgen Poisson-timeline regression (same seed => same arrivals).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from benchmarks.loadgen import TenantLoad, poisson_timeline
+from repro.scenario import (ScenarioConfig, agent_paths, make_field, preset,
+                            run_scenario, validate_bench)
+
+SEEDS = (0, 1, 2)
+GRAPHS = ("cycle", "complete")
+
+# one shape for every mission in the matrix: ~3 s each after warm-up
+_TINY = dict(num_agents=4, method="gpoe", steps=9, warmup_obs=5, window=14,
+             dac_iters=40, admm_iters=4, drift_every=3, drift_iters=3,
+             eval_points=24, field_features=96, queries_per_step=1,
+             query_rows=3, max_slot=8, chunk=8)
+_CHAOS = dict(dropouts=((1, 2, 6),), straggle_every=3, straggle_ms=1.0,
+              fail_every=5, edge_loss=0.05)
+
+
+def tiny(seed=0, graph="cycle", *, chaos=True):
+    extra = _CHAOS if chaos else {}
+    return ScenarioConfig(seed=seed, fault_seed=seed, graph=graph,
+                          **_TINY, **extra)
+
+
+_cache: dict = {}
+
+
+def run_cached(cfg):
+    key = cfg.to_json()
+    if key not in _cache:
+        _cache[key] = run_scenario(cfg)
+    return _cache[key]
+
+
+# ---------------------------------------------------------------------------
+# the mission matrix (tentpole): seeds x topologies, chaos on
+# ---------------------------------------------------------------------------
+
+@pytest.mark.scenario
+@pytest.mark.parametrize("graph", GRAPHS)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_chaos_mission_end_state_invariants(seed, graph):
+    r = run_cached(tiny(seed, graph))
+
+    # serving: nothing hung, every future accounted for, injected
+    # transient failures absorbed by the retry path (fail_every=5 fired)
+    assert r.hung_futures == 0
+    s = r.serving
+    assert s["completed"] + s["dropped"] + s["failed"] == s["submitted"]
+    assert s["submitted"] == 9      # queries_per_step=1 x steps
+    assert s["failed"] == 0
+    assert s["retried"] >= 1
+
+    # health census matches the fault plan: agent 1 out for steps [2, 6),
+    # fleet restored to full strength and connected at mission end
+    assert r.membership == [(2, "leave", 1), (6, "rejoin", 1)]
+    assert r.curves["alive"] == [3 if 2 <= t < 6 else 4 for t in range(9)]
+    assert r.health["num_agents"] == 4
+    assert r.health["graph_connected"]
+
+    # recompiles ONLY at membership steps (shape changes retrace; observe/
+    # drift hot-swap factors into the existing compiled programs)
+    assert set(r.recompile_steps) <= {2, 6}
+
+    # degraded consensus (edge_loss) actually exercised on the scheduler
+    # path, and every reported number is finite
+    assert max(r.curves["degraded_fraction"]) > 0.0
+    for k in ("rmse", "nll", "degraded_fraction"):
+        assert np.all(np.isfinite(r.curves[k]))
+
+    # accuracy over time: RMSE improves despite the chaos, final NLL beats
+    # the start, drift-epoch NLL monotone within tolerance
+    assert r.curves["rmse"][-1] < 0.8 * r.curves["rmse"][0]
+    assert r.curves["nll"][-1] < r.curves["nll"][0]
+    assert len(r.drift_nll) == 3
+    for a, b in zip(r.drift_nll, r.drift_nll[1:]):
+        assert b <= a + 0.25
+
+
+@pytest.mark.scenario
+def test_clean_mission_zero_recompiles_after_warmup():
+    r = run_cached(tiny(0, "cycle", chaos=False))
+    assert r.recompile_steps == []
+    assert r.hung_futures == 0
+    assert r.membership == []
+    assert r.serving["failed"] == 0 and r.serving["dropped"] == 0
+    assert r.serving["completed"] == r.serving["submitted"]
+    assert max(r.curves["degraded_fraction"]) == 0.0
+    assert r.curves["rmse"][-1] < r.curves["rmse"][0]
+
+
+@pytest.mark.scenario
+def test_replay_is_bit_identical_and_seed_sensitive():
+    cfg = tiny(0, "cycle")
+    first = run_cached(cfg)
+    again = run_scenario(cfg)            # a genuinely fresh second run
+    assert first.replay_digest() == again.replay_digest()
+    assert first.curves["rmse"] == again.curves["rmse"]   # bitwise floats
+    assert first.curves["nll"] == again.curves["nll"]
+    assert first.drift_nll == again.drift_nll
+    assert first.membership == again.membership
+    other = run_cached(tiny(1, "cycle"))
+    assert first.replay_digest() != other.replay_digest()
+
+
+@pytest.mark.scenario
+def test_bench_section_from_mission_is_schema_valid():
+    r = run_cached(tiny(0, "cycle"))
+    validate_bench({"scenario": r.to_bench()})
+
+
+# ---------------------------------------------------------------------------
+# fast tier-1 subset: config, determinism, schema, loadgen regression
+# ---------------------------------------------------------------------------
+
+def test_config_json_round_trip():
+    cfg = preset("chaos").replace(seed=7, fault_seed=3,
+                                  dropouts=((2, 1, 5), (3, 2, None)))
+    blob = cfg.to_json()
+    back = ScenarioConfig.from_json(blob)
+    assert back == cfg
+    assert back.to_json() == blob                     # idempotent
+    d = json.loads(blob)
+    assert d["dropouts"] == [[2, 1, 5], [3, 2, None]]
+    assert d["seed"] == 7 and d["graph"] == cfg.graph
+
+
+def test_config_validation_rejects_bad_scenarios():
+    with pytest.raises(ValueError):
+        ScenarioConfig(graph="star")
+    with pytest.raises(ValueError):
+        ScenarioConfig(theta0=(1.0, 1.0))             # needs D + 2 entries
+    with pytest.raises(ValueError):
+        ScenarioConfig(warmup_obs=30, window=24)      # evicted pre-mission
+    with pytest.raises(ValueError):
+        ScenarioConfig(num_agents=1)
+    with pytest.raises(ValueError):                   # empty dropout window
+        ScenarioConfig(dropouts=((1, 5, 5),))
+    with pytest.raises(ValueError):                   # stale-index hazard
+        ScenarioConfig(dropouts=((1, 0, None),), nan_agents=(2,))
+    with pytest.raises(ValueError):                   # fleet must keep >= 2
+        ScenarioConfig(num_agents=3, dropouts=((0, 1, 2), (1, 3, 4)))
+    with pytest.raises(ValueError):                   # unknown field
+        ScenarioConfig.from_dict({"seed": 0, "robots": 9})
+
+
+def test_presets_construct_and_unknown_rejected():
+    for name in ("smoke", "mission", "chaos"):
+        cfg = preset(name)
+        assert isinstance(cfg, ScenarioConfig)
+        assert ScenarioConfig.from_json(cfg.to_json()) == cfg
+    assert preset("chaos").dropouts                   # chaos has churn
+    with pytest.raises(ValueError):
+        preset("hurricane")
+
+
+def test_trajectories_and_field_are_seed_deterministic():
+    cfg0, cfg1 = tiny(0), tiny(1)
+    p0 = agent_paths(cfg0)
+    assert p0.shape == (4, _TINY["warmup_obs"] + _TINY["steps"], 2)
+    assert np.array_equal(p0, agent_paths(cfg0))      # replay
+    assert not np.allclose(p0, agent_paths(cfg1))     # seed-sensitive
+    assert p0.min() >= cfg0.lo - 1e-12
+    assert p0.max() <= cfg0.hi + 1e-12                # reflection works
+    X = p0[:, 0]
+    f0, f0b = make_field(cfg0), make_field(cfg0)
+    assert np.array_equal(np.asarray(f0.f(X)), np.asarray(f0b.f(X)))
+    assert not np.allclose(np.asarray(f0.f(X)),
+                           np.asarray(make_field(cfg1).f(X)))
+
+
+def _valid_bench_doc():
+    curve = {"step": [0], "rmse": [0.5], "nll": [0.1], "alive": [4],
+             "degraded_fraction": [0.0]}
+    return {"scenario": {
+        "config": ScenarioConfig().to_dict(),
+        "curves": curve,
+        "drift": {"step": [], "nll": []},
+        "serving": {"submitted": 1, "completed": 1, "dropped": 0,
+                    "failed": 0, "retried": 0, "p50_ms": 1.0, "p99_ms": 2.0},
+        "invariants": {"hung_futures": 0, "recompile_steps": [],
+                       "membership": [], "jit_cache_misses": 3,
+                       "graph_connected": True, "final_agents": 4,
+                       "replay_digest": "0" * 64},
+    }}
+
+
+def test_validate_bench_accepts_valid_and_rejects_malformed():
+    validate_bench(_valid_bench_doc())
+    with pytest.raises(ValueError):
+        validate_bench({})
+    doc = _valid_bench_doc()
+    del doc["scenario"]["invariants"]
+    with pytest.raises(ValueError):
+        validate_bench(doc)
+    doc = _valid_bench_doc()
+    doc["scenario"]["curves"]["rmse"] = [0.5, 0.4]    # length mismatch
+    with pytest.raises(ValueError):
+        validate_bench(doc)
+    doc = _valid_bench_doc()
+    doc["scenario"]["invariants"]["replay_digest"] = "zz"
+    with pytest.raises(ValueError):
+        validate_bench(doc)
+    doc = _valid_bench_doc()
+    doc["scenario"]["config"]["robots"] = 9           # unknown config field
+    with pytest.raises(ValueError):
+        validate_bench(doc)
+
+
+def test_poisson_timeline_same_seed_same_arrivals():
+    loads = [TenantLoad("a", rate=200.0, max_rows=5),
+             TenantLoad("b", rate=150.0, max_rows=7)]
+    ev1 = poisson_timeline(loads, 0.5, seed=3)
+    ev2 = poisson_timeline(loads, 0.5, seed=3)
+    assert len(ev1) == len(ev2) > 0
+    for (t1, l1, x1), (t2, l2, x2) in zip(ev1, ev2):
+        assert t1 == t2 and l1.name == l2.name        # bitwise arrival times
+        assert np.array_equal(x1, x2)
+    ev3 = poisson_timeline(loads, 0.5, seed=4)
+    assert [e[0] for e in ev3] != [e[0] for e in ev1]
+
+
+def test_poisson_timeline_tenants_are_independent_streams():
+    a = TenantLoad("a", rate=200.0, max_rows=5)
+    b = TenantLoad("b", rate=150.0, max_rows=7)
+    solo = poisson_timeline([a], 0.5, seed=3)
+    merged = [e for e in poisson_timeline([a, b], 0.5, seed=3)
+              if e[1].name == "a"]
+    assert len(solo) == len(merged) > 0               # b never perturbs a
+    for (t1, _, x1), (t2, _, x2) in zip(solo, merged):
+        assert t1 == t2 and np.array_equal(x1, x2)
+    # a per-load seed overrides the run seed for that tenant only
+    a9 = TenantLoad("a", rate=200.0, max_rows=5, seed=9)
+    override = poisson_timeline([a9], 0.5, seed=3)
+    assert [e[0] for e in override] == \
+        [e[0] for e in poisson_timeline([a9], 0.5, seed=777)]
+    assert [e[0] for e in override] != [e[0] for e in solo]

@@ -59,6 +59,11 @@ FROZEN = {
         "FaultPlan", "Dropout", "FaultInjected",
         "wrap_predict_fn", "membership_events",
     ],
+    "repro.scenario": [
+        "ScenarioConfig", "preset",
+        "ScenarioResult", "run_scenario", "validate_bench",
+        "LatentField", "make_field", "agent_paths",
+    ],
     "repro.launch.frontdoor": [
         "FrontDoor", "FrontDoorStats",
     ],
