@@ -13,6 +13,13 @@ throughput regime, at tight eta_nn. Run it under
 XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU (or on a real
 multi-device platform); results land in BENCH_serving.json.
 
+`run_sparse` benchmarks the sparse pseudo-representation experts
+(core.sparse): the accuracy-vs-m sweep (RMSE/NLPD and dense-vs-sparse
+serving speedup as the per-agent inducing count m shrinks, headline
+m = Ni/16) and the 100k-points-per-agent run the dense O(Ni^2) factor
+path cannot hold in memory. Results land under BENCH_serving.json's
+"sparse" key.
+
 `run_scheduler` benchmarks the request-level serving scheduler
 (launch.scheduler): p50/p99 latency vs offered load under the open-loop
 Poisson generator (benchmarks/loadgen.py), continuous slot batching vs
@@ -325,6 +332,148 @@ def run_sharded(n_obs=8192, M=32, batch=256, big_batch=2048, chunk=256,
     # artifact and must survive a sharded re-run (and vice versa)
     merge_json(json_path, out)
     csv(f"# wrote {json_path}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sparse pseudo-representation experts: accuracy vs m + the 100k/agent run
+# ---------------------------------------------------------------------------
+
+def run_sparse(n_obs=32768, M=8, ms=(64, 128, 256, 512), n_test=512,
+               chunk=256, dac_iters=100, reps=3, big_ni=100_000,
+               big_m=512, big_agents=4, csv=print,
+               json_path="BENCH_serving.json", smoke=False):
+    """Sparse pseudo-representation experts (core.sparse) benchmark.
+
+    Part 1 — accuracy-vs-m sweep at Ni = n_obs / M (default 4096): for each
+    per-agent inducing count m, fit `fit_sparse_experts` and serve rbcm and
+    npae_sparse through the SAME PredictionEngine as the dense baseline.
+    Reported per m: RMSE/NLPD on held-out truth, serving speedup vs the
+    dense engine (the per-expert O(Ni q) triangular solves collapse to
+    O(m q)), fit speedup vs `fit_experts` (O(Ni^3) -> O(Ni m^2)), and the
+    mean trace correction N sigma_f^2 - tr(Qnn) (the Titsias bound gap
+    diagnostic — how much variance the pseudo-representation still misses).
+    Headline: m = Ni/16 must serve >= 10x faster per expert with bounded
+    accuracy loss (asserted against the dense rbcm RMSE).
+
+    Part 2 — the 100k-points-per-agent run: Ni = `big_ni` per agent is far
+    past what the dense path can factorize (the O(Ni^2) Cholesky alone is
+    ~80 GB f64 per agent); the sparse fit streams Kmn through the blocked
+    `kmn_stats` pass (O(m bn) transients) and serves npae_sparse from the
+    (m, m) factors. Reported: fit wall time, serving qps, and the dense-
+    vs-sparse factor bytes that make the dense run impossible.
+
+    `smoke=True` shrinks both parts to a seconds-scale CI pass.
+    """
+    from repro.core.sparse import fit_sparse_experts, select_inducing
+
+    if smoke:
+        n_obs, M, ms, n_test, chunk = 2048, 4, (32, 64), 64, 32
+        big_ni, big_m, big_agents, reps = 2048, 64, 2, 2
+
+    lt = pack([0.3, 0.3], 1.3, 0.1)
+    key = jax.random.PRNGKey(0)
+    X = random_inputs(key, n_obs)
+    f_true, y = sst_like_field(X / jnp.max(X), key=jax.random.PRNGKey(1))
+    Xp, yp = stripe_partition(X, y, M)
+    Ni = int(Xp.shape[1])
+    Xs = random_inputs(jax.random.PRNGKey(2), n_test)
+    fs, _ = sst_like_field(Xs / jnp.max(X), key=jax.random.PRNGKey(1))
+    A = path_graph(M)
+
+    # dense baseline: factors + rbcm serving through the engine
+    t_fit_dense = _time_best(
+        lambda: jax.jit(fit_experts)(lt, Xp, yp), trials=1)
+    fitted = jax.jit(fit_experts)(lt, Xp, yp)
+    dense_eng = PredictionEngine(fitted, A, chunk=chunk,
+                                 dac_iters=dac_iters)
+    t_dense = _time_best(lambda q: dense_eng.predict("rbcm", q)[:2], Xs,
+                         reps=reps)
+    mu_d, var_d, _ = dense_eng.predict("rbcm", Xs)
+    dense_rmse = rmse(mu_d, fs)
+    itemsize = np.asarray(Xp).dtype.itemsize
+    dense_bytes = M * Ni * Ni * itemsize
+    csv(f"# sparse sweep: M={M} Ni={Ni} n_test={n_test}; dense rbcm "
+        f"rmse={dense_rmse:.4f} fit={t_fit_dense*1e3:.0f}ms "
+        f"serve={n_test/t_dense:.0f}qps factors={dense_bytes/2**20:.0f}MB")
+    csv("table,m,Ni_over_m,rmse_rbcm,nlpd_rbcm,rmse_npae,nlpd_npae,"
+        "serve_speedup,fit_speedup,mean_tr_corr,sparse_MB")
+    sweep = []
+    for m in ms:
+        Z = select_inducing(Xp, m)
+        fit_m = jax.jit(fit_sparse_experts)
+        t_fit = _time_best(lambda: fit_m(lt, Xp, yp, Z), trials=1)
+        sf = fit_m(lt, Xp, yp, Z)
+        eng = PredictionEngine(sf, A, chunk=chunk, dac_iters=dac_iters)
+        t_sparse = _time_best(lambda q: eng.predict("rbcm", q)[:2], Xs,
+                              reps=reps)
+        mu_s, var_s, _ = eng.predict("rbcm", Xs)
+        mu_n, var_n, _ = eng.predict("npae_sparse", Xs)
+        sparse_bytes = sum(int(np.prod(a.shape)) * itemsize
+                           for a in (sf.Z, sf.Lmm, sf.LS, sf.c, sf.tr_corr))
+        row = {
+            "m": int(m), "Ni_over_m": Ni / m,
+            "rmse_rbcm": rmse(mu_s, fs), "nlpd_rbcm": nlpd(mu_s, var_s, fs),
+            "rmse_npae": rmse(mu_n, fs), "nlpd_npae": nlpd(mu_n, var_n, fs),
+            "rmse_vs_dense": rmse(mu_s, mu_d),
+            "serve_speedup": t_dense / t_sparse,
+            "fit_speedup": t_fit_dense / t_fit,
+            "qps_sparse": n_test / t_sparse,
+            "mean_tr_corr": float(jnp.mean(sf.tr_corr)),
+            "sparse_MB": sparse_bytes / 2**20,
+        }
+        sweep.append(row)
+        csv(f"sparse,{m},{Ni/m:.0f},{row['rmse_rbcm']:.4f},"
+            f"{row['nlpd_rbcm']:.4f},{row['rmse_npae']:.4f},"
+            f"{row['nlpd_npae']:.4f},{row['serve_speedup']:.1f},"
+            f"{row['fit_speedup']:.1f},{row['mean_tr_corr']:.3g},"
+            f"{row['sparse_MB']:.2f}")
+    out = {"M": M, "Ni": Ni, "n_test": n_test, "dense_rmse": dense_rmse,
+           "dense_fit_s": t_fit_dense, "dense_qps": n_test / t_dense,
+           "dense_factor_MB": dense_bytes / 2**20, "sweep": sweep,
+           "smoke": bool(smoke)}
+    # headline acceptance: m = Ni/16 serves >= 10x faster per expert with
+    # bounded accuracy loss
+    head = min(sweep, key=lambda r: abs(r["Ni_over_m"] - 16))
+    out["headline"] = head
+    csv(f"# headline m={head['m']} (Ni/m={head['Ni_over_m']:.0f}): "
+        f"serve {head['serve_speedup']:.1f}x, fit "
+        f"{head['fit_speedup']:.1f}x, rmse {head['rmse_rbcm']:.4f} vs "
+        f"dense {dense_rmse:.4f}")
+
+    # part 2: 100k points per agent — dense cannot factorize this
+    Xb = random_inputs(jax.random.PRNGKey(7), big_agents * big_ni)
+    _, yb = sst_like_field(Xb / jnp.max(Xb), key=jax.random.PRNGKey(8))
+    Xbp, ybp = stripe_partition(Xb, yb, big_agents)
+    Zb = select_inducing(Xbp, big_m)
+    t0 = time.time()
+    sfb = jax.block_until_ready(
+        jax.jit(fit_sparse_experts)(lt, Xbp, ybp, Zb))
+    t_fit_big = time.time() - t0
+    engb = PredictionEngine(sfb, path_graph(big_agents), chunk=chunk)
+    Xq = random_inputs(jax.random.PRNGKey(9), chunk)
+    t_serve = _time_best(lambda q: engb.predict("npae_sparse", q)[:2], Xq,
+                         reps=reps)
+    mu_b, var_b, _ = engb.predict("npae_sparse", Xq)
+    assert bool(jnp.all(jnp.isfinite(mu_b))) and bool(jnp.all(var_b > 0))
+    dense_big = big_agents * big_ni * big_ni * itemsize
+    sparse_big = sum(int(np.prod(a.shape)) * itemsize for a in
+                     (sfb.Z, sfb.Lmm, sfb.LS, sfb.c, sfb.tr_corr))
+    out["big"] = {
+        "agents": big_agents, "Ni": int(big_ni), "m": int(big_m),
+        "fit_s": t_fit_big, "qps_npae_sparse": chunk / t_serve,
+        "dense_factor_GB": dense_big / 2**30,
+        "sparse_factor_MB": sparse_big / 2**20,
+    }
+    csv(f"# 100k/agent run: {big_agents} agents x Ni={big_ni} m={big_m}: "
+        f"fit {t_fit_big:.1f}s, npae_sparse {chunk/t_serve:.0f} qps; "
+        f"dense factors would be {dense_big/2**30:.0f} GB vs "
+        f"{sparse_big/2**20:.1f} MB sparse")
+
+    from .envtags import bench_tags, merge_json
+    out.update(bench_tags("sparse"))
+    merge_json(json_path, {"sparse": out})
+    csv(f"# wrote {json_path} (sparse section)")
     return out
 
 

@@ -33,19 +33,19 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     choices=["all", "training", "prediction", "serving",
                              "sharded", "scheduler", "scenario", "online",
-                             "roofline", "kernels"])
+                             "sparse", "roofline", "kernels"])
     ap.add_argument("--scenario", default=None,
                     help="scenario section: preset name (smoke|mission|"
                          "chaos) or ScenarioConfig JSON path (default: "
                          "chaos, or smoke under --smoke)")
     args = ap.parse_args()
     if args.smoke and args.only not in ("all", "training", "sharded",
-                                        "scheduler", "scenario"):
+                                        "scheduler", "scenario", "sparse"):
         # fail loudly: a CI step combining these would otherwise stay green
         # while executing nothing
         raise SystemExit(f"--smoke: section {args.only!r} has no "
                          "seconds-scale mode; use --only training, sharded, "
-                         "scheduler or scenario (or all)")
+                         "scheduler, scenario or sparse (or all)")
 
     out = sys.stdout
     def csv(line):
@@ -74,6 +74,12 @@ def main() -> None:
         csv("# === request-level scheduler (continuous batching vs v1 "
             "front door) ===")
         bench_prediction.run_scheduler(csv=csv, smoke=args.smoke)
+
+    if args.only in ("all", "sparse"):
+        from . import bench_prediction
+        csv("# === sparse pseudo-representation experts (accuracy vs m; "
+            "100k points/agent) ===")
+        bench_prediction.run_sparse(csv=csv, smoke=args.smoke)
 
     if args.only in ("all", "scenario"):
         from . import bench_scenario

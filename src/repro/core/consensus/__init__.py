@@ -4,7 +4,7 @@ from .graph import (path_graph, cycle_graph, complete_graph,
                     connected_components, attach_agent, remove_agent)
 from .dac import (dac, dac_until, dac_residual, dac_sharded,
                   dac_sharded_residual, dac_time_varying, ring_allreduce,
-                  ring_allsum, ring_allmax)
+                  ring_allgather, ring_allsum, ring_allmax)
 from .degraded import (ConsensusDiverged, dac_masked, dac_masked_sums,
                        ring_allsum_masked)
 from .jor import jor, jor_sharded
@@ -18,7 +18,7 @@ __all__ = [
     "is_connected", "connected_components", "attach_agent", "remove_agent",
     "dac", "dac_until", "dac_residual", "dac_sharded",
     "dac_sharded_residual", "dac_time_varying",
-    "ring_allreduce", "ring_allsum", "ring_allmax",
+    "ring_allreduce", "ring_allgather", "ring_allsum", "ring_allmax",
     "ConsensusDiverged", "dac_masked", "dac_masked_sums",
     "ring_allsum_masked",
     "jor", "jor_sharded", "power_method", "extreme_eigs", "optimal_omega",

@@ -161,6 +161,29 @@ def ring_allreduce(w_local: jax.Array, axis_name: str, op=jnp.add):
     return acc
 
 
+def ring_allgather(w_local: jax.Array, axis_name: str) -> jax.Array:
+    """EXACT all-gather over a mesh axis using only neighbor ring messages.
+
+    Returns (n,) + w_local.shape with out[i] = device i's w_local on EVERY
+    device: each of the `n - 1` hops forwards the travelling message and
+    index-places it at its origin slot. Placement (no reduction) means the
+    result is bit-identical on every device — no pmean needed before an
+    unsharded out_spec. This is the collective behind the sharded
+    npae_sparse path: agents exchange their (m, q) low-rank NPAE factors
+    (core.sparse.lowrank) instead of O(Ni)-sized data, and every shard
+    assembles the SAME full cross-covariance.
+    """
+    n = axis_size(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    idx = jax.lax.axis_index(axis_name)
+    out = jnp.zeros((n,) + w_local.shape, w_local.dtype).at[idx].set(w_local)
+    msg = w_local
+    for hop in range(1, n):
+        msg = jax.lax.ppermute(msg, axis_name, perm)
+        out = out.at[(idx - hop) % n].set(msg)
+    return out
+
+
 def ring_allsum(w_local: jax.Array, axis_name: str) -> jax.Array:
     """`ring_allreduce` with addition (exact network sums on the ring)."""
     return ring_allreduce(w_local, axis_name, jnp.add)

@@ -43,7 +43,9 @@ from ..consensus.degraded import ConsensusDiverged, dac_masked_sums
 from ..consensus.graph import connected_components
 from ..gp.kernel import unpack
 from . import aggregation as agg
-from .cbnn import cbnn_mask_cached
+from ..sparse import (SparseExperts, npae_terms_lowrank,
+                      sparse_moments_cached, sparse_scores)
+from .cbnn import _mask_from_scores, cbnn_mask_cached
 from .decentralized import (dec_poe_from_moments, dec_gpoe_from_moments,
                             dec_bcm_from_moments, dec_rbcm_from_moments,
                             dec_grbcm_from_moments, dec_npae_from_terms,
@@ -89,13 +91,17 @@ def fit_experts(log_theta, Xp, yp, jitter: float = 1e-8,
     Kcross = None
     if cache_cross:
         M, Ni = Xp.shape[0], Xp.shape[1]
-        est_mb = M * M * Ni * Ni * jnp.dtype(Xp.dtype).itemsize / 2**20
-        if est_mb > cross_cache_limit_mb:
+        est_bytes = M * M * Ni * Ni * jnp.dtype(Xp.dtype).itemsize
+        if est_bytes / 2**20 > cross_cache_limit_mb:
             raise ValueError(
-                f"cache_cross would materialize {est_mb:.2f} MB of cross-"
-                f"agent Gram blocks (M={M}, Ni={Ni}) > limit "
-                f"{cross_cache_limit_mb:.0f} MB; raise "
-                f"cross_cache_limit_mb or serve without the cache")
+                f"cache_cross would materialize {est_bytes:,} bytes "
+                f"({est_bytes / 2**20:.2f} MB) of cross-agent Gram blocks "
+                f"(M={M}, Ni={Ni}) > limit {cross_cache_limit_mb:.0f} MB; "
+                f"raise cross_cache_limit_mb, serve without the cache, or "
+                f"serve the NPAE family from sparse pseudo-representations "
+                f"instead — FleetConfig(sparse_m=...) with method "
+                f"'npae_sparse' needs no cross-Gram at all "
+                f"(docs/sparse_experts.md)")
         Kcross = cross_gram(log_theta, Xp)
     return FittedExperts(log_theta, Xp, yp, L, alpha, Kcross)
 
@@ -156,8 +162,12 @@ class PredictionEngine:
 
     METHODS = ("poe", "gpoe", "bcm", "rbcm", "grbcm", "npae", "npae_star",
                "nn_poe", "nn_gpoe", "nn_bcm", "nn_rbcm", "nn_grbcm",
-               "nn_npae", "cen_poe", "cen_gpoe", "cen_bcm", "cen_rbcm",
-               "cen_grbcm", "cen_npae")
+               "nn_npae", "npae_sparse", "cen_poe", "cen_gpoe", "cen_bcm",
+               "cen_rbcm", "cen_grbcm", "cen_npae")
+
+    # exact-NPAE members that need the dense cross-Gram and therefore can
+    # never serve from SparseExperts (npae_sparse is their low-rank stand-in)
+    _DENSE_ONLY = ("npae", "npae_star", "nn_npae", "cen_npae")
 
     def __init__(self, fitted: FittedExperts, A, *, chunk: int = 256,
                  dac_iters: int = 200, jor_iters: int = 500,
@@ -202,9 +212,25 @@ class PredictionEngine:
 
     # -- per-tile computation ------------------------------------------------
 
-    def _moments(self, f: FittedExperts, Xq):
+    def _moments(self, f, Xq):
+        """Local expert moments — isinstance dispatch is what lets every
+        PoE/BCM/CBNN aggregation serve dense and sparse fleets from the
+        same engine (the shapes differ, the (M, Nt) contract does not)."""
+        if isinstance(f, SparseExperts):
+            return sparse_moments_cached(f.log_theta, f.Z, f.Lmm, f.LS, f.c,
+                                         Xq, stream_mean=self.stream_mean)
         return local_moments_cached(f.log_theta, f.Xp, f.L, f.alpha, Xq,
                                     stream_mean=self.stream_mean)
+
+    def _mask(self, f, Xq):
+        """CBNN participation mask (eq. 39) from dense or sparse factors —
+        both score forms equal sigma_f^2 - var_i, so eta_nn thresholds are
+        directly comparable across expert representations."""
+        if isinstance(f, SparseExperts):
+            return _mask_from_scores(
+                sparse_scores(f.log_theta, f.Z, f.Lmm, f.LS, Xq),
+                self.eta_nn)
+        return cbnn_mask_cached(f.log_theta, f.Xp, f.L, Xq, self.eta_nn)[0]
 
     def _terms(self, f: FittedExperts, Xq):
         return npae_terms_cached(f.log_theta, f.Xp, f.L, f.alpha, Xq,
@@ -216,8 +242,7 @@ class PredictionEngine:
         base = method[3:] if nn else method
         mask = None
         if nn:
-            mask, _ = cbnn_mask_cached(f.log_theta, f.Xp, f.L, Xq,
-                                       self.eta_nn)
+            mask = self._mask(f, Xq)
         red = {}
         dac_fn = None
 
@@ -293,6 +318,12 @@ class PredictionEngine:
             if self.diagnostics:
                 red["dac_residuals"] = info["dac_residuals"]
                 red["jor_residuals"] = info["jor_residuals"]
+        elif method == "npae_sparse":
+            # low-rank NPAE: cross-covariance through the pseudo-points,
+            # solved by the SAME aggregation core as the exact family
+            mu, kA, CA = npae_terms_lowrank(f.log_theta, f.Z, f.Lmm, f.LS,
+                                            f.c, Xq)
+            mean, v = agg.npae(mu, kA, CA, pv, jitter=self.npae_jitter)
         elif method == "cen_npae":
             mu, kA, CA = self._terms(f, Xq)
             mean, v = agg.npae(mu, kA, CA, pv)
@@ -435,12 +466,28 @@ class PredictionEngine:
         if ("grbcm" in method and (self.fitted_aug is None
                                    or self.fitted_comm is None)):
             raise ValueError("grbcm methods need fitted_aug and fitted_comm")
+        sparse = isinstance(self.fitted, SparseExperts)
+        if sparse and method in self._DENSE_ONLY:
+            raise ValueError(
+                f"{method} needs the dense O(M^2 Ni^2) cross-Gram and is "
+                f"not servable from sparse pseudo-representation experts; "
+                f"use 'npae_sparse' (the low-rank NPAE path)")
+        if method == "npae_sparse" and not sparse:
+            raise ValueError(
+                "npae_sparse serves from SparseExperts only — fit with "
+                "FleetConfig(sparse_m=...) (or fit_sparse_experts) to build "
+                "the pseudo-representation factors")
         chaos = meta = None
         if fault_plan is not None and not fault_plan.consensus_free:
             if method.startswith("cen_"):
                 raise ValueError(
                     f"{method}: centralized references do not run consensus "
                     f"and cannot serve a fault plan with consensus faults")
+            if method == "npae_sparse":
+                raise ValueError(
+                    "npae_sparse runs exact collectives (no averaging "
+                    "consensus) and cannot serve a fault plan with "
+                    "consensus faults")
             chaos, meta = self._chaos_arrays(fault_plan)
         run = self._compiled.get(method)
         if run is None:
@@ -539,4 +586,5 @@ class PredictionEngine:
         """Per-agent streamed posterior means (M, Nt) via the fused
         Gram-matvec kernel — the O(Ni + Nt) mean-only hot path."""
         f = self.fitted
-        return stream_means(f.log_theta, f.Xp, f.alpha, Xs)
+        w = f.c if isinstance(f, SparseExperts) else f.alpha
+        return stream_means(f.log_theta, f.Xp, w, Xs)

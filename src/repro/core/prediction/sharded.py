@@ -41,9 +41,15 @@ Two serving modes:
   and is a documented approximation otherwise (info carries per-query
   participant counts so callers can audit).
 
-The NPAE family (Algs. 10-12, 18) needs per-query (M, M) solves over
-cross-agent Gram terms — strongly-complete exchange — and stays on the
-replicated engine; `ShardedEngine` rejects it explicitly.
+The dense NPAE family (Algs. 10-12, 18) needs per-query (M, M) solves over
+cross-agent Gram terms — strongly-complete exchange of O(Ni)-sized state —
+and stays on the replicated engine; `ShardedEngine` rejects it explicitly.
+The LOW-RANK counterpart `npae_sparse` DOES shard: sparse pseudo-
+representation experts (core.sparse) compress each agent's contribution to
+(m, q) Nystrom factors, which `ring_allgather` exchanges exactly in
+ndev - 1 neighbor hops; every shard then assembles the identical full
+cross-covariance with `cross_lowrank` and runs the same `aggregation.npae`
+solve as the replicated engine — sharded == replicated by construction.
 """
 from __future__ import annotations
 
@@ -56,8 +62,11 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ...obs import default_registry
-from ..consensus.dac import (dac_sharded, dac_sharded_residual, ring_allmax,
-                             ring_allsum)
+from ..consensus.dac import (dac_sharded, dac_sharded_residual,
+                             ring_allgather, ring_allmax, ring_allsum)
+from ..sparse import (SparseExperts, cross_lowrank, sparse_moments_cached,
+                      sparse_npae_factors, sparse_scores)
+from .aggregation import npae
 from .cbnn import _mask_from_scores, cbnn_scores_cached
 from .decentralized import (_grbcm_beta, _grbcm_posterior, _poe_beta,
                             _poe_posterior, _poe_summands)
@@ -68,35 +77,46 @@ _BETA_MODE = {"poe": "one", "gpoe": "avg", "bcm": "one", "rbcm": "entropy"}
 _BCM_CORRECTION = {"poe": False, "gpoe": False, "bcm": True, "rbcm": True}
 
 
-def expert_specs(fitted: FittedExperts, axis_name: str) -> FittedExperts:
-    """PartitionSpecs sharding the agent axis of every per-agent leaf.
+def expert_specs(fitted, axis_name: str):
+    """PartitionSpecs sharding the agent axis of every per-agent leaf
+    (polymorphic over FittedExperts / core.sparse.SparseExperts).
 
     log_theta is replicated (it is fleet-shared after consensus training).
-    The NPAE cross-Gram cache is never sharded — the NPAE family is not
-    servable on the agent-sharded path (see module docstring) — so Kcross
-    must be None.
+    The NPAE cross-Gram cache is never sharded — the exact NPAE family is
+    not servable on the agent-sharded path (see module docstring) — so
+    Kcross must be None; sparse fleets never carry one.
     """
+    a = P(axis_name)
+    if isinstance(fitted, SparseExperts):
+        return SparseExperts(log_theta=P(), Z=a, Lmm=a, LS=a, c=a, tr_corr=a)
     if fitted.Kcross is not None:
         raise ValueError(
             "expert_specs: Kcross (the NPAE cross-Gram cache) has no "
             "agent-sharded layout; refit with cache_cross=False")
-    a = P(axis_name)
     return FittedExperts(log_theta=P(), Xp=a, yp=a, L=a, alpha=a, Kcross=None)
 
 
-def replicated_specs(fitted: FittedExperts) -> FittedExperts:
+def replicated_specs(fitted):
     """All-replicated specs (the 1-agent grBCM communication expert)."""
     return jax.tree.map(lambda _: P(), fitted)
 
 
-def shard_experts(fitted: FittedExperts, mesh, axis_name: str = "agents",
-                  *, replicate: bool = False) -> FittedExperts:
+def shard_experts(fitted, mesh, axis_name: str = "agents",
+                  *, replicate: bool = False):
     """Place a fitted fleet on `mesh`: agent axis sharded over `axis_name`
     (or fully replicated for the communication expert)."""
     specs = replicated_specs(fitted) if replicate \
         else expert_specs(fitted, axis_name)
     return jax.tree.map(
         lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), fitted, specs)
+
+
+def _strip_kcross(fitted):
+    """Drop the (un-shardable) NPAE cross-Gram cache from a dense fleet;
+    sparse fleets carry no such cache and pass through untouched."""
+    if isinstance(fitted, FittedExperts) and fitted.Kcross is not None:
+        return fitted._replace(Kcross=None)
+    return fitted
 
 
 class ShardedEngine:
@@ -123,14 +143,13 @@ class ShardedEngine:
     """
 
     METHODS = ("poe", "gpoe", "bcm", "rbcm", "grbcm", "nn_poe", "nn_gpoe",
-               "nn_bcm", "nn_rbcm", "nn_grbcm")
+               "nn_bcm", "nn_rbcm", "nn_grbcm", "npae_sparse")
 
-    def __init__(self, fitted: FittedExperts, mesh, *,
+    def __init__(self, fitted, mesh, *,
                  axis_name: str = "agents", chunk: int = 256,
                  dac_iters: int = 200, eta_nn: float = 0.1,
-                 consensus: str = "dac",
-                 fitted_aug: FittedExperts | None = None,
-                 fitted_comm: FittedExperts | None = None,
+                 consensus: str = "dac", npae_jitter: float = 1e-6,
+                 fitted_aug=None, fitted_comm=None,
                  stream_mean: bool = False):
         if axis_name not in mesh.axis_names:
             raise ValueError(f"mesh has no axis {axis_name!r}")
@@ -148,13 +167,13 @@ class ShardedEngine:
         self.dac_iters = int(dac_iters)
         self.eta_nn = float(eta_nn)
         self.consensus = consensus
+        self.npae_jitter = float(npae_jitter)
         self.stream_mean = bool(stream_mean)
         # the NPAE cross-Gram cache has no sharded consumer; drop it rather
-        # than force callers to refit
-        self.fitted = shard_experts(fitted._replace(Kcross=None), mesh,
-                                    axis_name)
+        # than force callers to refit (sparse fleets never carry one)
+        self.fitted = shard_experts(_strip_kcross(fitted), mesh, axis_name)
         self.fitted_aug = None if fitted_aug is None else \
-            shard_experts(fitted_aug._replace(Kcross=None), mesh, axis_name)
+            shard_experts(_strip_kcross(fitted_aug), mesh, axis_name)
         self.fitted_comm = None if fitted_comm is None else \
             shard_experts(fitted_comm, mesh, axis_name, replicate=True)
         # per-agent centroids drive host-side query routing (nearest agent
@@ -170,13 +189,27 @@ class ShardedEngine:
 
     # -- shard-local tile computation ---------------------------------------
 
-    def _local_mask(self, f: FittedExperts, Xq, *, ring: bool):
+    def _moments(self, f, Xq, *, stream_mean: bool = False):
+        """Per-agent posterior moments for the local block, polymorphic over
+        dense (O(Ni) alpha/L) and sparse (O(m) pseudo-representation)
+        experts — the dispatch that lets every DAC-family method serve
+        unchanged from either representation."""
+        if isinstance(f, SparseExperts):
+            return sparse_moments_cached(f.log_theta, f.Z, f.Lmm, f.LS, f.c,
+                                         Xq, stream_mean=stream_mean)
+        return local_moments_cached(f.log_theta, f.Xp, f.L, f.alpha, Xq,
+                                    stream_mean=stream_mean)
+
+    def _local_mask(self, f, Xq, *, ring: bool):
         """CBNN mask for THIS device's agent block (Mb, chunk).
 
         ring=True closes the >= 1-agent guarantee globally (exact ring max
         of the per-device best scores — full-consensus mode); ring=False
         keeps the guarantee within the local block (routed mode)."""
-        scores = cbnn_scores_cached(f.log_theta, f.Xp, f.L, Xq)
+        if isinstance(f, SparseExperts):
+            scores = sparse_scores(f.log_theta, f.Z, f.Lmm, f.LS, Xq)
+        else:
+            scores = cbnn_scores_cached(f.log_theta, f.Xp, f.L, Xq)
         if not ring:
             return _mask_from_scores(scores, self.eta_nn)
         gmax = ring_allmax(jnp.max(scores, axis=0), self.axis_name)
@@ -195,17 +228,13 @@ class ShardedEngine:
         is the block-local mask sum by construction."""
         base = method[3:] if method.startswith("nn_") else method
         if base == "grbcm":
-            mu, var = local_moments_cached(fa.log_theta, fa.Xp, fa.L,
-                                           fa.alpha, Xq,
-                                           stream_mean=self.stream_mean)
-            mu_c, var_c = local_moments_cached(fc.log_theta, fc.Xp, fc.L,
-                                               fc.alpha, Xq)
+            mu, var = self._moments(fa, Xq, stream_mean=self.stream_mean)
+            mu_c, var_c = self._moments(fc, Xq)
             mu_c, var_c = mu_c[0], var_c[0]
             m = jnp.ones_like(mu) if mask is None else mask.astype(mu.dtype)
             beta = _grbcm_beta(var, var_c, m, gidx)
         else:
-            mu, var = local_moments_cached(f.log_theta, f.Xp, f.L, f.alpha,
-                                           Xq, stream_mean=self.stream_mean)
+            mu, var = self._moments(f, Xq, stream_mean=self.stream_mean)
             m = jnp.ones_like(mu) if mask is None else mask.astype(mu.dtype)
             if base == "gpoe":
                 # eq. 12 'avg' weights need the participant count; mask
@@ -265,6 +294,31 @@ class ShardedEngine:
             red["dac_residuals"] = res_traj
         return perq, red
 
+    def _sparse_npae_tile(self, f, Xq):
+        """One query tile of the sharded low-rank NPAE path (npae_sparse).
+
+        Each device computes its OWN block's Nystrom factors (mu, kA, U)
+        from the sparse pseudo-representation, then `ring_allgather`
+        exchanges the (m, q)-sized factors and inducing sets exactly —
+        ndev - 1 neighbor hops, index placement so every shard holds
+        bit-identical copies. From there the full (q, M, M) cross-
+        covariance and the per-query NPAE solve are the SAME code the
+        replicated engine runs (`cross_lowrank` + `aggregation.npae`), so
+        sharded == replicated by construction, not by convergence. No
+        averaging consensus is involved, hence a zero dac_residual."""
+        ax = self.axis_name
+        mu_b, kA_b, U_b = sparse_npae_factors(f.log_theta, f.Z, f.Lmm,
+                                              f.LS, f.c, Xq)
+        M = self.ndev * f.Z.shape[0]
+        Z = ring_allgather(f.Z, ax).reshape((M,) + f.Z.shape[1:])
+        mu = ring_allgather(mu_b, ax).reshape(M, -1)
+        kA = ring_allgather(kA_b, ax).reshape(M, -1)
+        U = ring_allgather(U_b, ax).reshape((M,) + U_b.shape[1:])
+        CA = cross_lowrank(f.log_theta, Z, U, kA)
+        mean, v = npae(mu, kA, CA, f.prior_var, jitter=self.npae_jitter)
+        return ({"mean": mean, "var": v},
+                {"dac_residual": jnp.zeros((), Xq.dtype)})
+
     def _routed_tile(self, method, f, fa, fc, gidx, Xq):
         """One query tile, routed mode: this device's block ONLY — local
         mask (>= 1 guarantee within the block) and local masked
@@ -293,11 +347,14 @@ class ShardedEngine:
         ax = self.axis_name
         grb = "grbcm" in method
         nn = method.startswith("nn_")
+        sp = method == "npae_sparse"
         perq_specs = {"mean": P(), "var": P()}
         if nn:
             perq_specs["mask_t"] = P(None, ax)
         red_specs = {"dac_residual": P()}
-        if self.diagnostics:
+        if self.diagnostics and not sp:
+            # npae_sparse runs exact collectives only — there is no DAC
+            # trajectory to capture
             red_specs["dac_residuals"] = P()
         out_specs = (perq_specs, red_specs)
 
@@ -309,7 +366,10 @@ class ShardedEngine:
             f, *rest = args
             fa, fc = (rest[0], rest[1]) if grb else (None, None)
             Xs = rest[-1]
-            Mb = f.yp.shape[0]
+            if sp:
+                return map_query_tiles(
+                    lambda Xq: self._sparse_npae_tile(f, Xq), Xs, self.chunk)
+            Mb = f.Xp.shape[0]
             gidx = jax.lax.axis_index(ax) * Mb + jnp.arange(Mb)
             return map_query_tiles(
                 lambda Xq: self._full_tile(method, f, fa, fc, gidx, Xq),
@@ -332,7 +392,7 @@ class ShardedEngine:
             f, *rest = args
             fa, fc = (rest[0], rest[1]) if grb else (None, None)
             Xr = rest[-1]                                # local (1, B, D)
-            Mb = f.yp.shape[0]
+            Mb = f.Xp.shape[0]
             gidx = jax.lax.axis_index(ax) * Mb + jnp.arange(Mb)
             perq, _ = map_query_tiles(
                 lambda Xq: self._routed_tile(method, f, fa, fc, gidx, Xq),
@@ -392,8 +452,15 @@ class ShardedEngine:
         if method not in self.METHODS:
             raise ValueError(
                 f"unknown sharded method {method!r}; one of {self.METHODS} "
-                f"(the NPAE family needs strongly-complete exchange and is "
-                f"served by the replicated PredictionEngine)")
+                f"(the dense NPAE family needs strongly-complete exchange "
+                f"of O(Ni) factors and is served by the replicated "
+                f"PredictionEngine; its low-rank counterpart 'npae_sparse' "
+                f"DOES shard — fit with FleetConfig(sparse_m=...))")
+        if method == "npae_sparse" and \
+                not isinstance(self.fitted, SparseExperts):
+            raise ValueError(
+                "npae_sparse serves from SparseExperts only — fit with "
+                "FleetConfig(sparse_m=...) / fit_sparse_experts")
         run = self._compiled.get(("full", method))
         if run is None:
             run = self._make_full(method)
@@ -462,9 +529,7 @@ class ShardedEngine:
                 "n_selected": perq["n_selected"][slot]}
         return perq["mean"][slot], perq["var"][slot], info
 
-    def swap_experts(self, fitted: FittedExperts,
-                     fitted_aug: FittedExperts | None = None,
-                     fitted_comm: FittedExperts | None = None):
+    def swap_experts(self, fitted, fitted_aug=None, fitted_comm=None):
         """Hot-swap served factors (same shapes) without recompiling — the
         experts are traced arguments of every compiled program."""
         def shapes(t):
@@ -473,9 +538,9 @@ class ShardedEngine:
         # __init__ strips the (un-shardable) NPAE cross-Gram cache from the
         # served fleets; strip it from the candidates too so a refit carrying
         # Kcross compares same-shaped
-        fitted = fitted._replace(Kcross=None)
+        fitted = _strip_kcross(fitted)
         if fitted_aug is not None:
-            fitted_aug = fitted_aug._replace(Kcross=None)
+            fitted_aug = _strip_kcross(fitted_aug)
         for name, new, old in (("fitted", fitted, self.fitted),
                                ("fitted_aug", fitted_aug, self.fitted_aug),
                                ("fitted_comm", fitted_comm,

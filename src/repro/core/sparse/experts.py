@@ -1,0 +1,197 @@
+"""Sparse pseudo-representation experts (ROADMAP item 2): each agent
+compresses its Ni points to m << Ni inducing inputs Z_i with Titsias-style
+variational factors, dropping per-expert cost from O(Ni^3) to O(Ni m^2)
+and inter-agent exchange from O(Ni) to O(m).
+
+`SparseExperts` is the drop-in counterpart to
+`prediction.engine.FittedExperts`: the same (M, ...) agent-leading pytree
+contract, the same fit-once / serve-many split, consumed by the SAME
+PredictionEngine/ShardedEngine through isinstance dispatch. Per agent i we
+cache
+
+  Lmm_i   = chol(K(Z_i, Z_i) + jit I)                    (m, m)
+  LS_i    = chol(Sigma_i + jit I),
+            Sigma_i = Kmm + sigma_eps^-2 Kmn Knm         (m, m)
+  c_i     = sigma_eps^-2 Sigma_i^-1 Kmn y_i              (m,)
+  tr_corr = tr(Knn) - tr(Kmm^-1 Kmn Knm)                 scalar
+
+so the SGPR posterior at a query x is mu = k_xZ c and
+var = sigma_f^2 - k_xZ^T (Kmm^-1 - Sigma^-1) k_xZ, and tr_corr is the
+Titsias Qnn diagonal-correction trace (-> 0 as m -> Ni), the fidelity
+diagnostic reported by bench_prediction's accuracy-vs-m sweep.
+
+The only O(Ni) work is the one-time Kmn statistics, streamed through the
+blocked `kernels.ops.kmn_stats` panel accumulation — the (Ni, Ni) Gram is
+never materialized, which is what makes 100k+ points per agent fit.
+
+IMPORT CONTRACT: this module must not import repro.core.prediction at
+module level (prediction.engine imports us; see lowrank.dec_npae_sparse
+for the lazy aggregation import).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...kernels.ops import kmn_stats, rbf_matvec
+from ..gp.kernel import se_kernel, unpack
+
+
+class SparseExperts(NamedTuple):
+    """Per-agent sparse factors, computed once after training (the
+    SparseExperts <-> FittedExperts duality both engines dispatch on)."""
+    log_theta: jax.Array   # (D+2,) shared hyperparameters
+    Z: jax.Array           # (M, m, D) inducing inputs
+    Lmm: jax.Array         # (M, m, m) chol(Kmm + jit I)
+    LS: jax.Array          # (M, m, m) chol(Sigma + jit I)
+    c: jax.Array           # (M, m)   posterior mean weights
+    tr_corr: jax.Array     # (M,)     Titsias diagonal-correction trace
+
+    @property
+    def num_agents(self) -> int:
+        return self.Z.shape[0]
+
+    @property
+    def prior_var(self):
+        return jnp.exp(self.log_theta[-2]) ** 2
+
+    @property
+    def Xp(self):
+        """Inducing inputs stand in for the training inputs everywhere the
+        engines only need representative geometry (centroids, routing)."""
+        return self.Z
+
+    @property
+    def Kcross(self):
+        """Sparse experts never carry a dense cross-Gram cache — the
+        low-rank NPAE path replaces it (lowrank.npae_terms_lowrank)."""
+        return None
+
+
+def select_inducing(Xp: jax.Array, m: int, method: str = "stride",
+                    seed: int = 0) -> jax.Array:
+    """Per-agent inducing inputs Z (M, m, D) from the training inputs.
+
+    "stride"  — evenly strided subset (deterministic; distinct indices for
+                m <= Ni, the m = Ni limit recovering the full set),
+    "random"  — per-agent uniform subset without replacement
+                (fold_in(seed, agent) so agents decorrelate).
+
+    m is clamped to Ni so tiny fleets (grbcm communication experts, smoke
+    runs) never index out of range.
+    """
+    M, N = Xp.shape[0], Xp.shape[1]
+    m = min(int(m), N)
+    if method == "stride":
+        idx = np.round(np.linspace(0, N - 1, m)).astype(np.int32)
+        return Xp[:, idx, :]
+    if method == "random":
+        key = jax.random.PRNGKey(seed)
+
+        def one(i, Xi):
+            p = jax.random.permutation(jax.random.fold_in(key, i), N)
+            return Xi[p[:m]]
+
+        return jax.vmap(one)(jnp.arange(M), Xp)
+    raise ValueError(f"unknown inducing_init {method!r} "
+                     f"(choices: 'stride', 'random')")
+
+
+def _rel_jitter(sigma_f, dtype, jitter):
+    """Jitter relative to the prior scale, floored at 8 eps — the same
+    conditioning policy as aggregation.npae's per-query solve."""
+    eps = jnp.finfo(dtype).eps
+    return (jitter + 8.0 * eps) * sigma_f**2
+
+
+def fit_sparse_experts(log_theta, Xp, yp, Z, jitter: float = 1e-8,
+                       block: int = 4096) -> SparseExperts:
+    """Factorize every agent's sparse model once. Xp (M, Ni, D),
+    yp (M, Ni), Z (M, m, D) -> SparseExperts.
+
+    Cost per agent: O(Ni m) kernel evaluations streamed in (m, block)
+    panels (`kmn_stats`), O(Ni m^2) for the Kmn Knm accumulation, O(m^3)
+    for the two Cholesky factors. No O(Ni^2) anywhere.
+    """
+    ls, sigma_f, sigma_eps = unpack(log_theta)
+    jit_eff = _rel_jitter(sigma_f, Xp.dtype, jitter)
+    m = Z.shape[1]
+    eye = jnp.eye(m, dtype=Xp.dtype)
+
+    def one(Zi, Xi, yi):
+        Kmm = se_kernel(Zi, Zi, log_theta)
+        B, b = kmn_stats(Zi, Xi, yi, ls, sigma_f, bn=block)
+        Lmm = jnp.linalg.cholesky(Kmm + jit_eff * eye)
+        # chol(Sigma) via the whitened form: Sigma = Kmm + B/sigma_eps^2 is
+        # catastrophically ill-conditioned at large Ni (diagonal ~
+        # Ni sigma_f^4 / sigma_eps^2 vs Kmm's ~jit floor — a direct chol
+        # NaNs at Ni ~ 1e5), but W = Lmm^-1 B Lmm^-T / sigma_eps^2 gives
+        # Bw = I + W with min-eig >= 1, and LS = Lmm chol(Bw) is an EXACT
+        # lower-triangular factor of Sigma + jit I (same matrix, same
+        # downstream triangular solves).
+        W = jax.scipy.linalg.solve_triangular(Lmm, B, lower=True)
+        W = jax.scipy.linalg.solve_triangular(Lmm, W.T, lower=True)
+        W = 0.5 * (W + W.T) / sigma_eps**2
+        # W's true eigenvalues are >= 0 (it is A A^T / sigma_eps^2 for
+        # A = Lmm^-1 Kmn), but B's accumulation roundoff amplified through
+        # Kmm's near-null space (cond(Lmm)^2) can push computed eigenvalues
+        # of I + W well below 1 at Ni ~ 1e5 — project back onto the
+        # feasible cone (eigenvalue floor at the provable minimum 1) so
+        # the Cholesky always exists; a no-op when conditioning is benign.
+        ew, V = jnp.linalg.eigh(eye + W)
+        Bw = (V * jnp.maximum(ew, 1.0)) @ V.T
+        LS = Lmm @ jnp.linalg.cholesky(Bw)
+        c = jax.scipy.linalg.cho_solve((LS, True), b) / sigma_eps**2
+        # qnn = tr(Kmm^-1 B) = tr(W) sigma_eps^2; the true correction is
+        # >= 0 — clamp the roundoff that can push it slightly negative
+        tr_corr = jnp.maximum(
+            Xi.shape[0] * sigma_f**2 - jnp.trace(W) * sigma_eps**2, 0.0)
+        return Lmm, LS, c, tr_corr
+
+    Lmm, LS, c, tr_corr = jax.vmap(one)(Z, Xp, yp)
+    return SparseExperts(log_theta, Z, Lmm, LS, c, tr_corr)
+
+
+def sparse_moments_cached(log_theta, Z, Lmm, LS, c, Xs,
+                          stream_mean: bool = False):
+    """Local SGPR moments from cached sparse factors — the sparse analogue
+    of `prediction.local.local_moments_cached`, feeding the SAME
+    PoE/BCM/CBNN aggregation cores. Returns (mu, var), each (M, Nt).
+
+    var = sigma_f^2 - k^T Kmm^-1 k + k^T Sigma^-1 k (the collapsed-bound
+    posterior latent variance), floored at 1e-12 like the dense path.
+    """
+    ls, sigma_f, _ = unpack(log_theta)
+    kss = sigma_f**2
+
+    def one(Zi, Lmi, LSi, ci):
+        ks = se_kernel(Zi, Xs, log_theta)                        # (m, Nt)
+        v1 = jax.scipy.linalg.solve_triangular(Lmi, ks, lower=True)
+        v2 = jax.scipy.linalg.solve_triangular(LSi, ks, lower=True)
+        var = jnp.maximum(kss - jnp.sum(v1 * v1, axis=0)
+                          + jnp.sum(v2 * v2, axis=0), 1e-12)
+        return ks.T @ ci, var
+
+    if stream_mean:
+        var = jax.vmap(lambda Zi, Lmi, LSi, ci: one(Zi, Lmi, LSi, ci)[1])(
+            Z, Lmm, LS, c)
+        mu = jax.vmap(lambda Zi, ci: rbf_matvec(Xs, Zi, ci, ls, sigma_f))(
+            Z, c).astype(Xs.dtype)
+        return mu, var
+    return jax.vmap(one)(Z, Lmm, LS, c)
+
+
+def sparse_scores(log_theta, Z, Lmm, LS, Xs):
+    """CBNN covariance scores (eq. 39 semantics: sigma_f^2 - var_i) from
+    sparse factors -> (M, Nt); same scale as `cbnn.cbnn_scores_cached`, so
+    the eta_nn thresholds and the >= max guarantee carry over unchanged."""
+    def one(Zi, Lmi, LSi):
+        ks = se_kernel(Zi, Xs, log_theta)
+        v1 = jax.scipy.linalg.solve_triangular(Lmi, ks, lower=True)
+        v2 = jax.scipy.linalg.solve_triangular(LSi, ks, lower=True)
+        return jnp.sum(v1 * v1, axis=0) - jnp.sum(v2 * v2, axis=0)
+
+    return jax.vmap(one)(Z, Lmm, LS)

@@ -1,0 +1,93 @@
+"""Low-rank NPAE from sparse factors: the sharded-NPAE unlock.
+
+Dense NPAE needs every cross-agent Gram block K(X_i, X_j) — O(M^2 Ni^2)
+work and memory, which is why the exact NPAE family serves replicated
+only. With sparse experts the cross-covariance of the expert means is
+low-rank: per query t and agents i, j
+
+  [C_A]_ij[t] = U_i[:, t]^T  K(Z_i, Z_j)  U_j[:, t],
+  U_i = (Kmm_i^-1 - Sigma_i^-1) k(Z_i, x_t)          (m, q) per agent,
+
+a double-Nystroem through the pseudo-points: O(M^2 m^2) per query tile,
+and — decisive for sharding — each agent contributes only its (m, q)
+factor U_i plus its m inducing points. A shard therefore serves the full
+NPAE solve after ring-allgathering M small factors instead of exchanging
+O(Ni)-sized data (consensus.dac.ring_allgather), registered as the
+`npae_sparse` method with shardable=True.
+
+The diagonal is set to the exact local k_A (same idiom as the dense
+`npae_terms_cached`), and the final per-query solve is the SAME
+`aggregation.npae` core in the replicated and sharded engines — which is
+what makes sharded == replicated parity hold by construction.
+
+IMPORT CONTRACT: `aggregation` is imported lazily inside
+`dec_npae_sparse` — prediction.engine imports this package, so a
+module-level import of any repro.core.prediction submodule would cycle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..gp.kernel import se_kernel
+from .experts import SparseExperts, fit_sparse_experts, select_inducing
+
+
+def sparse_npae_factors(log_theta, Z, Lmm, LS, c, Xs):
+    """Per-agent low-rank NPAE factors at the query tile Xs (Nt, D).
+
+    Returns (mu (M, Nt), kA (M, Nt), U (M, m, Nt)) with
+    U_i = (Kmm^-1 - Sigma^-1) k(Z_i, Xs) and kA_i = k^T U_i — exactly the
+    payload a shard exchanges (O(m Nt) per agent).
+    """
+    def one(Zi, Lmi, LSi, ci):
+        ks = se_kernel(Zi, Xs, log_theta)                        # (m, Nt)
+        U = (jax.scipy.linalg.cho_solve((Lmi, True), ks)
+             - jax.scipy.linalg.cho_solve((LSi, True), ks))
+        kA = jnp.sum(ks * U, axis=0)
+        return ks.T @ ci, kA, U
+
+    return jax.vmap(one)(Z, Lmm, LS, c)
+
+
+def cross_lowrank(log_theta, Z, U, kA):
+    """Assemble C_A (Nt, M, M) from allgathered factors: off-diagonals via
+    the double-Nystroem U_i^T K(Z_i, Z_j) U_j, diagonal set to the exact
+    local k_A. Pure function of the exchanged (Z, U, kA) — the replicated
+    engine and every shard run this same assembly on identical inputs,
+    which is the bit-identical-parity argument."""
+    M = Z.shape[0]
+
+    def cross(i, j):
+        Kij = se_kernel(Z[i], Z[j], log_theta)                   # (m, m)
+        return jnp.einsum("at,ab,bt->t", U[i], Kij, U[j])        # (Nt,)
+
+    idx = jnp.arange(M)
+    CA = jax.vmap(lambda i: jax.vmap(lambda j: cross(i, j))(idx))(idx)
+    CA = jnp.moveaxis(CA, -1, 0)                                 # (Nt, M, M)
+    return CA.at[:, idx, idx].set(kA.T)
+
+
+def npae_terms_lowrank(log_theta, Z, Lmm, LS, c, Xs):
+    """NPAE aggregation terms from sparse factors — the drop-in analogue of
+    `prediction.local.npae_terms_cached` at O(M^2 m^2) per query instead of
+    O(M^2 Ni^2). Returns (mu (M,Nt), kA (M,Nt), CA (Nt,M,M))."""
+    mu, kA, U = sparse_npae_factors(log_theta, Z, Lmm, LS, c, Xs)
+    return mu, kA, cross_lowrank(log_theta, Z, U, kA)
+
+
+def dec_npae_sparse(log_theta, Xp, yp, Xs, m: int,
+                    inducing_init: str = "stride", jitter: float = 1e-8,
+                    npae_jitter: float = 1e-6, seed: int = 0,
+                    experts: SparseExperts | None = None):
+    """Per-call reference wrapper (fit-and-predict-in-one): sparse NPAE on
+    raw data — the `legacy` entry the facade tests compare the engines
+    against. Pass `experts` to reuse already-fitted factors.
+    Returns (mean (Nt,), var (Nt,))."""
+    from ..prediction.aggregation import npae   # lazy: avoid import cycle
+    f = experts
+    if f is None:
+        Z = select_inducing(Xp, m, inducing_init, seed)
+        f = fit_sparse_experts(log_theta, Xp, yp, Z, jitter=jitter)
+    mu, kA, CA = npae_terms_lowrank(f.log_theta, f.Z, f.Lmm, f.LS, f.c, Xs)
+    return npae(mu, kA, CA, f.prior_var, jitter=npae_jitter)

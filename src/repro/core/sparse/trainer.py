@@ -1,0 +1,116 @@
+"""Sparse variational training: the Titsias collapsed ELBO as a drop-in
+local objective for BOTH trainer families.
+
+  fact-sparse     — centralized FACT-GP workflow (factorized.train_fact_gp
+                    pattern) on the summed collapsed bounds, jointly over
+                    hyperparameters AND inducing inputs Z (Adam + scan).
+                    Warm-startable: pass the exact ADMM theta as log_theta0.
+  dec-apx-sparse  — decentralized ADMM (train_dec_apx_gp) with the local
+                    NLL gradient swapped for the collapsed-ELBO gradient
+                    through the existing `grad_fn` hook
+                    (training.cache.make_local_grad custom-callable form):
+                    each agent derives its Z from a strided subset of its
+                    own data, so the eq. (34) update rule and the consensus
+                    structure are untouched.
+
+The bound (Titsias 2009, in the paper's kernel convention, as a NEGATIVE
+log-likelihood to minimize):
+
+  -ELBO_i = N/2 log 2pi + sum log diag(LB) + N log sigma_eps
+            + (y^T y - c^T c)/(2 sigma_eps^2)            [data fit]
+            + (tr(Knn) - tr(A A^T)) / (2 sigma_eps^2)    [Qnn correction]
+
+with A = Lm^-1 Kmn, B = I + A A^T / sigma_eps^2, LB = chol(B),
+c = LB^-1 A y, tr(Knn) = N sigma_f^2. At m = Ni the correction vanishes
+and the bound equals the exact NLL.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...optim import adam, apply_updates
+from ..gp.kernel import se_kernel, unpack
+from .experts import _rel_jitter
+
+
+def sparse_nll(log_theta, Z, Xi, yi, jitter: float = 1e-8):
+    """Negative collapsed ELBO for ONE agent. Z (m, D), Xi (N, D), yi (N,).
+
+    Differentiable in both log_theta and Z — O(N m^2) per evaluation, no
+    (N, N) matrix anywhere.
+    """
+    ls, sigma_f, sigma_eps = unpack(log_theta)
+    N, m = Xi.shape[0], Z.shape[0]
+    dtype = Xi.dtype
+    Kmm = se_kernel(Z, Z, log_theta)
+    Lm = jnp.linalg.cholesky(Kmm + _rel_jitter(sigma_f, dtype, jitter)
+                             * jnp.eye(m, dtype=dtype))
+    Kmn = se_kernel(Z, Xi, log_theta)
+    A = jax.scipy.linalg.solve_triangular(Lm, Kmn, lower=True)   # (m, N)
+    B = jnp.eye(m, dtype=dtype) + (A @ A.T) / sigma_eps**2
+    LB = jnp.linalg.cholesky(B)
+    cb = jax.scipy.linalg.solve_triangular(LB, A @ yi, lower=True)
+    data_fit = (yi @ yi - (cb @ cb) / sigma_eps**2) / (2.0 * sigma_eps**2)
+    qnn_corr = (N * sigma_f**2 - jnp.sum(A * A)) / (2.0 * sigma_eps**2)
+    return (0.5 * N * jnp.log(2.0 * jnp.pi)
+            + jnp.sum(jnp.log(jnp.diagonal(LB)))
+            + N * jnp.log(sigma_eps) + data_fit + qnn_corr)
+
+
+def sparse_nlls(log_theta, Z, Xp, yp, jitter: float = 1e-8):
+    """-ELBO_i per agent with shared theta, per-agent Z (M, m, D)."""
+    return jax.vmap(lambda Zi, Xi, yi: sparse_nll(log_theta, Zi, Xi, yi,
+                                                  jitter))(Z, Xp, yp)
+
+
+@partial(jax.jit, static_argnames=("steps",))
+def train_fact_sparse(log_theta0, Xp, yp, Z0, steps: int = 200,
+                      lr: float = 0.05, jitter: float = 1e-8):
+    """fact-sparse: centralized Adam on sum_i -ELBO_i, JOINTLY over the
+    shared log_theta and every agent's inducing inputs Z (M, m, D).
+
+    Same communication pattern as FACT-GP (each agent ships its local
+    gradient, the server broadcasts) — the theta gradient is (D+2,) and the
+    Z gradient stays local to its agent. Returns (log_theta, Z, vals) with
+    vals the per-step summed bound (GPFleet surfaces it as info["nll"]).
+    """
+    opt = adam(lr, state_dtype=log_theta0.dtype)
+
+    def objective(params):
+        lt, Z = params
+        return jnp.sum(sparse_nlls(lt, Z, Xp, yp, jitter))
+
+    grad_fn = jax.value_and_grad(objective)
+
+    def body(carry, _):
+        params, st = carry
+        val, g = grad_fn(params)
+        upd, st = opt.update(g, st, params)
+        return (apply_updates(params, upd), st), val
+
+    params0 = (log_theta0, Z0)
+    (params, _), vals = jax.lax.scan(body, (params0, opt.init(params0)),
+                                     None, length=steps)
+    lt, Z = params
+    return lt, Z, vals
+
+
+def make_sparse_grad(m: int, jitter: float = 1e-8):
+    """Custom per-agent gradient for the ADMM `grad_fn` hook (dec-apx-sparse):
+    d(-ELBO_i)/dlog_theta with Z_i a strided subset of the agent's own data
+    (deterministic, agent-local — no coordination needed inside the
+    consensus loop; `inducing_init` only affects the serving-time Z).
+    Signature matches the make_local_grad custom-callable contract:
+    (log_theta, Xi, yi) -> (D+2,).
+    """
+    def grad_one(log_theta, Xi, yi):
+        N = Xi.shape[0]
+        idx = np.round(np.linspace(0, N - 1, min(int(m), N))).astype(np.int32)
+        Z = Xi[idx]
+        return jax.grad(sparse_nll)(log_theta, Z, Xi, yi, jitter)
+
+    return grad_one

@@ -28,6 +28,7 @@ import jax
 
 _GRAPHS = ("path", "cycle", "complete", "random")
 _CONSENSUS = ("dac", "exact")
+_INDUCING_INITS = ("stride", "random")
 
 
 @dataclass(frozen=True)
@@ -76,6 +77,10 @@ class FleetConfig:
     online: bool = False                   # sliding-window experts
     window: int | None = None              # W (None: window = Ni)
 
+    # -- sparse pseudo-representation experts (core.sparse) -----------------
+    sparse_m: int | None = None            # inducing points per agent
+    inducing_init: str = "stride"          # stride | random
+
     def __post_init__(self):
         if self.graph not in _GRAPHS:
             raise ValueError(f"graph must be one of {_GRAPHS}, "
@@ -88,6 +93,16 @@ class FleetConfig:
                 f"theta0 must have input_dim + 2 = {self.input_dim + 2} "
                 f"entries (l_1..l_D, sigma_f, sigma_eps), "
                 f"got {len(self.theta0)}")
+        if self.inducing_init not in _INDUCING_INITS:
+            raise ValueError(
+                f"inducing_init must be one of {_INDUCING_INITS}, "
+                f"got {self.inducing_init!r}")
+        if self.sparse_m is not None and self.sparse_m < 1:
+            raise ValueError(f"sparse_m must be a positive inducing count, "
+                             f"got {self.sparse_m}")
+        # CLI convention writes method names with hyphens ("npae-sparse");
+        # engine dispatch keys use underscores — normalize once here
+        object.__setattr__(self, "method", self.method.replace("-", "_"))
 
     def replace(self, **kw) -> "FleetConfig":
         return dataclasses.replace(self, **kw)

@@ -13,7 +13,9 @@ facade adds dispatch and state management, never new numerics):
 
   fit()        trainer registry -> the §4 ADMM loops -> `fit_experts`
                (grBCM communication/augmented datasets built when the
-               trainer or method needs them)
+               trainer or method needs them; `config.sparse_m` caches
+               O(Ni m^2) sparse pseudo-representations — `core.sparse` —
+               instead of the dense O(Ni^2) factors)
   predict()    method registry -> `PredictionEngine` (replicated) /
                `ShardedEngine` (agent-sharded mesh; `predict_routed` when
                config.routed) — compiled programs cached per method
@@ -55,6 +57,8 @@ from ..core.online import (OnlineExperts, from_batch, join, leave,
                            observe_fleet, refit)
 from ..core.prediction import (FittedExperts, PredictionEngine, ShardedEngine,
                                fit_experts)
+from ..core.sparse import (SparseExperts, fit_sparse_experts,
+                           select_inducing)
 from ..launch.scheduler import ServingScheduler
 from .config import FleetConfig
 from .registry import get_method, get_trainer, validate_config
@@ -217,22 +221,41 @@ class GPFleet:
         self._cache_factors(Xp, yp)
         return self
 
+    def _fit_sparse(self, lt, Xp, yp, Z=None):
+        cfg = self.config
+        if Z is None:
+            Z = select_inducing(Xp, cfg.sparse_m, cfg.inducing_init)
+        return jax.jit(partial(fit_sparse_experts,
+                               jitter=cfg.jitter))(lt, Xp, yp, Z)
+
     def _cache_factors(self, Xp, yp):
-        """Factorize the trained fleet once (fit_experts / online windows)
-        and invalidate the engine."""
+        """Factorize the trained fleet once (fit_experts / sparse
+        pseudo-representations / online windows) and invalidate the
+        engine."""
         cfg, lt = self.config, self.log_theta
         if cfg.online:
             self._online_state = from_batch(lt, Xp, yp, window=cfg.window,
                                             jitter=cfg.jitter)
             self.fitted = self._online_state.to_fitted()
+        elif cfg.sparse_m is not None:
+            # the fact-sparse trainer jointly optimized the inducing sets;
+            # reuse THOSE so serving sees the Z the bound was tightened over
+            Z = self.train_info.get("Z") \
+                if isinstance(self.train_info, dict) else None
+            self.fitted = self._fit_sparse(lt, Xp, yp, Z)
         else:
             self.fitted = jax.jit(partial(
                 fit_experts, jitter=cfg.jitter,
                 cache_cross=cfg.cache_cross))(lt, Xp, yp)
         if get_method(cfg.method).needs_augmented_data:
             Xc, yc, Xa, ya = self._comm_data
-            self.fitted_aug = jax.jit(fit_experts)(lt, Xa, ya)
-            self.fitted_comm = jax.jit(fit_experts)(lt, Xc[None], yc[None])
+            if cfg.sparse_m is not None:
+                self.fitted_aug = self._fit_sparse(lt, Xa, ya)
+                self.fitted_comm = self._fit_sparse(lt, Xc[None], yc[None])
+            else:
+                self.fitted_aug = jax.jit(fit_experts)(lt, Xa, ya)
+                self.fitted_comm = jax.jit(fit_experts)(
+                    lt, Xc[None], yc[None])
         self._engine = None
 
     # -- serving -------------------------------------------------------------
@@ -248,6 +271,7 @@ class GPFleet:
             return ShardedEngine(self.fitted, self.mesh, chunk=cfg.chunk,
                                  dac_iters=cfg.dac_iters, eta_nn=cfg.eta_nn,
                                  consensus=cfg.consensus,
+                                 npae_jitter=cfg.npae_jitter,
                                  fitted_aug=self.fitted_aug,
                                  fitted_comm=self.fitted_comm,
                                  stream_mean=cfg.stream_mean)
@@ -281,6 +305,7 @@ class GPFleet:
         self._require_fitted("predict")
         cfg = self.config
         method = method if method is not None else cfg.method
+        method = method.replace("-", "_")   # CLI convention ("npae-sparse")
         if fault_plan is not None and not fault_plan.consensus_free \
                 and cfg.sharded:
             raise ValueError(
@@ -289,7 +314,9 @@ class GPFleet:
                 "ring, which has no degraded mode)")
         if not method.startswith("cen_"):
             spec = get_method(method)
-            if cfg.sharded and not spec.shardable:
+            if (cfg.sharded and not spec.shardable) or \
+                    (cfg.sparse_m is not None and not spec.sparse) or \
+                    (spec.family == "sparse" and cfg.sparse_m is None):
                 validate_config(cfg.replace(method=method))  # clear error
             if spec.needs_augmented_data and self.fitted_aug is None:
                 raise ValueError(
@@ -549,6 +576,9 @@ class GPFleet:
                 "aug_kcross": (self.fitted_aug is not None
                                and self.fitted_aug.Kcross is not None),
                 "online": self._online_state is not None,
+                "sparse": isinstance(self.fitted, SparseExperts),
+                "aug_sparse": isinstance(self.fitted_aug, SparseExperts),
+                "comm_sparse": isinstance(self.fitted_comm, SparseExperts),
             },
         }
         # atomic publish: fleet.json is the load() entry point, so it is
@@ -584,12 +614,20 @@ class GPFleet:
         def fe(kcross):
             return FittedExperts(0, 0, 0, 0, 0, Kcross=0 if kcross else None)
 
+        def se():
+            return SparseExperts(0, 0, 0, 0, 0, 0)
+
+        # sparse flags default False: checkpoints written before the sparse
+        # subsystem load unchanged
         tree = {"A": 0, "log_theta": 0, "thetas": 0,
-                "fitted": fe(comp["fitted_kcross"])}
+                "fitted": se() if comp.get("sparse", False)
+                else fe(comp["fitted_kcross"])}
         if comp["fitted_aug"]:
-            tree["fitted_aug"] = fe(comp["aug_kcross"])
+            tree["fitted_aug"] = se() if comp.get("aug_sparse", False) \
+                else fe(comp["aug_kcross"])
         if comp["fitted_comm"]:
-            tree["fitted_comm"] = fe(False)
+            tree["fitted_comm"] = se() if comp.get("comm_sparse", False) \
+                else fe(False)
         if comp["online"]:
             tree["count"] = 0
             tree["jitter"] = 0

@@ -12,10 +12,11 @@ One table per axis of the paper:
   residuals, per-agent NLL, theta trajectories) into info["diagnostics"]
   for `repro.obs.TraceRecorder` — see GPFleet.fit(trace=...).
 
-  METHODS — the 13 decentralized prediction methods of §5 with per-entry
-  CAPABILITY flags:
-    shardable             servable by ShardedEngine (DAC family; the NPAE
-                          family needs strongly-complete exchange)
+  METHODS — the 13 decentralized prediction methods of §5 plus the low-rank
+  `npae_sparse` serving path (core.sparse), with per-entry CAPABILITY flags:
+    shardable             servable by ShardedEngine (DAC family; the dense
+                          NPAE family needs strongly-complete exchange —
+                          its low-rank counterpart npae_sparse DOES shard)
     routable              servable by CBNN query routing (nn_* DAC methods)
     online_safe           accepts `OnlineExperts.to_fitted()` hot-swaps
                           (grbcm variants need separately refit augmented /
@@ -23,6 +24,10 @@ One table per axis of the paper:
                           maintain)
     needs_augmented_data  requires the grBCM communication dataset
                           (fitted_aug + fitted_comm, paper eq. 16-17)
+    sparse                servable from sparse pseudo-representation experts
+                          (FleetConfig(sparse_m=...), core.sparse): every
+                          moment-based method is; the dense NPAE trio needs
+                          the O(Ni) per-agent factors it compresses away
   plus `spec.legacy(...)`, the original per-call free function, and
   `spec.legacy_call(cfg, ...)`, a uniform adapter over its signature — so
   engine dispatch, CLI choices, capability validation, and the equivalence
@@ -39,6 +44,8 @@ from typing import Callable, NamedTuple
 import jax.numpy as jnp
 
 from ..core.prediction import decentralized as dec
+from ..core.sparse import (dec_npae_sparse, make_sparse_grad,
+                           select_inducing, train_fact_sparse)
 from ..core.training import (train_apx_gp, train_c_gp, train_dec_apx_gp,
                              train_dec_apx_gp_sharded, train_dec_c_gp,
                              train_dec_gapx_gp, train_fact_gp, train_gapx_gp)
@@ -142,6 +149,31 @@ def _run_dec_apx_sharded(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None,
     return jnp.mean(thetas, axis=0), thetas, info
 
 
+def _run_fact_sparse(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None,
+                     diag=False):
+    # collapsed-ELBO FACT counterpart: joint Adam over (theta, Z); the
+    # optimized inducing sets ride info["Z"] so GPFleet caches the sparse
+    # factors from the SAME Z the bound was tightened over
+    Z0 = select_inducing(Xp, cfg.sparse_m, cfg.inducing_init)
+    lt, Z, vals = train_fact_sparse(lt0, Xp, yp, Z0, steps=cfg.fact_steps,
+                                    lr=cfg.fact_lr, jitter=cfg.jitter)
+    M = Xp.shape[0]
+    return lt, jnp.broadcast_to(lt, (M, lt.shape[0])), {"nll": vals, "Z": Z}
+
+
+def _run_dec_apx_sparse(cfg, lt0, Xp, yp, A, mesh=None, grad_fn=None,
+                        diag=False):
+    # eq. 34 ADMM with the O(Ni m^2) collapsed-ELBO local gradient swapped
+    # in through the SAME grad_fn hook custom kernels use — warm-startable
+    # from exact ADMM theta by passing that theta as lt0
+    if grad_fn is None:
+        grad_fn = make_sparse_grad(cfg.sparse_m, jitter=cfg.jitter)
+    thetas, info = train_dec_apx_gp(lt0, Xp, yp, A, rho=cfg.rho,
+                                    kappa=cfg.kappa, iters=cfg.admm_iters,
+                                    grad_fn=grad_fn, diag=diag)
+    return jnp.mean(thetas, axis=0), thetas, info
+
+
 TRAINERS: dict[str, TrainerSpec] = {s.name: s for s in (
     TrainerSpec("fact", _run_fact, "§2.3.1 (FACT-GP baseline)"),
     TrainerSpec("c", _run_c, "eq. 24"),
@@ -155,7 +187,14 @@ TRAINERS: dict[str, TrainerSpec] = {s.name: s for s in (
     TrainerSpec("dec-apx-sharded", _run_dec_apx_sharded,
                 "eq. 34 under shard_map (device-ring cycle graph)",
                 needs_mesh=True),
+    TrainerSpec("fact-sparse", _run_fact_sparse,
+                "§2.3.1 x Titsias 2009 (collapsed ELBO, joint theta + Z)"),
+    TrainerSpec("dec-apx-sparse", _run_dec_apx_sparse,
+                "eq. 34 with the collapsed-ELBO O(Ni m^2) local gradient",
+                needs_graph=True),
 )}
+
+SPARSE_TRAINERS = ("fact-sparse", "dec-apx-sparse")
 
 
 def trainer_names() -> tuple[str, ...]:
@@ -185,13 +224,16 @@ class MethodSpec(NamedTuple):
     """
     name: str
     paper: str
-    family: str                       # "dac" | "npae"
+    family: str                       # "dac" | "npae" | "sparse"
     legacy: Callable
     legacy_call: Callable
     shardable: bool = False
     routable: bool = False
     online_safe: bool = True
     needs_augmented_data: bool = False
+    # servable from sparse pseudo-representation experts (sparse_m fleets):
+    # every moment/score-based method is; the dense NPAE trio is not
+    sparse: bool = True
     # largest query-batch slot a serving scheduler should compile for this
     # method: the NPAE family's per-query (M, M) solves make big batches
     # memory-heavy, the DAC family tiles flat in the batch size
@@ -239,6 +281,13 @@ def _call_nn_npae(cfg, lt, Xp, yp, Xs, A, Xc=None, yc=None, Xa=None,
                            jitter=cfg.npae_jitter)
 
 
+def _call_npae_sparse(cfg, lt, Xp, yp, Xs, A, Xc=None, yc=None, Xa=None,
+                      ya=None):
+    return dec_npae_sparse(lt, Xp, yp, Xs, cfg.sparse_m,
+                           inducing_init=cfg.inducing_init,
+                           jitter=cfg.jitter, npae_jitter=cfg.npae_jitter)
+
+
 METHODS: dict[str, MethodSpec] = {s.name: s for s in (
     MethodSpec("poe", "Alg. 5, eq. 12-13", "dac", dec.dec_poe,
                _call_dac(dec.dec_poe), shardable=True),
@@ -252,9 +301,10 @@ METHODS: dict[str, MethodSpec] = {s.name: s for s in (
                _call_grbcm, shardable=True, online_safe=False,
                needs_augmented_data=True),
     MethodSpec("npae", "Alg. 10, eq. 18-21", "npae", dec.dec_npae,
-               _call_npae, max_slot=256),
+               _call_npae, max_slot=256, sparse=False),
     MethodSpec("npae_star", "Alg. 11-12 (PM omega*)", "npae",
-               dec.dec_npae_star, _call_npae_star, max_slot=256),
+               dec.dec_npae_star, _call_npae_star, max_slot=256,
+               sparse=False),
     MethodSpec("nn_poe", "Alg. 13, eq. 39", "dac", dec.dec_nn_poe,
                _call_nn(dec.dec_nn_poe), shardable=True, routable=True),
     MethodSpec("nn_gpoe", "Alg. 14, eq. 39", "dac", dec.dec_nn_gpoe,
@@ -267,7 +317,11 @@ METHODS: dict[str, MethodSpec] = {s.name: s for s in (
                _call_nn_grbcm, shardable=True, routable=True,
                online_safe=False, needs_augmented_data=True),
     MethodSpec("nn_npae", "Alg. 18, eq. 39", "npae", dec.dec_nn_npae,
-               _call_nn_npae, max_slot=256),
+               _call_nn_npae, max_slot=256, sparse=False),
+    MethodSpec("npae_sparse", "Alg. 10 from Titsias low-rank factors "
+               "(core.sparse.lowrank)", "sparse", dec_npae_sparse,
+               _call_npae_sparse, shardable=True, online_safe=False,
+               max_slot=256),
 )}
 
 
@@ -276,7 +330,9 @@ def method_names() -> tuple[str, ...]:
 
 
 def get_method(name: str) -> MethodSpec:
-    spec = METHODS.get(name)
+    # CLI convention writes method names with hyphens ("npae-sparse");
+    # registry keys are the engine dispatch names (underscores)
+    spec = METHODS.get(name.replace("-", "_"))
     if spec is None:
         raise KeyError(f"unknown prediction method {name!r}; registered "
                        f"methods: {sorted(METHODS)}")
@@ -300,9 +356,10 @@ def validate_config(cfg) -> None:
         shardable = sorted(n for n, s in METHODS.items() if s.shardable)
         raise ValueError(
             f"method {cfg.method!r} ({spec.family} family) is not servable "
-            f"on the agent-sharded engine — the NPAE family needs strongly-"
-            f"complete exchange and stays replicated. Shardable methods: "
-            f"{shardable}")
+            f"on the agent-sharded engine — the dense NPAE family needs "
+            f"strongly-complete exchange and stays replicated; its low-rank "
+            f"counterpart 'npae_sparse' (FleetConfig(sparse_m=...)) does "
+            f"shard. Shardable methods: {shardable}")
     if cfg.routed and not spec.routable:
         routable = sorted(n for n, s in METHODS.items() if s.routable)
         raise ValueError(
@@ -316,3 +373,31 @@ def validate_config(cfg) -> None:
     if cfg.sharded and cfg.cache_cross:
         raise ValueError("the NPAE cross-Gram cache (cache_cross=True) has "
                          "no agent-sharded layout; drop one of the two")
+    # -- sparse pseudo-representation rules ---------------------------------
+    if cfg.trainer in SPARSE_TRAINERS and cfg.sparse_m is None:
+        raise ValueError(
+            f"trainer {cfg.trainer!r} fits sparse pseudo-representation "
+            f"experts and needs the per-agent inducing count: set "
+            f"FleetConfig(sparse_m=...)")
+    if spec.family == "sparse" and cfg.sparse_m is None:
+        raise ValueError(
+            f"method {cfg.method!r} serves from sparse pseudo-"
+            f"representation experts; set FleetConfig(sparse_m=...)")
+    if cfg.sparse_m is not None:
+        if not spec.sparse:
+            ok = sorted(n for n, s in METHODS.items() if s.sparse)
+            raise ValueError(
+                f"method {cfg.method!r} needs the dense O(Ni) per-agent "
+                f"factors and cannot serve from sparse pseudo-"
+                f"representation experts (sparse_m={cfg.sparse_m}); "
+                f"sparse-capable methods: {ok}")
+        if cfg.online:
+            raise ValueError(
+                "sparse_m and online are mutually exclusive: the sliding-"
+                "window path maintains dense rank-1 Cholesky updates, not "
+                "inducing-point statistics")
+        if cfg.cache_cross:
+            raise ValueError(
+                "cache_cross caches the dense NPAE cross-Gram; sparse "
+                "fleets never need it — npae_sparse assembles the cross-"
+                "covariance from low-rank factors (docs/sparse_experts.md)")

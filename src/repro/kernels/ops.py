@@ -110,6 +110,43 @@ def rbf_matvec(x1, x2, v, lengthscales, sigma_f, use_pallas: bool | None = None,
     return out[:N]
 
 
+@partial(jax.jit, static_argnames=("bn", "use_pallas", "interpret"))
+def kmn_stats(Z, X, y, lengthscales, sigma_f, bn: int = 4096,
+              use_pallas: bool | None = None,
+              interpret: bool | None = None):
+    """Blocked Titsias statistics B = Kmn @ Knm (m, m), b = Kmn @ y (m,)
+    for Kmn = k(Z, X) — the one O(N) pass of a sparse-expert fit
+    (core.sparse.fit_sparse_experts).
+
+    X (N, D) is streamed one (m, bn) kernel panel at a time through the
+    same Gram math as `rbf_gram` (Pallas on TPU, jnp elsewhere), so
+    transient memory is O(m bn) at any N. The padded tail reuses the
+    zero-weight idiom of `rbf_matvec`: pad columns are multiplied by a 0
+    weight before the panel products, so they contribute to neither
+    statistic.
+    """
+    N, D = X.shape
+    bn_ = min(bn, max(1, N))
+    Xb = _pad_to(X, bn_, 0)
+    wb = _pad_to(jnp.ones((N,), X.dtype), bn_, 0)
+    yb = _pad_to(y.astype(X.dtype), bn_, 0)
+    nblk = Xb.shape[0] // bn_
+    blocks = (Xb.reshape(nblk, bn_, D), wb.reshape(nblk, bn_),
+              yb.reshape(nblk, bn_))
+
+    def body(carry, blk):
+        B, b = carry
+        Xi, wi, yi = blk
+        Kb = rbf_gram(Z, Xi, lengthscales, sigma_f, use_pallas=use_pallas,
+                      interpret=interpret) * wi[None, :]
+        return (B + Kb @ Kb.T, b + Kb @ yi), None
+
+    m = Z.shape[0]
+    init = (jnp.zeros((m, m), X.dtype), jnp.zeros((m,), X.dtype))
+    (B, b), _ = jax.lax.scan(body, init, blocks)
+    return B, b
+
+
 @partial(jax.jit, static_argnames=("use_pallas", "interpret", "bn", "bm"))
 def nll_grad_fused(log_theta, d2u, inner, K=None, use_pallas: bool | None = None,
                    interpret: bool | None = None, bn: int = 256,

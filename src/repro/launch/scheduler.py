@@ -584,6 +584,12 @@ class ServingScheduler:
             "gp_jit_cache_misses",
             "engine trace count (distinct compiled programs)").set_fn(
             lambda: float(fleet.jit_cache_misses), tenant=name)
+        # pull-style gauge: queued (undispatched) rows per tenant, sampled
+        # at collect time — the backlog signal autoscalers/dashboards watch
+        self.registry.gauge(
+            "gp_tenant_queued_rows",
+            "queued (undispatched) request rows per tenant").set_fn(
+            lambda: float(tenant.pending_rows), tenant=name)
         return tenant
 
     def warm(self, name: str, example) -> None:

@@ -97,22 +97,24 @@ def assert_matches(out, ref, tol=1e-6):
 # ---------------------------------------------------------------------------
 
 
-def test_method_registry_is_the_papers_13():
-    assert len(METHODS) == 13
+def test_method_registry_is_the_papers_13_plus_sparse():
+    assert len(METHODS) == 14
     assert set(method_names()) == {
         "poe", "gpoe", "bcm", "rbcm", "grbcm", "npae", "npae_star",
-        "nn_poe", "nn_gpoe", "nn_bcm", "nn_rbcm", "nn_grbcm", "nn_npae"}
+        "nn_poe", "nn_gpoe", "nn_bcm", "nn_rbcm", "nn_grbcm", "nn_npae",
+        "npae_sparse"}
     for name in method_names():
         spec = get_method(name)
         assert spec.name == name
         assert callable(spec.legacy) and callable(spec.legacy_call)
-        assert spec.family in ("dac", "npae")
+        assert spec.family in ("dac", "npae", "sparse")
 
 
 def test_trainer_registry_is_the_papers_loops():
     assert set(trainer_names()) == {"fact", "c", "apx", "gapx", "dec-c",
                                     "dec-apx", "dec-gapx",
-                                    "dec-apx-sharded"}
+                                    "dec-apx-sharded", "fact-sparse",
+                                    "dec-apx-sparse"}
     for name in trainer_names():
         assert callable(get_trainer(name).run)
 
@@ -130,9 +132,12 @@ def test_capability_flags_internally_consistent():
         if s.routable:
             assert s.shardable and name.startswith("nn_")
         assert s.needs_augmented_data == ("grbcm" in name)
-        assert s.online_safe == ("grbcm" not in name)
+        assert s.online_safe == ("grbcm" not in name
+                                 and s.family != "sparse")
         if s.family == "npae":
             assert not s.shardable       # strongly-complete exchange
+        # exactly the dense-NPAE family cannot serve from SparseExperts
+        assert s.sparse == (s.family != "npae")
 
 
 def test_unknown_names_fail_loudly():
@@ -147,7 +152,8 @@ def test_unknown_names_fail_loudly():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("name", sorted(method_names()))
+@pytest.mark.parametrize("name", sorted(
+    n for n, s in METHODS.items() if s.family != "sparse"))
 def test_facade_matches_legacy(name, data, fleet, fleet_complete):
     Xp, yp, Xs, Xc, yc, Xa, ya = data
     fl = fleet_complete if name in ("npae", "npae_star") else fleet
@@ -174,7 +180,8 @@ def test_facade_centralized_reference_passthrough(data, fleet):
 
 
 @pytest.mark.parametrize("name", sorted(
-    n for n, s in METHODS.items() if s.shardable))
+    n for n, s in METHODS.items()
+    if s.shardable and s.family != "sparse"))
 def test_sharded_matches_replicated(name, data, fleet, fleet_sharded):
     Xs = data[2]
     assert_matches(fleet_sharded.predict(Xs, method=name),
@@ -253,9 +260,21 @@ _TRAIN = dict(num_agents=M, admm_iters=3, nested_iters=2, fact_steps=5)
 
 
 def _legacy_theta(name, cfg, lt0, Xp, yp, Xa, ya):
+    from repro.core.sparse import (make_sparse_grad, select_inducing,
+                                   train_fact_sparse)
     if name == "fact":
         return train_fact_gp(lt0, Xp, yp, steps=cfg.fact_steps,
                              lr=cfg.fact_lr)[0]
+    if name == "fact-sparse":
+        Z0 = select_inducing(Xp, cfg.sparse_m, cfg.inducing_init)
+        return train_fact_sparse(lt0, Xp, yp, Z0, steps=cfg.fact_steps,
+                                 lr=cfg.fact_lr, jitter=cfg.jitter)[0]
+    if name == "dec-apx-sparse":
+        thetas, _ = train_dec_apx_gp(
+            lt0, Xp, yp, path_graph(M), rho=cfg.rho, kappa=cfg.kappa,
+            iters=cfg.admm_iters,
+            grad_fn=make_sparse_grad(cfg.sparse_m, jitter=cfg.jitter))
+        return jnp.mean(thetas, axis=0)
     if name == "c":
         return train_c_gp(lt0, Xp, yp, rho=cfg.rho, iters=cfg.admm_iters,
                           nested_iters=cfg.nested_iters,
@@ -291,7 +310,9 @@ def test_trainer_matches_legacy_theta_exactly(name, data):
     Xp, yp, Xs, Xc, yc, Xa, ya = data
     if name == "dec-apx-sharded" and len(jax.devices()) < M:
         pytest.skip(f"dec-apx-sharded needs {M} devices (one per agent)")
-    cfg = FleetConfig(trainer=name, method="rbcm", **_TRAIN)
+    sparse = dict(sparse_m=16) if name in ("fact-sparse",
+                                           "dec-apx-sparse") else {}
+    cfg = FleetConfig(trainer=name, method="rbcm", **_TRAIN, **sparse)
     lt0 = pack([2.0, 0.5], 1.0, 1.0)
     fl = GPFleet(cfg).fit(Xp, yp, key=COMM_KEY, log_theta0=lt0)
     want = _legacy_theta(name, cfg, lt0, Xp, yp, Xa, ya)
@@ -476,6 +497,9 @@ def test_serve_gp_cli_rejects_invalid_combos():
                  ["--method", "grbcm", "--online"],
                  ["--method", "rbcm", "--routed"],
                  ["--method", "made_up"],
-                 ["--trainer", "sgd"]):
+                 ["--trainer", "sgd"],
+                 ["--method", "npae-sparse"],          # needs --sparse-m
+                 ["--trainer", "fact-sparse"],         # needs --sparse-m
+                 ["--method", "npae", "--sparse-m", "16"]):   # dense-only
         with pytest.raises(SystemExit):
             main(argv)

@@ -84,9 +84,14 @@ def assert_close(a, b, tol=1e-6):
 # sharded == replicated, every PoE/BCM-family method
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("method", ShardedEngine.METHODS)
+@pytest.mark.parametrize("method", tuple(
+    m for m in ShardedEngine.METHODS if m != "npae_sparse"))
 def test_sharded_matches_replicated(engines, setup, method):
-    """Full-fleet sharded serving == replicated engine to <= 1e-6 (f64)."""
+    """Full-fleet sharded serving == replicated engine to <= 1e-6 (f64).
+
+    npae_sparse is excluded here because these fixtures carry dense
+    FittedExperts; its sharded == replicated parity gate lives in
+    tests/test_sparse.py with SparseExperts fixtures."""
     _, _, Xs, *_ = setup
     rep, sh = engines
     mr, vr, ir = rep.predict(method, Xs)

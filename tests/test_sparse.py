@@ -1,0 +1,358 @@
+"""Sparse pseudo-representation experts (core.sparse): accuracy-vs-m
+convergence to the exact experts, the Titsias bound inequality, the
+blocked Kmn statistics, the low-rank NPAE factors, the sharded
+`npae_sparse` parity gate, fleet persistence, and the registry's sparse
+capability flags.
+
+Acceptance gates covered here (ISSUE: sparse pseudo-representation
+experts):
+  - sharded npae_sparse == replicated to <= 1e-6 in f64 (by construction
+    it is bit-identical: both assemble the SAME cross-covariance from the
+    SAME ring-allgathered factors and run the SAME aggregation.npae);
+  - sparse fleets save -> load bit-identically through GPFleet;
+  - every MethodSpec declares whether it can serve from SparseExperts,
+    and exactly the dense-NPAE family cannot.
+
+Runs on however many local devices exist (1-device meshes degenerate the
+ring collectives to identity); CI re-runs the file under
+--xla_force_host_platform_device_count=8.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.consensus import path_graph, ring_allgather
+from repro.core.gp import pack, stripe_partition, unpack
+from repro.core.training.factorized import local_nlls
+from repro.core.prediction import (PredictionEngine, ShardedEngine,
+                                   fit_experts, local_moments)
+from repro.core.sparse import (SparseExperts, cross_lowrank,
+                               dec_npae_sparse, fit_sparse_experts,
+                               make_sparse_grad, npae_terms_lowrank,
+                               select_inducing, sparse_moments_cached,
+                               sparse_nll, sparse_nlls, sparse_npae_factors,
+                               sparse_scores, train_fact_sparse)
+from repro.data import gp_sample_field, random_inputs
+from repro.fleet import (METHODS, FleetConfig, GPFleet, get_method,
+                         method_names, trainer_names, validate_config)
+from repro.fleet.registry import SPARSE_TRAINERS
+from repro.kernels.ops import kmn_stats, rbf_gram
+from repro.launch.mesh import make_agent_mesh
+
+TRUE_LT = pack([1.2, 0.3], 1.3, 0.1)
+M = 4
+NI = 96
+NT = 17
+
+
+@pytest.fixture(scope="module")
+def setup():
+    X = random_inputs(jax.random.PRNGKey(0), M * NI)
+    _, y = gp_sample_field(jax.random.PRNGKey(1), X, TRUE_LT)
+    Xp, yp = stripe_partition(X, y, M)
+    Xs = random_inputs(jax.random.PRNGKey(2), NT)
+    return Xp, yp, Xs
+
+
+def sparse_fit(Xp, yp, m, **kw):
+    return fit_sparse_experts(TRUE_LT, Xp, yp, select_inducing(Xp, m), **kw)
+
+
+# ---------------------------------------------------------------- kernels
+
+def test_kmn_stats_matches_direct(setup):
+    Xp, yp, _ = setup
+    ls, sigma_f, _ = unpack(TRUE_LT)
+    Z = select_inducing(Xp, 24)[0]
+    K = rbf_gram(Z, Xp[0], ls, sigma_f)
+    B, b = kmn_stats(Z, Xp[0], yp[0], ls, sigma_f, bn=17)  # ragged blocks
+    np.testing.assert_allclose(B, K @ K.T, rtol=1e-10, atol=1e-10)
+    np.testing.assert_allclose(b, K @ yp[0], rtol=1e-10, atol=1e-10)
+
+
+def test_select_inducing():
+    Xp = random_inputs(jax.random.PRNGKey(3), M * NI).reshape(M, NI, -1)
+    Zs = select_inducing(Xp, 16, "stride")
+    assert Zs.shape == (M, 16, Xp.shape[-1])
+    # m = Ni recovers the full per-agent set; m > Ni clamps
+    np.testing.assert_array_equal(select_inducing(Xp, NI), Xp)
+    np.testing.assert_array_equal(select_inducing(Xp, NI + 50), Xp)
+    Zr = select_inducing(Xp, 16, "random", seed=7)
+    assert Zr.shape == (M, 16, Xp.shape[-1])
+    # random draws without replacement from the agent's own points
+    assert all(any(bool(jnp.all(z == x)) for x in np.asarray(Xp[0]))
+               for z in np.asarray(Zr[0]))
+    with pytest.raises(ValueError, match="inducing_init"):
+        select_inducing(Xp, 16, "kmeans")
+
+
+# ------------------------------------------------- accuracy vs m (exact GP)
+
+def test_recovers_exact_at_m_eq_ni(setup):
+    """m = Ni: the Titsias posterior IS the exact posterior (up to the
+    factorization's conditioning — bounded, not bit-equal)."""
+    Xp, yp, Xs = setup
+    sf = sparse_fit(Xp, yp, NI)
+    mu_s, var_s = sparse_moments_cached(TRUE_LT, sf.Z, sf.Lmm, sf.LS,
+                                        sf.c, Xs)
+    mu_e, var_e = local_moments(TRUE_LT, Xp, yp, Xs)
+    assert float(jnp.max(jnp.abs(mu_s - mu_e))) < 5e-2
+    assert float(jnp.max(jnp.abs(var_s - var_e))) < 1e-3
+    # the Qnn diagonal-correction trace vanishes as m -> Ni
+    assert float(jnp.max(sf.tr_corr)) < 1e-4
+
+
+def test_accuracy_improves_with_m(setup):
+    """Bounded degradation, monotone fidelity: the error against the exact
+    local moments shrinks as m grows, as does tr_corr."""
+    Xp, yp, Xs = setup
+    mu_e, _ = local_moments(TRUE_LT, Xp, yp, Xs)
+    errs, traces = [], []
+    for m in (8, 32, NI):
+        sf = sparse_fit(Xp, yp, m)
+        mu_s, _ = sparse_moments_cached(TRUE_LT, sf.Z, sf.Lmm, sf.LS,
+                                        sf.c, Xs)
+        errs.append(float(jnp.max(jnp.abs(mu_s - mu_e))))
+        traces.append(float(jnp.mean(sf.tr_corr)))
+    assert errs[-1] <= errs[0] and traces[-1] <= traces[0]
+    assert traces[-1] < 1e-4
+
+
+def test_collapsed_bound_dominates_exact_nll(setup):
+    """-ELBO_i >= exact NLL_i for every agent (Titsias inequality), tight
+    at m = Ni."""
+    Xp, yp, _ = setup
+    exact = local_nlls(TRUE_LT, Xp, yp)
+    loose = sparse_nlls(TRUE_LT, select_inducing(Xp, 8), Xp, yp)
+    tight = sparse_nlls(TRUE_LT, select_inducing(Xp, NI), Xp, yp)
+    assert bool(jnp.all(loose >= exact - 1e-6))
+    assert bool(jnp.all(tight >= exact - 1e-6))
+    np.testing.assert_allclose(tight, exact, rtol=1e-3)
+    assert float(jnp.sum(loose - exact)) > float(jnp.sum(tight - exact))
+
+
+def test_sparse_scores_match_moment_gap(setup):
+    """CBNN scores are sigma_f^2 - var_i — same scale as the dense path."""
+    Xp, yp, Xs = setup
+    sf = sparse_fit(Xp, yp, 32)
+    _, var = sparse_moments_cached(TRUE_LT, sf.Z, sf.Lmm, sf.LS, sf.c, Xs)
+    sc = sparse_scores(TRUE_LT, sf.Z, sf.Lmm, sf.LS, Xs)
+    np.testing.assert_allclose(sc, sf.prior_var - var, atol=1e-9)
+
+
+# ------------------------------------------------------------ low-rank NPAE
+
+def test_npae_terms_lowrank_structure(setup):
+    Xp, yp, Xs = setup
+    sf = sparse_fit(Xp, yp, 32)
+    mu, kA, CA = npae_terms_lowrank(TRUE_LT, sf.Z, sf.Lmm, sf.LS, sf.c, Xs)
+    assert mu.shape == (M, NT) and kA.shape == (M, NT)
+    assert CA.shape == (NT, M, M)
+    # diagonal pinned to the exact local kA; matrix symmetric
+    idx = jnp.arange(M)
+    np.testing.assert_allclose(CA[:, idx, idx], kA.T, atol=1e-12)
+    np.testing.assert_allclose(CA, jnp.swapaxes(CA, 1, 2), atol=1e-9)
+
+
+def test_dec_npae_sparse_converges_to_exact_mean(setup):
+    """The sparse NPAE prediction approaches the exact-expert NPAE as m
+    grows (same aggregation core, low-rank cross-covariance)."""
+    Xp, yp, Xs = setup
+    eng = PredictionEngine(fit_experts(TRUE_LT, Xp, yp), path_graph(M),
+                           chunk=8)
+    mu_e, _, _ = eng.predict("npae", Xs)
+    err = []
+    for m in (8, NI):
+        mu, var = dec_npae_sparse(TRUE_LT, Xp, yp, Xs, m)
+        assert bool(jnp.all(jnp.isfinite(mu))) and bool(jnp.all(var > 0))
+        err.append(float(jnp.max(jnp.abs(mu - mu_e))))
+    assert err[-1] <= err[0] and err[-1] < 5e-2
+
+
+# --------------------------------------------------------- engine dispatch
+
+def test_engine_serves_all_dac_methods_from_sparse(setup):
+    """Every sparse-capable method serves from SparseExperts through the
+    replicated engine, matching its own legacy per-call path."""
+    Xp, yp, Xs = setup
+    sf = sparse_fit(Xp, yp, 32)
+    eng = PredictionEngine(sf, path_graph(M), chunk=8, dac_iters=400)
+    for name, spec in METHODS.items():
+        if not spec.sparse or spec.needs_augmented_data:
+            continue
+        mu, var, _ = eng.predict(name, Xs)
+        assert mu.shape == (NT,) and bool(jnp.all(var > 0)), name
+
+
+def test_engine_rejects_dense_npae_from_sparse(setup):
+    Xp, yp, Xs = setup
+    eng = PredictionEngine(sparse_fit(Xp, yp, 16), path_graph(M), chunk=8)
+    with pytest.raises((ValueError, AttributeError)):
+        eng.predict("npae", Xs)
+
+
+# ------------------------------------------------- sharded parity (gate)
+
+def test_ring_allgather_exact():
+    from functools import partial
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_agent_mesh(len(jax.devices()))
+    n = mesh.devices.size
+    w = jnp.arange(n * 3, dtype=jnp.float64).reshape(n, 3)
+
+    # check_rep=False: index-placement via .at[].set defeats the static
+    # replication checker, but the gather IS bit-identical on every device
+    @partial(shard_map, mesh=mesh, in_specs=P("agents"), out_specs=P(),
+             check_rep=False)
+    def gather(wi):
+        return ring_allgather(wi[0], "agents")
+
+    np.testing.assert_array_equal(jax.jit(gather)(w), w)
+
+
+def test_sharded_npae_sparse_matches_replicated(setup):
+    """THE acceptance gate: npae_sparse on the sharded engine equals the
+    replicated engine to <= 1e-6 in f64 (bit-identical by construction:
+    identical allgathered factors, identical assembly, identical solve)."""
+    Xp, yp, Xs = setup
+    sf = sparse_fit(Xp, yp, 32)
+    rep = PredictionEngine(sf, path_graph(M), chunk=8)
+    mu_r, var_r, _ = rep.predict("npae_sparse", Xs)
+    sh = ShardedEngine(sf, make_agent_mesh(M), chunk=8)
+    mu_s, var_s, _ = sh.predict("npae_sparse", Xs)
+    assert float(jnp.max(jnp.abs(mu_s - mu_r))) <= 1e-6
+    assert float(jnp.max(jnp.abs(var_s - var_r))) <= 1e-6
+
+
+def test_sharded_poe_family_from_sparse(setup):
+    """PoE/BCM methods serve sharded from sparse factors too (moment
+    dispatch is representation-agnostic)."""
+    Xp, yp, Xs = setup
+    sf = sparse_fit(Xp, yp, 32)
+    rep = PredictionEngine(sf, path_graph(M), chunk=8, dac_iters=800)
+    sh = ShardedEngine(sf, make_agent_mesh(M), chunk=8, dac_iters=800)
+    for name in ("rbcm", "gpoe"):
+        mu_r, var_r, _ = rep.predict(name, Xs)
+        mu_s, var_s, _ = sh.predict(name, Xs)
+        assert float(jnp.max(jnp.abs(mu_s - mu_r))) <= 1e-6, name
+
+
+def test_sharded_rejects_npae_sparse_on_dense(setup):
+    Xp, yp, _ = setup
+    sh = ShardedEngine(fit_experts(TRUE_LT, Xp, yp), make_agent_mesh(M),
+                       chunk=8)
+    with pytest.raises(ValueError, match="SparseExperts"):
+        sh.predict("npae_sparse", random_inputs(jax.random.PRNGKey(5), 8))
+
+
+# ----------------------------------------------------------- trainers
+
+def test_train_fact_sparse_reduces_bound(setup):
+    Xp, yp, _ = setup
+    lt0 = pack([0.8, 0.8], 1.0, 0.2)
+    Z0 = select_inducing(Xp, 16)
+    lt, Z, vals = train_fact_sparse(lt0, Xp, yp, Z0, steps=40, lr=0.05)
+    assert float(vals[-1]) < float(vals[0])
+    assert Z.shape == Z0.shape and bool(jnp.any(Z != Z0))  # Z moved
+
+
+def test_make_sparse_grad_matches_autodiff(setup):
+    Xp, yp, _ = setup
+    g = make_sparse_grad(16)(TRUE_LT, Xp[0], yp[0])
+    idx = np.round(np.linspace(0, NI - 1, 16)).astype(np.int32)
+    ref = jax.grad(sparse_nll)(TRUE_LT, Xp[0][idx], Xp[0], yp[0])
+    np.testing.assert_allclose(g, ref, rtol=1e-10)
+
+
+# --------------------------------------------------------------- fleet
+
+def _fit_fleet(cfg, Xp, yp):
+    return GPFleet(cfg).fit(Xp, yp, key=jax.random.PRNGKey(3),
+                            log_theta0=TRUE_LT)
+
+
+def test_fleet_sparse_end_to_end(setup, tmp_path):
+    """fit -> predict -> shard -> save -> load round-trip on a sparse
+    fleet: replicated == sharded, loaded == saved bit-identically."""
+    Xp, yp, Xs = setup
+    cfg = FleetConfig(num_agents=M, trainer="fact-sparse",
+                      method="npae_sparse", sparse_m=16, fact_steps=8,
+                      chunk=8)
+    fl = _fit_fleet(cfg, Xp, yp)
+    assert isinstance(fl.fitted, SparseExperts)
+    mu_r, var_r, _ = fl.predict(Xs)
+    sh = _fit_fleet(cfg.replace(sharded=True), Xp, yp)
+    mu_s, var_s, _ = sh.predict(Xs)
+    assert float(jnp.max(jnp.abs(mu_s - mu_r))) <= 1e-6
+    assert float(jnp.max(jnp.abs(var_s - var_r))) <= 1e-6
+
+    fl.save(tmp_path / "ck")
+    fl2 = GPFleet.load(tmp_path / "ck")
+    assert isinstance(fl2.fitted, SparseExperts)
+    for a, b in zip(jax.tree_util.tree_leaves(fl.fitted),
+                    jax.tree_util.tree_leaves(fl2.fitted)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    mu2, _, _ = fl2.predict(Xs)
+    np.testing.assert_array_equal(np.asarray(mu2), np.asarray(mu_r))
+
+
+def test_fleet_dec_apx_sparse_trainer(setup):
+    """The decentralized sparse trainer rides the ADMM loop through the
+    grad_fn hook and serves PoE-family methods from sparse factors."""
+    Xp, yp, Xs = setup
+    cfg = FleetConfig(num_agents=M, trainer="dec-apx-sparse",
+                      method="rbcm", sparse_m=16, admm_iters=4, chunk=8)
+    fl = _fit_fleet(cfg, Xp, yp)
+    assert isinstance(fl.fitted, SparseExperts)
+    mu, var, _ = fl.predict(Xs)
+    assert bool(jnp.all(jnp.isfinite(mu))) and bool(jnp.all(var > 0))
+
+
+def test_fleet_hyphen_method_normalizes():
+    cfg = FleetConfig(num_agents=M, method="npae-sparse", sparse_m=8)
+    assert cfg.method == "npae_sparse"
+    assert get_method("npae-sparse") is get_method("npae_sparse")
+
+
+# ------------------------------------------------------------- registry
+
+def test_registry_sparse_flags_complete():
+    """Every method declares sparse capability; exactly the dense-NPAE
+    family (cross-Gram blocks of raw training points) cannot serve from
+    pseudo-representations."""
+    dense_only = {n for n, s in METHODS.items() if not s.sparse}
+    assert dense_only == {"npae", "npae_star", "nn_npae"}
+    spec = get_method("npae_sparse")
+    assert spec.family == "sparse" and spec.shardable
+    assert not spec.online_safe
+    assert spec.legacy is dec_npae_sparse
+    assert set(SPARSE_TRAINERS) == {"fact-sparse", "dec-apx-sparse"}
+    assert set(SPARSE_TRAINERS) <= set(trainer_names())
+    assert "npae_sparse" in method_names()
+
+
+@pytest.mark.parametrize("cfg_kw, frag", [
+    (dict(trainer="fact-sparse"), "sparse_m"),
+    (dict(method="npae_sparse"), "sparse_m"),
+    (dict(method="npae", sparse_m=16), "dense"),
+    (dict(method="rbcm", sparse_m=16, online=True), "online"),
+    (dict(method="npae", sparse_m=16, cache_cross=True), None),
+])
+def test_validate_config_sparse_rules(cfg_kw, frag):
+    cfg = FleetConfig(num_agents=M, **cfg_kw)
+    with pytest.raises(ValueError) as e:
+        validate_config(cfg)
+    if frag is not None:
+        assert frag in str(e.value)
+
+
+def test_validate_config_accepts_sparse_combos():
+    validate_config(FleetConfig(num_agents=M, trainer="fact-sparse",
+                                method="npae_sparse", sparse_m=16,
+                                sharded=True))
+    validate_config(FleetConfig(num_agents=M, trainer="dec-apx-sparse",
+                                method="grbcm", sparse_m=16))

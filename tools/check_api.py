@@ -46,6 +46,14 @@ FROZEN = {
         "ShardedEngine", "expert_specs", "replicated_specs",
         "shard_experts",
     ],
+    "repro.core.sparse": [
+        "SparseExperts", "select_inducing", "fit_sparse_experts",
+        "sparse_moments_cached", "sparse_scores",
+        "sparse_nll", "sparse_nlls", "train_fact_sparse",
+        "make_sparse_grad",
+        "sparse_npae_factors", "cross_lowrank", "npae_terms_lowrank",
+        "dec_npae_sparse",
+    ],
     "repro.checkpoint": [
         "save_checkpoint", "load_checkpoint", "latest_step", "restore",
     ],
@@ -81,10 +89,11 @@ FROZEN = {
 # saved FleetConfigs and CLI invocations
 FROZEN_REGISTRY = {
     "trainers": ["fact", "c", "apx", "gapx", "dec-c", "dec-apx",
-                 "dec-gapx", "dec-apx-sharded"],
+                 "dec-gapx", "dec-apx-sharded", "fact-sparse",
+                 "dec-apx-sparse"],
     "methods": ["poe", "gpoe", "bcm", "rbcm", "grbcm", "npae", "npae_star",
                 "nn_poe", "nn_gpoe", "nn_bcm", "nn_rbcm", "nn_grbcm",
-                "nn_npae"],
+                "nn_npae", "npae_sparse"],
 }
 
 
